@@ -1,0 +1,61 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU: correctness-
+bearing cost proxies; real speed requires TPU) vs their XLA reference."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels.ops import flash_attention, rms_norm, ssd_scan
+from repro.kernels.ref import flash_attention_ref, rms_norm_ref, ssd_scan_ref
+
+
+def timeit(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main() -> None:
+    rng = np.random.RandomState(0)
+    b, h, kv, s, d = 1, 4, 2, 256, 64
+    q = jnp.asarray(rng.randn(b, h, s, d) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.randn(b, kv, s, d) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.randn(b, kv, s, d) * 0.3, jnp.float32)
+    emit("kernel/flash_attention/interpret",
+         f"{timeit(flash_attention, q, k, v, interpret=True):.0f}",
+         "us_per_call")
+    emit("kernel/flash_attention/xla_ref",
+         f"{timeit(jax.jit(flash_attention_ref), q, k, v):.0f}",
+         "us_per_call")
+
+    bs, ss, hh, p, n = 1, 256, 2, 32, 16
+    x = jnp.asarray(rng.randn(bs, ss, hh, p) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.rand(bs, ss, hh) * 0.5 + 0.01, jnp.float32)
+    a = jnp.asarray(-np.exp(rng.randn(hh) * 0.3), jnp.float32)
+    bm = jnp.asarray(rng.randn(bs, ss, hh, n) * 0.4, jnp.float32)
+    cm = jnp.asarray(rng.randn(bs, ss, hh, n) * 0.4, jnp.float32)
+    emit("kernel/ssd_scan/interpret",
+         f"{timeit(ssd_scan, x, dt, a, bm, cm, chunk=64, interpret=True):.0f}",
+         "us_per_call")
+    emit("kernel/ssd_scan/xla_ref",
+         f"{timeit(jax.jit(lambda *aa: ssd_scan_ref(*aa)[0]), x, dt, a, bm, cm):.0f}",
+         "us_per_call")
+
+    xx = jnp.asarray(rng.randn(8, 512, 1024), jnp.float32)
+    sc = jnp.asarray(rng.randn(1024) * 0.1, jnp.float32)
+    emit("kernel/rms_norm/interpret",
+         f"{timeit(rms_norm, xx, sc, interpret=True):.0f}", "us_per_call")
+    emit("kernel/rms_norm/xla_ref",
+         f"{timeit(jax.jit(rms_norm_ref), xx, sc):.0f}", "us_per_call")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Fig. 5: MILP solve time vs number of jobs and nodes.
+
+Benchmarks both the paper-faithful node-level model and the beyond-paper
+aggregate reformulation; 10 repetitions with random initial conditions, as
+in §3.6.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import FULL, emit
+from repro.core.milp import AllocationProblem, TrainerSpec, solve_node_milp
+from repro.core.milp_fast import solve_fast_milp
+from repro.core.scaling import TAB2, tab2_curve
+
+
+def make_problem(n_nodes: int, n_jobs: int, seed: int) -> AllocationProblem:
+    rng = np.random.RandomState(seed)
+    names = list(TAB2)
+    trainers, current, used = [], {}, set()
+    for j in range(n_jobs):
+        curve = tab2_curve(names[j % len(names)])
+        n_max = int(rng.randint(8, min(64, max(9, n_nodes // 2))))
+        pts, vals = curve.breakpoints(1, n_max)
+        trainers.append(TrainerSpec(id=j, n_min=1, n_max=n_max, r_up=20.0,
+                                    r_dw=5.0, points=tuple(pts),
+                                    values=tuple(vals)))
+        avail = [x for x in range(n_nodes) if x not in used]
+        k = int(rng.randint(0, min(n_max, len(avail)) + 1))
+        cur = [int(c) for c in rng.choice(avail, size=k, replace=False)]
+        current[j] = cur
+        used.update(cur)
+    return AllocationProblem(nodes=list(range(n_nodes)), trainers=trainers,
+                             current=current, t_fwd=120.0)
+
+
+def main(reps: int = 10) -> None:
+    node_sizes = [50, 100, 200, 400, 800] if FULL else [50, 100, 200]
+    job_counts = [5, 10] if not FULL else [5, 10, 20]
+    for n in node_sizes:
+        for j in job_counts:
+            for mode, solve in (("fast", solve_fast_milp),
+                                ("node", solve_node_milp)):
+                if mode == "node" and n > 100:
+                    continue  # paper-scale node model: see EXPERIMENTS.md
+                times = []
+                for rep in range(reps):
+                    prob = make_problem(n, j, seed=rep)
+                    r = solve(prob, time_limit=60)
+                    times.append(r.wall_time)
+                emit(f"milp_solve/{mode}/N{n}/J{j}",
+                     f"{np.mean(times)*1e6:.0f}",
+                     f"us_per_solve reps={reps}")
+
+
+if __name__ == "__main__":
+    main()

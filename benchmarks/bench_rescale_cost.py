@@ -1,0 +1,22 @@
+"""Paper Fig. 16: efficiency vs artificially inflated rescale costs
+(2-10x) — expected sub-linear degradation."""
+from __future__ import annotations
+
+from benchmarks.common import FULL, efficiency, emit, hpo_jobs, trace
+from repro.core import MILPAllocator
+
+
+def main() -> None:
+    hours = 24.0 if FULL else 12.0
+    ev = trace(n_nodes=160, hours=hours, seed=77)
+    horizon = hours * 3600.0
+    scales = [1, 2, 4, 10] if FULL else [1, 4, 10]
+    for s in scales:
+        rep, u = efficiency(ev, lambda s=s: hpo_jobs(8, r_scale=float(s)),
+                            horizon, MILPAllocator("fast"))
+        emit(f"rescale_cost/{s}x/efficiency_u", f"{u:.3f}",
+             "fig16: sublinear degradation")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Fig. 15: HPO efficiency per DNN scalability class — every Tab-2
+DNN gets an HPO run on the same trace."""
+from __future__ import annotations
+
+from benchmarks.common import FULL, efficiency, emit, hpo_jobs, trace
+from repro.core import MILPAllocator
+from repro.core.scaling import TAB2
+
+
+def main() -> None:
+    hours = 24.0 if FULL else 12.0
+    ev = trace(n_nodes=160, hours=hours, seed=66)
+    horizon = hours * 3600.0
+    for dnn in TAB2:
+        rep, u = efficiency(ev, lambda d=dnn: hpo_jobs(8, dnn=d), horizon,
+                            MILPAllocator("fast"))
+        emit(f"scalability/{dnn}/efficiency_u", f"{u:.3f}",
+             "fig15: U grows with DNN scalability")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Tab. 2 analog for the assigned JAX model zoo: measured single-node
+samples/s of each reduced architecture (real train steps on CPU) plus the
+synthetic weak-scaling curves fed to the MILP."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FULL, emit
+from repro.configs import ARCHS, get_arch
+from repro.core.scaling import model_zoo_curves
+from repro.models import build_model
+from repro.optim import AdamW
+
+
+def measure_arch(arch: str, steps: int = 3, b: int = 2, s: int = 64) -> float:
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.key(0))
+    opt = AdamW()
+    state = opt.init(params)
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)),
+                                   jnp.int32)}
+    batch["labels"] = batch["tokens"]
+    if cfg.frontend == "vision":
+        nt = cfg.n_frontend_tokens
+        batch = {"tokens": batch["tokens"][:, : s - nt],
+                 "labels": batch["labels"][:, : s - nt],
+                 "frontend_embeds": jnp.zeros((b, nt, cfg.d_model))}
+    elif cfg.is_encdec:
+        batch["frames"] = jnp.zeros((b, s // 4, cfg.encoder.d_model))
+
+    @jax.jit
+    def step(p, st):
+        loss, g = jax.value_and_grad(lambda pp: model.loss(pp, batch))(p)
+        p2, st2 = opt.update(g, st, p)
+        return p2, st2, loss
+
+    params, state, _ = step(params, state)  # compile
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        params, state, loss = step(params, state)
+    jax.block_until_ready(loss)
+    dt = (time.perf_counter() - t0) / steps
+    return b / dt
+
+
+def main() -> None:
+    for arch in ARCHS:
+        thr = measure_arch(arch)
+        emit(f"throughput/{arch}-smoke/samples_per_s", f"{thr:.2f}",
+             "tab2-analog measured 1-node CPU")
+    for name, curve in model_zoo_curves().items():
+        vals = ",".join(f"{curve(n)/1000:.1f}" for n in (1, 2, 4, 8, 16, 32))
+        emit(f"curve/{name}/kilo_samples_per_s@1-32", f'"{vals}"',
+             "synthetic weak-scaling curve (MILP input)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Shared benchmark utilities.
+
+Every benchmark prints ``name,value,derived`` CSV rows (one per measured
+quantity) so ``benchmarks.run`` output is machine-parsable.  Scales are
+reduced vs the paper's week-long replays (CPU container); set
+``BENCH_FULL=1`` for the larger variants.
+"""
+from __future__ import annotations
+
+import os
+import time
+from functools import lru_cache
+from typing import List
+
+from repro.core import (
+    MILPAllocator,
+    Simulator,
+    TrainerJob,
+    eq_nodes,
+    fragments_to_events,
+    generate_summit_like,
+    static_outcome,
+    tab2_curve,
+)
+from repro.core.scaling import TAB2
+
+FULL = bool(int(os.environ.get("BENCH_FULL", "0")))
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    print(f"{name},{value},{derived}", flush=True)
+
+
+@lru_cache(maxsize=8)
+def trace(n_nodes: int = 160, hours: float = 24.0, seed: int = 21):
+    frags = generate_summit_like(n_nodes=n_nodes, duration=hours * 3600.0,
+                                 seed=seed)
+    return tuple(fragments_to_events(frags))
+
+
+def hpo_jobs(n: int = 8, dnn: str = "ShuffleNet", work: float = 1e12,
+             n_max: int = 24, metric: str = "throughput",
+             r_scale: float = 1.0) -> List[TrainerJob]:
+    curve = tab2_curve(dnn)
+    return [TrainerJob(id=i, curve=curve, work=work, n_min=1, n_max=n_max,
+                       r_up=20.0 * r_scale, r_dw=5.0 * r_scale,
+                       metric=metric) for i in range(n)]
+
+
+def diverse_jobs(n: int = 21, work: float = 2e8, metric: str = "throughput",
+                 arrival_rate: float = 1 / 1800.0, seed: int = 0
+                 ) -> List[TrainerJob]:
+    """Paper §5.2: Trainer DNNs cycled from Tab 2, Poisson arrivals."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    names = list(TAB2)
+    jobs, t = [], 0.0
+    for i in range(n):
+        name = names[i % len(names)]
+        t += float(rng.exponential(1.0 / arrival_rate))
+        jobs.append(TrainerJob(id=i, curve=tab2_curve(name), work=work,
+                               n_min=1, n_max=24, r_up=20.0, r_dw=5.0,
+                               arrival=t, metric=metric))
+    return jobs
+
+
+def efficiency(events, jobs_fn, horizon: float, allocator=None,
+               t_fwd: float = 120.0, pj_max: int = 10):
+    allocator = allocator or MILPAllocator("fast")
+    rep = Simulator(list(events), jobs_fn(), allocator, t_fwd=t_fwd,
+                    pj_max=pj_max, horizon=horizon).run()
+    n_eq = max(1, round(eq_nodes(list(events), 0.0, horizon)))
+    a_s = static_outcome(jobs_fn(), n_eq, horizon, MILPAllocator("fast"),
+                         pj_max=pj_max)
+    return rep, (rep.total_samples / a_s if a_s > 0 else 0.0)

@@ -1,0 +1,42 @@
+"""Benchmark dispatcher: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [section ...]``
+prints ``name,value,derived`` CSV rows.  Set BENCH_FULL=1 for the
+paper-scale variants.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+SECTIONS = [
+    ("milp", "Fig 5: MILP solve time", "benchmarks.bench_milp"),
+    ("tfwd", "Figs 7-9: forward-looking time", "benchmarks.bench_tfwd"),
+    ("week", "Figs 10-11: weekly efficiency MILP vs heuristic",
+     "benchmarks.bench_week"),
+    ("objective", "Figs 12-13 + Tabs 3-4: objective metrics",
+     "benchmarks.bench_objective"),
+    ("pjmax", "Fig 14: max parallel Trainers", "benchmarks.bench_pjmax"),
+    ("scalability", "Fig 15: per-DNN scalability", "benchmarks.bench_scalability"),
+    ("rescale_cost", "Fig 16: rescale-cost sweep", "benchmarks.bench_rescale_cost"),
+    ("throughput", "Tab 2 analog: model-zoo throughput", "benchmarks.bench_throughput"),
+    ("kernels", "Pallas kernel micro-bench", "benchmarks.bench_kernels"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    t_start = time.time()
+    for key, desc, mod_name in SECTIONS:
+        if want and key not in want:
+            continue
+        print(f"# === {key}: {desc} ===", flush=True)
+        t0 = time.time()
+        mod = __import__(mod_name, fromlist=["main"])
+        mod.main()
+        print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+    print(f"# all benchmarks done in {time.time()-t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

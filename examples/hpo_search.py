@@ -1,0 +1,45 @@
+"""HPO scenario (paper §5.1): one user runs many trials of the same DNN;
+BFTrainer maximizes aggregate throughput.  Sweeps the forward-looking
+time T_fwd and reports the efficiency/ROI trade-off (paper Figs 7-9).
+
+Run:  PYTHONPATH=src python examples/hpo_search.py
+"""
+import numpy as np
+
+from repro.core import MILPAllocator, Simulator, TrainerJob, eq_nodes, \
+    fragments_to_events, generate_summit_like, static_outcome, tab2_curve
+
+HOURS = 18.0
+
+
+def trials(n=10):
+    curve = tab2_curve("ShuffleNet")
+    return [TrainerJob(id=i, curve=curve, work=5e8, n_min=1, n_max=16,
+                       r_up=20.0, r_dw=5.0) for i in range(n)]
+
+
+def main() -> None:
+    frags = generate_summit_like(n_nodes=192, duration=HOURS * 3600, seed=9)
+    events = fragments_to_events(frags)
+    n_eq = round(eq_nodes(events, 0, HOURS * 3600))
+    a_s = static_outcome(trials(), n_eq, HOURS * 3600, MILPAllocator("fast"))
+
+    print(f"{'T_fwd':>6} {'U':>7} {'rescale(samples/ev)':>20} {'ROI':>8} "
+          f"{'trials done':>12}")
+    for t_fwd in (10, 30, 60, 120, 300, 600):
+        jobs = trials()
+        rep = Simulator(events, jobs, MILPAllocator("fast"),
+                        t_fwd=float(t_fwd), horizon=HOURS * 3600).run()
+        inv = [r.rescale_cost_samples for r in rep.event_records
+               if r.rescale_cost_samples > 0]
+        ret = [r.outcome_until_next for r in rep.event_records
+               if r.rescale_cost_samples > 0]
+        roi = np.sum(ret) / np.sum(inv) if inv else float("inf")
+        done = sum(1 for j in jobs if j.finished_at is not None)
+        print(f"{t_fwd:>6} {rep.total_samples/a_s:>7.1%} "
+              f"{rep.rescale_cost_samples/max(rep.events_processed,1):>20.2e} "
+              f"{roi:>8.1f} {done:>12}")
+
+
+if __name__ == "__main__":
+    main()

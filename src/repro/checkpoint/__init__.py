@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import Snapshot, load_checkpoint, save_checkpoint
+
+__all__ = ["Snapshot", "load_checkpoint", "save_checkpoint"]

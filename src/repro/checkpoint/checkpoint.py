@@ -1,0 +1,71 @@
+"""Checkpointing: durable (npz on disk) and in-memory snapshots.
+
+Elastic rescale in BFTrainer does NOT round-trip through durable storage
+(paper: "without requiring a restart or resuming from checkpoints saved to
+durable storage") — ``Snapshot`` keeps host copies of params/opt state that
+the new mesh re-shards from.  Durable checkpoints cover Trainer preemption
+to zero nodes and job restarts.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[jax.tree_util.keystr(path)] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Pytree, meta: Optional[Dict] = None) -> None:
+    base = path[:-4] if path.endswith(".npz") else path
+    os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(base + ".npz", **flat)
+    if meta is not None:
+        with open(base + ".meta.json", "w") as f:
+            json.dump(meta, f)
+
+
+def load_checkpoint(path: str, like: Pytree) -> Tuple[Pytree, Optional[Dict]]:
+    """Restore into the structure of ``like`` (a pytree or abstract tree)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    leaves = [data[jax.tree_util.keystr(p)] for p, _ in leaves_paths]
+    meta = None
+    meta_path = path[: -len(".npz")] + ".meta.json"
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+@dataclass
+class Snapshot:
+    """In-memory host snapshot used across elastic rescales."""
+
+    tree: Pytree
+    step: int = 0
+
+    @classmethod
+    def take(cls, tree: Pytree, step: int = 0) -> "Snapshot":
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        return cls(tree=host, step=step)
+
+    def restore(self, shardings: Optional[Pytree] = None) -> Pytree:
+        if shardings is None:
+            return jax.tree.map(lambda x: jax.numpy.asarray(x), self.tree)
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), self.tree, shardings)

@@ -1,0 +1,26 @@
+from repro.configs.base import (
+    ArchConfig,
+    EncoderConfig,
+    InputShape,
+    LayerSpec,
+    MLAConfig,
+    MoEConfig,
+    SHAPES,
+    SSMConfig,
+)
+from repro.configs.registry import ARCHS, applicable_shapes, get_arch, get_shape
+
+__all__ = [
+    "ArchConfig",
+    "EncoderConfig",
+    "InputShape",
+    "LayerSpec",
+    "MLAConfig",
+    "MoEConfig",
+    "SHAPES",
+    "SSMConfig",
+    "ARCHS",
+    "applicable_shapes",
+    "get_arch",
+    "get_shape",
+]

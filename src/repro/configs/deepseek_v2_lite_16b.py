@@ -1,0 +1,34 @@
+"""DeepSeek-V2-Lite 16B — MoE with multi-head latent attention (MLA).
+[arXiv:2405.04434]
+
+MLA with kv_lora_rank=512; 2 shared + 64 routed experts, top-6
+(d_expert=1408). First layer uses a dense MLP (as in the released model);
+remaining 26 layers are MoE.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MLAConfig, MoEConfig
+
+_PATTERN = (LayerSpec(mixer="attn", mlp="dense"),) + tuple(
+    LayerSpec(mixer="attn", mlp="moe") for _ in range(26)
+)
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    source="arXiv:2405.04434 (DeepSeek-V2)",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,              # MLA: all heads share one latent KV
+    head_dim=192,               # qk_nope (128) + qk_rope (64)
+    d_ff=1408,                  # routed-expert hidden size (assignment)
+    dense_d_ff=10944,           # dense first-layer MLP hidden size
+    vocab_size=102400,
+    layer_pattern=_PATTERN,
+    mlp_activation="swiglu",
+    moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408, n_shared=2),
+    mla=MLAConfig(
+        kv_lora_rank=512, q_lora_rank=0,
+        qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128,
+    ),
+    supports_long_context=False,  # MLA is still full-context attention
+)

@@ -1,0 +1,32 @@
+"""Gemma-2 27B — dense decoder, alternating local(SWA)/global attention,
+logit soft-capping. [arXiv:2408.00118]
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="gemma2-27b",
+    family="dense",
+    source="arXiv:2408.00118 (Gemma 2)",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256000,
+    layer_pattern=(
+        LayerSpec(mixer="swa", mlp="dense"),
+        LayerSpec(mixer="attn", mlp="dense"),
+    ),
+    mlp_activation="geglu",
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    sliding_window=4096,
+    tie_embeddings=True,
+    scale_embeddings=True,
+    post_norms=True,
+    query_scale=(4608 / 32) ** -0.5,   # query_pre_attn_scalar = d_model/n_heads
+    # long-context serving mode caps global-layer KV to the window
+    # (documented deviation, DESIGN.md long_500k table).
+    supports_long_context=True,
+)

@@ -1,0 +1,22 @@
+"""Granite-3.0 MoE 3B (800M active) — 40 experts, top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base family card]
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    source="hf:ibm-granite/granite-3.0-3b-a800m-base (assignment cites the "
+           "1b-a400m card; 3b-a800m settings per assignment row)",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,                   # expert hidden size
+    vocab_size=49155,
+    layer_pattern=(LayerSpec(mixer="attn", mlp="moe"),),
+    mlp_activation="swiglu",
+    moe=MoEConfig(n_experts=40, top_k=8, d_expert=512),
+    supports_long_context=False,
+)

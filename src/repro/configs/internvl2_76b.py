@@ -1,0 +1,27 @@
+"""InternVL2-76B — VLM; InternViT vision encoder + Llama-3-70B language
+backbone. [arXiv:2404.16821]
+
+Per the assignment the vision frontend (InternViT + MLP projector) is a
+STUB: ``input_specs()`` provides precomputed patch embeddings; we implement
+the 80-layer language decoder that consumes them.
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="internvl2-76b",
+    family="vlm",
+    source="arXiv:2404.16821 (InternVL 1.5/2); LLM backbone Llama-3-70B",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    layer_pattern=(LayerSpec(mixer="attn", mlp="dense"),),
+    mlp_activation="swiglu",
+    rope_theta=500000.0,
+    frontend="vision",
+    n_frontend_tokens=256,      # one image tile -> 256 patch embeddings
+    supports_long_context=False,
+)

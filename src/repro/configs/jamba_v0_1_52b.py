@@ -1,0 +1,38 @@
+"""Jamba-v0.1 52B — hybrid Mamba+attention 1:7 interleave with MoE.
+[arXiv:2403.19887]
+
+Structure: 8-layer repeating block; one attention layer per block (1:7
+attention:mamba ratio), MoE MLP on every second layer (16 experts, top-2).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MoEConfig, SSMConfig
+
+# 8-layer block: attention at in-block index 4 (as in the released model),
+# MoE on odd in-block indices -> 16 of 32 layers are MoE.
+_PATTERN = tuple(
+    LayerSpec(
+        mixer="attn" if i == 4 else "mamba",
+        mlp="moe" if i % 2 == 1 else "dense",
+    )
+    for i in range(8)
+)
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    source="arXiv:2403.19887 (Jamba: A Hybrid Transformer-Mamba Language Model)",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    layer_pattern=_PATTERN,
+    mlp_activation="swiglu",
+    moe=MoEConfig(n_experts=16, top_k=2, d_expert=14336),
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1),
+    # Hybrid: mamba layers are O(1)-state; the 4 attention layers use a
+    # bounded sliding-window KV in long-context serving mode (DESIGN.md).
+    sliding_window=4096,
+    supports_long_context=True,
+)

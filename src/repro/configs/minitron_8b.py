@@ -1,0 +1,19 @@
+"""Minitron-8B — pruned Nemotron-4 dense decoder. [arXiv:2407.14679]"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="minitron-8b",
+    family="dense",
+    source="arXiv:2407.14679 (Compact Language Models via Pruning and "
+           "Knowledge Distillation)",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=256000,
+    layer_pattern=(LayerSpec(mixer="attn", mlp="dense"),),
+    mlp_activation="swiglu",  # squared-relu in nemotron; swiglu used per zoo
+    supports_long_context=False,
+)

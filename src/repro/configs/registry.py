@@ -1,0 +1,52 @@
+"""Registry of assigned architectures (``--arch <id>``) and input shapes."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, InputShape, SHAPES
+from repro.configs.yi_6b import CONFIG as _yi_6b
+from repro.configs.jamba_v0_1_52b import CONFIG as _jamba
+from repro.configs.seamless_m4t_medium import CONFIG as _seamless
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _deepseek
+from repro.configs.minitron_8b import CONFIG as _minitron
+from repro.configs.gemma2_27b import CONFIG as _gemma2_27b
+from repro.configs.internvl2_76b import CONFIG as _internvl2
+from repro.configs.granite_moe_3b_a800m import CONFIG as _granite
+from repro.configs.mamba2_2_7b import CONFIG as _mamba2
+from repro.configs.gemma_2b import CONFIG as _gemma_2b
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        _yi_6b,
+        _jamba,
+        _seamless,
+        _deepseek,
+        _minitron,
+        _gemma2_27b,
+        _internvl2,
+        _granite,
+        _mamba2,
+        _gemma_2b,
+    ]
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name.endswith("-smoke"):
+        return get_arch(name[: -len("-smoke")]).reduced()
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def applicable_shapes(arch: ArchConfig) -> list[str]:
+    """Shapes exercised for this arch (long_500k only if honest — DESIGN.md)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch.supports_long_context:
+        out.append("long_500k")
+    return out

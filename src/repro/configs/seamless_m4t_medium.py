@@ -1,0 +1,29 @@
+"""SeamlessM4T-medium — encoder-decoder multimodal (speech/text) backbone.
+[arXiv:2308.11596]
+
+Per the assignment the modality frontend (mel-spectrogram + conv feature
+extractor) is a STUB: ``input_specs()`` provides precomputed frame
+embeddings; we implement the transformer encoder-decoder that consumes them.
+"""
+from repro.configs.base import ArchConfig, EncoderConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    source="arXiv:2308.11596 (SeamlessM4T)",
+    n_layers=12,                 # decoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    layer_pattern=(LayerSpec(mixer="attn", mlp="dense"),),
+    mlp_activation="swiglu",
+    encoder=EncoderConfig(
+        n_layers=12, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096,
+        head_dim=64,
+    ),
+    frontend="audio",
+    supports_long_context=False,  # full enc-dec attention
+)

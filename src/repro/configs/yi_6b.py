@@ -1,0 +1,19 @@
+"""Yi-6B — llama-architecture dense decoder with GQA. [arXiv:2403.04652]"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="yi-6b",
+    family="dense",
+    source="arXiv:2403.04652 (Yi: Open Foundation Models by 01.AI)",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64000,
+    layer_pattern=(LayerSpec(mixer="attn", mlp="dense"),),
+    mlp_activation="swiglu",
+    rope_theta=5_000_000.0,
+    supports_long_context=False,  # pure full attention -> long_500k skipped
+)

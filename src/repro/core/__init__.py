@@ -1,0 +1,24 @@
+# The paper's primary contribution: MILP-based elastic resource allocation
+# for DNN Trainers on unfillable idle nodes, plus the event-driven
+# BFTrainer scheduler/simulator around it.
+from repro.core.allocator import Allocator, EqualShareAllocator, MILPAllocator
+from repro.core.events import Fragment, PoolEvent, fragments_to_events, pool_sizes
+from repro.core.metrics import Efficiency, ROI, eq_nodes, resource_integral
+from repro.core.milp import AllocationProblem, AllocationResult, TrainerSpec, solve_node_milp
+from repro.core.milp_fast import reconstruct_map, solve_fast_milp
+from repro.core.scaling import ScalingCurve, all_tab2_curves, amdahl_curve, model_zoo_curves, tab2_curve
+from repro.core.simulator import SimReport, Simulator, TrainerJob, static_outcome
+from repro.core.tfwd import TfwdEstimator
+from repro.core.trace import TraceStats, clip_fragments, generate_summit_like, load_trace_csv, trace_stats
+
+__all__ = [
+    "Allocator", "EqualShareAllocator", "MILPAllocator",
+    "Fragment", "PoolEvent", "fragments_to_events", "pool_sizes",
+    "Efficiency", "ROI", "eq_nodes", "resource_integral",
+    "AllocationProblem", "AllocationResult", "TrainerSpec", "solve_node_milp",
+    "reconstruct_map", "solve_fast_milp",
+    "ScalingCurve", "all_tab2_curves", "amdahl_curve", "model_zoo_curves", "tab2_curve",
+    "SimReport", "Simulator", "TrainerJob", "static_outcome",
+    "TfwdEstimator",
+    "TraceStats", "clip_fragments", "generate_summit_like", "load_trace_csv", "trace_stats",
+]

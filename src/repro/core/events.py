@@ -1,0 +1,52 @@
+"""Idle-node pool events and fragments (paper §2.1 terminology).
+
+A *fragment* is a period during which one node is idle; an *event* is a
+time at which the idle pool N changes (nodes join and/or leave; multiple
+simultaneous changes are one event).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+
+@dataclass(frozen=True)
+class Fragment:
+    node: int
+    start: float
+    end: float
+
+    @property
+    def length(self) -> float:
+        return self.end - self.start
+
+
+@dataclass(frozen=True)
+class PoolEvent:
+    time: float
+    joined: Tuple[int, ...] = ()
+    left: Tuple[int, ...] = ()
+
+
+def fragments_to_events(fragments: Sequence[Fragment]) -> List[PoolEvent]:
+    """Convert fragments into a merged, time-sorted event stream."""
+    changes: Dict[float, Tuple[List[int], List[int]]] = {}
+    for f in fragments:
+        changes.setdefault(f.start, ([], []))[0].append(f.node)
+        changes.setdefault(f.end, ([], []))[1].append(f.node)
+    out = []
+    for t in sorted(changes):
+        joined, left = changes[t]
+        out.append(PoolEvent(time=t, joined=tuple(sorted(joined)),
+                             left=tuple(sorted(left))))
+    return out
+
+
+def pool_sizes(events: Sequence[PoolEvent]) -> List[Tuple[float, int]]:
+    """(time, |N|) step function after each event."""
+    size = 0
+    out = []
+    for e in events:
+        size += len(e.joined) - len(e.left)
+        out.append((e.time, size))
+    return out

@@ -1,0 +1,126 @@
+"""Tiny sparse MILP assembly layer over scipy.optimize.milp (HiGHS).
+
+The paper solves its model with Gurobi; HiGHS is an exact branch-and-cut
+MILP solver, so optimal objective values are solver-independent.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.optimize import Bounds, LinearConstraint, milp
+
+
+@dataclass
+class MILPBuilder:
+    n_vars: int = 0
+    names: List[str] = field(default_factory=list)
+    integrality: List[int] = field(default_factory=list)
+    lb: List[float] = field(default_factory=list)
+    ub: List[float] = field(default_factory=list)
+    obj: Dict[int, float] = field(default_factory=dict)
+    rows: List[Dict[int, float]] = field(default_factory=list)
+    row_lb: List[float] = field(default_factory=list)
+    row_ub: List[float] = field(default_factory=list)
+
+    def add_var(self, name: str, *, binary: bool = False, integer: bool = False,
+                lb: float = 0.0, ub: float = 1.0) -> int:
+        idx = self.n_vars
+        self.n_vars += 1
+        self.names.append(name)
+        self.integrality.append(1 if (binary or integer) else 0)
+        self.lb.append(0.0 if binary else lb)
+        self.ub.append(1.0 if binary else ub)
+        return idx
+
+    def add_vars(self, prefix: str, n: int, **kw) -> List[int]:
+        return [self.add_var(f"{prefix}[{i}]", **kw) for i in range(n)]
+
+    def set_obj(self, idx: int, coef: float) -> None:
+        self.obj[idx] = self.obj.get(idx, 0.0) + coef
+
+    def add_row(self, coeffs: Dict[int, float], lb: float = -np.inf,
+                ub: float = np.inf) -> None:
+        self.rows.append(coeffs)
+        self.row_lb.append(lb)
+        self.row_ub.append(ub)
+
+    # ------------------------------------------------------------------
+
+    def solve(self, *, maximize: bool = True, time_limit: float = 30.0,
+              mip_rel_gap: float = 1e-6):
+        c = np.zeros(self.n_vars)
+        for i, v in self.obj.items():
+            c[i] = -v if maximize else v
+
+        data, ri, ci = [], [], []
+        for r, row in enumerate(self.rows):
+            for i, v in row.items():
+                ri.append(r)
+                ci.append(i)
+                data.append(v)
+        a = sp.csr_matrix((data, (ri, ci)),
+                          shape=(len(self.rows), self.n_vars))
+        cons = LinearConstraint(a, np.array(self.row_lb), np.array(self.row_ub))
+        t0 = time.perf_counter()
+        res = milp(
+            c,
+            constraints=[cons],
+            integrality=np.array(self.integrality),
+            bounds=Bounds(np.array(self.lb), np.array(self.ub)),
+            options={"time_limit": time_limit, "mip_rel_gap": mip_rel_gap,
+                     "disp": False},
+        )
+        wall = time.perf_counter() - t0
+        value = (-res.fun if maximize else res.fun) if res.x is not None else None
+        return MILPResult(status=int(res.status), success=bool(res.success),
+                          x=res.x, objective=value, wall_time=wall,
+                          message=str(res.message))
+
+
+@dataclass
+class MILPResult:
+    status: int
+    success: bool
+    x: Optional[np.ndarray]
+    objective: Optional[float]
+    wall_time: float
+    message: str = ""
+
+
+def sos2_block(b: MILPBuilder, prefix: str, points: List[int],
+               values: List[float], n_var_coeffs: Dict[int, float]):
+    """Append an SOS2 piecewise-linear block.
+
+    Encodes  value = O(n)  where n = sum(n_var_coeffs) and O interpolates
+    (points, values).  SOS2 (<=2 adjacent nonzero weights) is enforced with
+    segment-selection binaries — the standard λ-formulation, equivalent to
+    native solver SOS2 sets (which scipy's HiGHS interface lacks).
+
+    Returns (w_indices, value_coeffs: dict var->coef contributing O(n)).
+    """
+    d = len(points)
+    w = b.add_vars(f"w_{prefix}", d, lb=0.0, ub=1.0)
+    seg = b.add_vars(f"seg_{prefix}", d - 1, binary=True)
+    # sum w = 1
+    b.add_row({i: 1.0 for i in w}, lb=1.0, ub=1.0)
+    # sum seg = 1
+    b.add_row({i: 1.0 for i in seg}, lb=1.0, ub=1.0)
+    # w_i <= seg_{i-1} + seg_i  (adjacency)
+    for i in range(d):
+        row = {w[i]: 1.0}
+        if i > 0:
+            row[seg[i - 1]] = -1.0
+        if i < d - 1:
+            row[seg[i]] = -1.0
+        b.add_row(row, ub=0.0)
+    # sum w_i * points_i == n
+    row = {w[i]: float(points[i]) for i in range(d)}
+    for var, coef in n_var_coeffs.items():
+        row[var] = row.get(var, 0.0) - coef
+    b.add_row(row, lb=0.0, ub=0.0)
+    value_coeffs = {w[i]: float(values[i]) for i in range(d)}
+    return w, value_coeffs

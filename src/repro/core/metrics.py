@@ -1,0 +1,49 @@
+"""Evaluation metrics (paper §4.1): resource integral (Eqn 17), eq-nodes
+(Eqn 18), utilization efficiency U = A_e / A_s, and ROI (Fig 8)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+from repro.core.events import PoolEvent, pool_sizes
+
+
+def resource_integral(events: Sequence[PoolEvent], t0: float,
+                      t1: float) -> float:
+    """Node-hours of idle resource between t0 and t1 (Eqn 17)."""
+    sizes = pool_sizes(events)
+    total = 0.0
+    for i, (t, n) in enumerate(sizes):
+        seg_start = max(t, t0)
+        seg_end = min(sizes[i + 1][0] if i + 1 < len(sizes) else t1, t1)
+        if seg_end > seg_start:
+            total += n * (seg_end - seg_start)
+    return total / 3600.0
+
+
+def eq_nodes(events: Sequence[PoolEvent], t0: float, t1: float) -> float:
+    """Equivalent static node count delivering the same node-time (Eqn 18)."""
+    if t1 <= t0:
+        return 0.0
+    return resource_integral(events, t0, t1) * 3600.0 / (t1 - t0)
+
+
+@dataclass
+class Efficiency:
+    a_e: float          # outcome with BFTrainer (samples)
+    a_s: float          # outcome on static eq-nodes (samples)
+
+    @property
+    def u(self) -> float:
+        return self.a_e / self.a_s if self.a_s > 0 else 0.0
+
+
+@dataclass
+class ROI:
+    """Per-event return on rescaling investment (paper Fig 8)."""
+    investment: float   # rescale cost, samples
+    ret: float          # outcome until next event, samples
+
+    @property
+    def value(self) -> float:
+        return self.ret / self.investment if self.investment > 0 else float("inf")

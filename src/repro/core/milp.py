@@ -1,0 +1,188 @@
+"""The paper's MILP resource-allocation model (§3), node-level (faithful).
+
+Decision variable ``x_jn ∈ {0,1}``: node n allocated to Trainer j.  On each
+event the solver transfers the current map ``c_jn`` into ``x_jn`` to
+maximize  Σ_j T_fwd·O_j(N_j) − Σ_j O_j(C_j)·R_j   (Eqn 16)
+subject to job-size (Eqn 4), node-exclusivity (Eqn 5) and no-migration
+(Eqns 6–10) constraints, with O_j piecewise-linearized via SOS2 (Eqn 11–12)
+and rescale costs via indicator binaries (Eqn 13–15).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.lp import MILPBuilder, sos2_block
+
+
+@dataclass(frozen=True)
+class TrainerSpec:
+    """Static description of one Trainer as seen by the allocator."""
+
+    id: int
+    n_min: int
+    n_max: int
+    r_up: float                 # scale-up cost, seconds (R_j^up)
+    r_dw: float                 # scale-down cost, seconds (R_j^dw)
+    points: Tuple[int, ...]     # SOS2 breakpoints (must include 0)
+    values: Tuple[float, ...]   # objective metric at each breakpoint
+
+    def value_at(self, n: int) -> float:
+        """Interpolated objective metric at integer n."""
+        pts, vals = self.points, self.values
+        if n <= pts[0]:
+            return vals[0]
+        if n >= pts[-1]:
+            return vals[-1]
+        for i in range(len(pts) - 1):
+            if pts[i] <= n <= pts[i + 1]:
+                t = (n - pts[i]) / (pts[i + 1] - pts[i])
+                return vals[i] + t * (vals[i + 1] - vals[i])
+        return vals[-1]
+
+
+@dataclass
+class AllocationProblem:
+    nodes: List[int]                       # idle node ids (set N)
+    trainers: List[TrainerSpec]            # set J
+    current: Dict[int, List[int]]          # c: trainer id -> node ids
+    t_fwd: float = 120.0                   # forward-looking time (seconds)
+    # optional topology (paper §7 future work): node id -> rack/switch id
+    racks: Optional[Dict[int, int]] = None
+
+
+@dataclass
+class AllocationResult:
+    allocation: Dict[int, List[int]]       # trainer id -> node ids
+    counts: Dict[int, int]
+    objective: Optional[float]
+    wall_time: float
+    solver_status: str
+    fell_back: bool = False                # kept current map (timeout/infeasible)
+
+
+def solve_node_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
+                    topo_coef: float = 0.0) -> AllocationResult:
+    """Paper-faithful node-level MILP.
+
+    With ``topo_coef > 0`` and ``prob.racks`` set, implements the paper's
+    §7 future-work item: rack-locality-aware allocation.  Auxiliary
+    binaries ``y_jr`` (Trainer j touches rack r) are constrained by
+    ``x_jn <= y_j,rack(n)`` and penalized in the objective by
+    ``topo_coef · T_fwd · (per-node gain)`` per rack touched — so spreading
+    a Trainer across racks must buy at least that much throughput.
+    """
+    nodes = list(prob.nodes)
+    n = len(nodes)
+    node_pos = {nid: i for i, nid in enumerate(nodes)}
+    trainers = prob.trainers
+    j_cnt = len(trainers)
+    big_m = n + 1
+    # Eqn 10 needs M > Σx + Σu (up to 2|N|): the paper's "M > |N|" guidance
+    # is insufficient there and would silently cap fresh Trainers at |N|/2.
+    big_m_mig = 2 * n + 2
+
+    # current map as binary constants (projected to surviving nodes)
+    c = np.zeros((j_cnt, n), dtype=int)
+    for ji, t in enumerate(trainers):
+        for nid in prob.current.get(t.id, []):
+            if nid in node_pos:
+                c[ji, node_pos[nid]] = 1
+    c_count = c.sum(axis=1)
+
+    b = MILPBuilder()
+    x = [b.add_vars(f"x[{t.id}]", n, binary=True) for t in trainers]
+    u = [b.add_vars(f"u[{t.id}]", n, binary=True) for t in trainers]
+    y_l = b.add_vars("y_l", j_cnt, binary=True)
+    y_u = b.add_vars("y_u", j_cnt, binary=True)
+    z = b.add_vars("z", j_cnt, binary=True)
+    z_up = b.add_vars("z_up", j_cnt, binary=True)
+    z_dw = b.add_vars("z_dw", j_cnt, binary=True)
+
+    # Eqn 5: node exclusivity
+    for ni in range(n):
+        b.add_row({x[ji][ni]: 1.0 for ji in range(j_cnt)}, ub=1.0)
+
+    for ji, t in enumerate(trainers):
+        xr = {v: 1.0 for v in x[ji]}
+        cj = float(c_count[ji])
+
+        # Eqn 4: N_j = 0 or N_min <= N_j <= N_max
+        b.add_row({**xr, y_l[ji]: big_m}, lb=float(t.n_min))
+        b.add_row({**xr, y_l[ji]: big_m}, ub=float(big_m))
+        b.add_row({**xr, y_u[ji]: -big_m}, ub=float(t.n_max))
+        b.add_row({**xr, y_u[ji]: big_m}, ub=float(big_m))
+
+        # Eqn 9: u_jn = x_jn XOR c_jn  (c constant)
+        for ni in range(n):
+            cc = float(c[ji, ni])
+            b.add_row({u[ji][ni]: 1.0, x[ji][ni]: -1.0}, ub=cc)      # u<=x+c
+            b.add_row({u[ji][ni]: 1.0, x[ji][ni]: -1.0}, lb=-cc)     # u>=x-c
+            b.add_row({u[ji][ni]: 1.0, x[ji][ni]: 1.0}, lb=cc)       # u>=c-x
+            b.add_row({u[ji][ni]: 1.0, x[ji][ni]: 1.0}, ub=2.0 - cc) # u<=2-x-c
+        # Eqn 10: no-migration (|N_j - C_j| = sum u)
+        row = dict(xr)
+        for v in u[ji]:
+            row[v] = row.get(v, 0.0) - 1.0
+        row[z[ji]] = big_m_mig
+        b.add_row(row, lb=cj)                  # sum x - sum u + M z >= C_j
+        row = dict(xr)
+        for v in u[ji]:
+            row[v] = row.get(v, 0.0) + 1.0
+        row[z[ji]] = big_m_mig
+        b.add_row(row, ub=cj + big_m_mig)      # sum x + sum u + M z <= C_j + M
+
+        # Eqn 15: rescale indicators
+        b.add_row({**xr, z_up[ji]: -(big_m - cj)}, ub=cj)
+        b.add_row({**xr, z_up[ji]: -(cj + 1.0)}, lb=0.0)
+        b.add_row({**xr, z_dw[ji]: big_m - cj + 1.0}, ub=float(big_m))
+        b.add_row({**xr, z_dw[ji]: cj}, lb=cj)
+
+        # Eqn 11/12: SOS2 piecewise objective metric
+        _, value_coeffs = sos2_block(
+            b, f"t{t.id}", list(t.points), list(t.values), dict(xr))
+
+        # Eqn 16 objective
+        for var, coef in value_coeffs.items():
+            b.set_obj(var, prob.t_fwd * coef)
+        o_cj = t.value_at(int(c_count[ji]))
+        b.set_obj(z_up[ji], -o_cj * t.r_up)
+        b.set_obj(z_dw[ji], -o_cj * t.r_dw)
+
+        # topology extension (paper §7): rack-spread penalty
+        if topo_coef > 0.0 and prob.racks is not None:
+            rack_ids = sorted({prob.racks[nid] for nid in nodes})
+            y_rack = {r: b.add_var(f"yrack[{t.id}][{r}]", binary=True)
+                      for r in rack_ids}
+            for ni, nid in enumerate(nodes):
+                b.add_row({x[ji][ni]: 1.0,
+                           y_rack[prob.racks[nid]]: -1.0}, ub=0.0)
+            per_node_gain = t.values[-1] / max(t.points[-1], 1)
+            for r in rack_ids:
+                b.set_obj(y_rack[r],
+                          -topo_coef * prob.t_fwd * per_node_gain)
+
+    res = b.solve(maximize=True, time_limit=time_limit)
+
+    if not res.success or res.x is None:
+        # §3.6 fallback: keep the current map
+        alloc = {t.id: sorted(nid for nid in prob.current.get(t.id, [])
+                              if nid in node_pos) for t in trainers}
+        return AllocationResult(
+            allocation=alloc,
+            counts={t.id: len(alloc[t.id]) for t in trainers},
+            objective=None, wall_time=res.wall_time,
+            solver_status=res.message, fell_back=True)
+
+    xv = res.x
+    alloc: Dict[int, List[int]] = {}
+    for ji, t in enumerate(trainers):
+        alloc[t.id] = sorted(nodes[ni] for ni in range(n)
+                             if xv[x[ji][ni]] > 0.5)
+    return AllocationResult(
+        allocation=alloc,
+        counts={t.id: len(v) for t, v in zip(trainers, alloc.values())},
+        objective=res.objective, wall_time=res.wall_time,
+        solver_status=res.message)

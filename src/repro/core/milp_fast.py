@@ -1,0 +1,109 @@
+"""Aggregate (count-based) reformulation of the paper's MILP — beyond-paper
+optimization (see DESIGN.md §2 and EXPERIMENTS.md §Perf-MILP).
+
+Observation: idle nodes are homogeneous and migration is disallowed, so the
+solution is fully determined by the *count* vector (N_1..N_J):
+
+* feasibility — any count vector with Σ N_j ≤ |N| and N_j ∈ {0} ∪
+  [N^min_j, N^max_j] is realizable without migration: a Trainer that shrinks
+  keeps a subset of its own nodes; one that grows keeps all of them and
+  takes free/released ones.  This is exactly the feasible set of the
+  node-level model (Eqns 4–10): the XOR/no-migration constraints only force
+  |Δ| = Σ u, i.e. keep-your-own-nodes, never *which* nodes;
+* objective — Eqn 16 depends only on N_j and C_j.
+
+Hence the optimal objective is identical while the variable count drops
+from O(J·|N|) binaries to O(J) integers (+ SOS2 weights).  Property tests
+(tests/test_milp.py) assert objective equality against the node-level
+model on randomized instances.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.lp import MILPBuilder, sos2_block
+from repro.core.milp import AllocationProblem, AllocationResult, TrainerSpec
+
+
+def solve_fast_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
+                    ) -> AllocationResult:
+    nodes = list(prob.nodes)
+    n = len(nodes)
+    node_set = set(nodes)
+    trainers = prob.trainers
+    j_cnt = len(trainers)
+    big_m = n + 1
+
+    current = {t.id: [nid for nid in prob.current.get(t.id, [])
+                      if nid in node_set] for t in trainers}
+    c_count = {t.id: len(current[t.id]) for t in trainers}
+
+    b = MILPBuilder()
+    n_j = [b.add_var(f"N[{t.id}]", integer=True, lb=0.0, ub=float(t.n_max))
+           for t in trainers]
+    y_l = b.add_vars("y_l", j_cnt, binary=True)
+    z_up = b.add_vars("z_up", j_cnt, binary=True)
+    z_dw = b.add_vars("z_dw", j_cnt, binary=True)
+
+    # capacity: sum_j N_j <= |N|
+    b.add_row({v: 1.0 for v in n_j}, ub=float(n))
+
+    for ji, t in enumerate(trainers):
+        cj = float(c_count[t.id])
+        # N_j = 0 or N_min <= N_j (upper bound via var bound)
+        b.add_row({n_j[ji]: 1.0, y_l[ji]: big_m}, lb=float(t.n_min))
+        b.add_row({n_j[ji]: 1.0, y_l[ji]: big_m}, ub=float(big_m))
+        # rescale indicators (Eqn 15)
+        b.add_row({n_j[ji]: 1.0, z_up[ji]: -(big_m - cj)}, ub=cj)
+        b.add_row({n_j[ji]: 1.0, z_up[ji]: -(cj + 1.0)}, lb=0.0)
+        b.add_row({n_j[ji]: 1.0, z_dw[ji]: big_m - cj + 1.0}, ub=float(big_m))
+        b.add_row({n_j[ji]: 1.0, z_dw[ji]: cj}, lb=cj)
+        # SOS2 objective metric
+        _, value_coeffs = sos2_block(
+            b, f"t{t.id}", list(t.points), list(t.values), {n_j[ji]: 1.0})
+        for var, coef in value_coeffs.items():
+            b.set_obj(var, prob.t_fwd * coef)
+        o_cj = t.value_at(c_count[t.id])
+        b.set_obj(z_up[ji], -o_cj * t.r_up)
+        b.set_obj(z_dw[ji], -o_cj * t.r_dw)
+
+    res = b.solve(maximize=True, time_limit=time_limit)
+
+    if not res.success or res.x is None:
+        alloc = {t.id: sorted(current[t.id]) for t in trainers}
+        return AllocationResult(
+            allocation=alloc,
+            counts={t.id: len(alloc[t.id]) for t in trainers},
+            objective=None, wall_time=res.wall_time,
+            solver_status=res.message, fell_back=True)
+
+    counts = {t.id: int(round(res.x[n_j[ji]]))
+              for ji, t in enumerate(trainers)}
+    allocation = reconstruct_map(nodes, trainers, current, counts)
+    return AllocationResult(allocation=allocation, counts=counts,
+                            objective=res.objective,
+                            wall_time=res.wall_time,
+                            solver_status=res.message)
+
+
+def reconstruct_map(nodes: List[int], trainers: List[TrainerSpec],
+                    current: Dict[int, List[int]],
+                    counts: Dict[int, int]) -> Dict[int, List[int]]:
+    """Counts -> concrete node map, keeping current nodes first (so the map
+    satisfies the node-level no-migration constraints by construction)."""
+    allocation: Dict[int, List[int]] = {}
+    used = set()
+    for t in trainers:
+        keep = sorted(current.get(t.id, []))[: counts.get(t.id, 0)]
+        allocation[t.id] = list(keep)
+        used.update(keep)
+    free = sorted(set(nodes) - used)
+    for t in trainers:
+        need = counts.get(t.id, 0) - len(allocation[t.id])
+        if need > 0:
+            take, free = free[:need], free[need:]
+            allocation[t.id].extend(take)
+            allocation[t.id].sort()
+    return allocation

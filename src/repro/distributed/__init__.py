@@ -1,0 +1,12 @@
+from repro.distributed.sharding import (
+    batch_spec,
+    opt_state_specs,
+    param_specs,
+    sanitize,
+    sanitize_tree,
+    to_named,
+    zero1_spec,
+)
+
+__all__ = ["batch_spec", "opt_state_specs", "param_specs", "sanitize",
+           "sanitize_tree", "to_named", "zero1_spec"]

@@ -1,0 +1,109 @@
+"""Sharding rules: divisibility-aware spec sanitization, ZeRO-1 optimizer
+sharding, and the in/out sharding trees for train/serve steps.
+
+Parameter specs are attached at definition time (``ParamDef.spec``); this
+module adapts them to a concrete mesh:
+
+* ``sanitize`` drops mesh axes that do not divide the corresponding dim
+  (e.g. granite's 49155-row vocab on a 16-way model axis);
+* ``zero1_spec`` additionally shards optimizer moments (and, optionally,
+  parameters — FSDP-style) over the data axes on the first divisible
+  unsharded dim, which is what lets 76B-scale configs fit v5e HBM.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamDef
+
+Pytree = Any
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return math.prod(_axis_size(mesh, n) for n in name)
+    return mesh.shape[name]
+
+
+def sanitize(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop spec entries that don't evenly divide their dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, name in zip(shape, entries):
+        if name is not None and dim % _axis_size(mesh, name) != 0:
+            name = None
+        out.append(name)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_specs(defs: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(
+        lambda d: sanitize(d.shape, d.spec, mesh), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def zero1_spec(shape: Tuple[int, ...], spec: P, mesh: Mesh,
+               dp_axes: Tuple[str, ...]) -> P:
+    """Extend a (sanitized) spec by sharding the first divisible unsharded
+    dim over the data-parallel axes (ZeRO-1 / optimizer-state sharding)."""
+    spec = sanitize(shape, spec, mesh)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    dp_total = math.prod(mesh.shape[a] for a in dp_axes)
+    for i, (dim, name) in enumerate(zip(shape, entries)):
+        if name is None:
+            if dim % dp_total == 0:
+                entries[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                break
+            if len(dp_axes) > 1 and dim % mesh.shape[dp_axes[-1]] == 0:
+                entries[i] = dp_axes[-1]
+                break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def opt_state_specs(defs: Pytree, mesh: Mesh, dp_axes: Tuple[str, ...],
+                    zero1: bool = True) -> Pytree:
+    def one(d: ParamDef) -> P:
+        if zero1:
+            return zero1_spec(d.shape, d.spec, mesh, dp_axes)
+        return sanitize(d.shape, d.spec, mesh)
+
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh,
+               dp_axes: Tuple[str, ...]) -> P:
+    """Shard the leading (batch) dim over data axes, divisibility-aware."""
+    b = shape[0]
+    dp_total = math.prod(mesh.shape[a] for a in dp_axes)
+    if b % dp_total == 0:
+        return P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+    for k in range(len(dp_axes), 0, -1):
+        size = math.prod(mesh.shape[a] for a in dp_axes[:k])
+        if b % size == 0:
+            return P(dp_axes[:k] if k > 1 else dp_axes[0])
+    return P(None)
+
+
+def sanitize_tree(shapes: Pytree, specs: Pytree, mesh: Mesh) -> Pytree:
+    """Sanitize a tree of PartitionSpecs against a matching tree of
+    abstract arrays (divisibility-aware, e.g. decode caches)."""
+    return jax.tree.map(
+        lambda a, s: sanitize(a.shape, s, mesh), shapes, specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(tree_specs: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

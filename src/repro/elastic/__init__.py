@@ -1,0 +1,5 @@
+from repro.elastic.runtime import BFTrainerRuntime, ManagedTrainer, RuntimeReport
+from repro.elastic.trainer import ElasticTrainer, TrainMetrics
+
+__all__ = ["BFTrainerRuntime", "ManagedTrainer", "RuntimeReport",
+           "ElasticTrainer", "TrainMetrics"]

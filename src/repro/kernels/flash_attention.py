@@ -1,0 +1,126 @@
+"""Flash attention Pallas TPU kernel.
+
+Grid ``(B, H, nq, nk)`` with the KV-block dimension innermost and
+sequential: online-softmax running state (m, l, acc) lives in VMEM scratch
+and is carried across the nk iterations — the canonical TPU flash
+structure.  GQA is handled in the kernel's BlockSpec index maps
+(``kv_head = h // group``), so grouped KV heads are never materialized.
+
+Block shapes are picked so the working set fits VMEM and matmul dims stay
+MXU-aligned: q/k tiles (block_q × D) and (block_k × D) with D a multiple
+of 128 for the assigned architectures (128/192/256).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, logit_cap: float,
+            block_q: int, block_k: int, seq_k: int):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    ok = k_pos < seq_k
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    logit_cap: float = 0.0, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,H,S,D); k,v: (B,KV,Sk,D); H % KV == 0. Returns (B,H,S,D)."""
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = d ** -0.5 if scale is None else scale
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+
+    # pad sequence dims to block multiples (masked out via seq_k)
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = q.shape[2] // block_q
+    nk = k.shape[2] // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        logit_cap=logit_cap, block_q=block_q, block_k=block_k, seq_k=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, qi, ki, g=g: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, qi, ki, g=g: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, nq * block_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq, :]

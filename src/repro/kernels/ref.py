@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are validated against, and the path models use by default)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        logit_cap: float = 0.0,
+                        scale: float | None = None) -> jax.Array:
+    """q: (B,H,S,D); k,v: (B,KV,S,D) with H % KV == 0. Returns (B,H,S,D)."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    scale = d ** -0.5 if scale is None else scale
+    qh = q.reshape(b, kv, g, s, d)
+    scores = jnp.einsum("bkgqd,bktd->bkgqt", qh, k).astype(jnp.float32) * scale
+    if logit_cap:
+        scores = logit_cap * jnp.tanh(scores / logit_cap)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(k.shape[2])[None, :]
+    ok = jnp.ones((s, k.shape[2]), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    scores = jnp.where(ok, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqt,bktd->bkgqd", probs, v)
+    return out.reshape(b, h, s, d)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+                 cmat: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Naive sequential SSD recurrence (exact oracle).
+
+    x: (B,S,H,P); dt: (B,S,H); a: (H,); bmat/cmat: (B,S,H,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    batch, s, h, p = x.shape
+    n = bmat.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp        # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        da = jnp.exp(dtt * a)        # (B,H)
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dtt, bt, xt)
+        state = state * da[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((batch, h, p, n), jnp.float32)
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          bmat.swapaxes(0, 1).astype(jnp.float32),
+          cmat.swapaxes(0, 1).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), final
+
+
+def rms_norm_ref(x: jax.Array, scale: jax.Array,
+                 eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) *
+            (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def ce_loss_ref(x: jax.Array, table: jax.Array,
+                labels: jax.Array) -> jax.Array:
+    """Per-token CE oracle. x: (T,d); table: (V,d); labels: (T,)."""
+    logits = (x.astype(jnp.float32) @ table.astype(jnp.float32).T)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return logz - gold

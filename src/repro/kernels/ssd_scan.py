@@ -1,0 +1,98 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Grid ``(B, H, nc)`` with the chunk dimension innermost and sequential: the
+inter-chunk recurrent state (P × N) lives in VMEM scratch and is carried
+across chunk iterations.  Within a chunk the computation is the quadratic
+SSD form (decay-masked C·Bᵀ) — MXU matmuls over (L × N) and (L × L) tiles
+— which is exactly how the paper's GPU algorithm adapts to the TPU memory
+hierarchy: chunk tiles in VMEM, long-range state as a tiny carried
+accumulator instead of a warp-level scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+            chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (L,)
+    a = a_ref[0]                                   # scalar
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)     # (L, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)     # (L, N)
+
+    da = dt * a                                    # (L,), <= 0
+    cum = jnp.cumsum(da)                           # (L,)
+
+    # intra-chunk: decay-masked (C Bᵀ) against dt-weighted x
+    diff = cum[:, None] - cum[None, :]             # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(si <= li, jnp.exp(diff), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    w = cb * decay * dt[None, :]
+    y = jax.lax.dot(w, x, preferred_element_type=jnp.float32)     # (L, P)
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]                         # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (L, N)x(P, N) -> (L, P)
+
+    # state update: decay-to-end weighted outer products
+    decay_end = jnp.exp(cum[-1] - cum)             # (L,)
+    xw = x * (dt * decay_end)[:, None]             # (L, P)
+    new_contrib = jax.lax.dot_general(
+        xw, bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (P, N)
+    state_ref[...] = state * jnp.exp(cum[-1]) + new_contrib
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+             cmat: jax.Array, *, chunk: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H); a: (H,); bmat/cmat:
+    (B,S,H,N).  S must be a multiple of ``chunk`` (pad upstream).
+    Returns y: (B,S,H,P)."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, f"seq {s} not a multiple of chunk {chunk}"
+    nc = s // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, chunk, 1),
+                         lambda b_, h_, ci: (b_, ci, h_)),
+            pl.BlockSpec((1,), lambda b_, h_, ci: (h_,)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda b_, h_, ci: (b_, ci, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p),
+                               lambda b_, h_, ci: (b_, ci, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, a, bmat, cmat)

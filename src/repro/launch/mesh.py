@@ -1,0 +1,29 @@
+"""Production mesh factory.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (jax locks the device count on first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: one pod-slice of 256 chips (16x16
+    data x model), or two pods (2 x 16 x 16) for the multi-pod dry-run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_shards: int = 1):
+    """Small mesh over whatever local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    assert n % model_shards == 0
+    return jax.make_mesh((n // model_shards, model_shards),
+                         ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,0 +1,269 @@
+"""Mamba-2 block (SSD — state-space duality), pure-JAX reference path.
+
+The training/prefill path uses the chunked SSD algorithm: quadratic
+attention-like compute inside fixed-size chunks plus a linear recurrent
+state pass across chunks (``lax.scan``).  The decode path is the O(1)
+recurrent update.  ``repro.kernels.ssd_scan`` provides the Pallas TPU
+kernel for the chunk-level contraction; this module is the XLA oracle the
+kernel is validated against (and the path used by the dry-run).
+
+Shapes follow the paper [arXiv:2405.21060]:
+    x  (B,S,H,P)   per-head inputs,  H = d_inner / head_dim
+    dt (B,S,H)     positive step sizes (softplus)
+    A  (H,)        negative decay rates
+    B,C (B,S,G,N)  input/output projections per group (broadcast to heads)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import ParamDef, dense_def, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Core SSD math
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+                cmat: jax.Array, *, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    Args:
+      x:    (B,S,H,P)
+      dt:   (B,S,H), positive
+      a:    (H,), negative
+      bmat: (B,S,H,N)  (already broadcast from groups to heads)
+      cmat: (B,S,H,N)
+    Returns:
+      y (B,S,H,P), final_state (B,H,P,N)
+    """
+    batch, s, h, p = x.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    xc = x.reshape(batch, nc, chunk, h, p)
+    dtc = dt.reshape(batch, nc, chunk, h).astype(jnp.float32)
+    bc = bmat.reshape(batch, nc, chunk, h, n)
+    cc = cmat.reshape(batch, nc, chunk, h, n)
+
+    da = dtc * a.astype(jnp.float32)                 # (B,nc,L,H), <= 0
+    cum = jnp.cumsum(da, axis=2)                     # within-chunk cumsum
+
+    # --- intra-chunk (quadratic in chunk length) ---
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bclhn,bcshn->bclsh", cc, bc).astype(jnp.float32)
+    y_diag = jnp.einsum("bclsh,bcsh,bcshp->bclhp",
+                        cb * decay, dtc, xc.astype(jnp.float32))
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,L,H)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn",
+                        bc.astype(jnp.float32), dtc * decay_to_end,
+                        xc.astype(jnp.float32))            # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+    h0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((batch, h, p, n), jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                      # (B,H,P,N),(B,H)
+        prev = carry
+        new = carry * dec[:, :, None, None] + st
+        return new, prev
+
+    final, prev_states = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    prev_states = prev_states.swapaxes(0, 1)               # (B,nc,H,P,N)
+
+    # --- inter-chunk output ---
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       cc.astype(jnp.float32), prev_states, jnp.exp(cum))
+
+    y = (y_diag + y_off).reshape(batch, nc * chunk, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state: jax.Array, x: jax.Array, dt: jax.Array, a: jax.Array,
+             bmat: jax.Array, cmat: jax.Array):
+    """O(1) recurrent decode step.
+
+    state (B,H,P,N); x (B,H,P); dt (B,H); bmat/cmat (B,H,N).
+    """
+    dt = dt.astype(jnp.float32)
+    da = jnp.exp(dt * a.astype(jnp.float32))               # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, bmat.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    new_state = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, cmat.astype(jnp.float32))
+    return new_state, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (projections + depthwise causal conv + SSD + gating)
+# ---------------------------------------------------------------------------
+
+
+def mamba_dims(cfg: ArchConfig):
+    ssm = cfg.ssm
+    assert ssm is not None
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    return d_inner, n_heads, ssm.n_groups * ssm.d_state
+
+
+def mamba_defs(cfg: ArchConfig, model_shards: int = 1,
+               dtype=jnp.float32) -> dict:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, d_bc = mamba_dims(cfg)
+    h_spec = (P(None, "model") if n_heads % model_shards == 0
+              else P(None, None))
+    h_vec = P("model") if n_heads % model_shards == 0 else P()
+    return {
+        "wz": dense_def(d, d_inner, h_spec, dtype=dtype),
+        "wx": dense_def(d, d_inner, h_spec, dtype=dtype),
+        "wb": dense_def(d, d_bc, P(None, None), dtype=dtype),
+        "wc": dense_def(d, d_bc, P(None, None), dtype=dtype),
+        "wdt": dense_def(d, n_heads, h_spec, dtype=dtype),
+        "conv_x": ParamDef((ssm.d_conv, d_inner), spec=h_spec, scale=0.1,
+                           dtype=dtype),
+        "conv_b": ParamDef((ssm.d_conv, d_bc), spec=P(None, None), scale=0.1,
+                           dtype=dtype),
+        "conv_c": ParamDef((ssm.d_conv, d_bc), spec=P(None, None), scale=0.1,
+                           dtype=dtype),
+        "dt_bias": ParamDef((n_heads,), spec=h_vec, init="zeros",
+                            dtype=jnp.float32),
+        "a_log": ParamDef((n_heads,), spec=h_vec, init="zeros",
+                          dtype=jnp.float32),
+        "d_skip": ParamDef((n_heads,), spec=h_vec, init="ones",
+                           dtype=jnp.float32),
+        "norm": ParamDef((d_inner,), spec=h_vec, init="zeros",
+                         dtype=jnp.float32),
+        "wo": dense_def(d_inner, d, P("model", None) if n_heads % model_shards == 0
+                        else P(None, None), dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B,S,C) with kernel (K,C)."""
+    k = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * kernel[i]
+    return out
+
+
+def _conv_step(window: jax.Array, x_new: jax.Array, kernel: jax.Array):
+    """window (B,K-1,C) holds previous inputs; returns (new_window, y (B,C))."""
+    full = jnp.concatenate([window, x_new[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", full, kernel)
+    return full[:, 1:], y
+
+
+def _broadcast_groups(t: jax.Array, cfg: ArchConfig, n_heads: int) -> jax.Array:
+    """(..., G*N) -> (..., H, N) by repeating each group over its heads."""
+    ssm = cfg.ssm
+    g, n = ssm.n_groups, ssm.d_state
+    t = t.reshape(*t.shape[:-1], g, n)
+    return jnp.repeat(t, n_heads // g, axis=-2)
+
+
+def mamba_apply(p: dict, hidden: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Full-sequence mamba2 block. hidden: (B,S,d_model)."""
+    ssm = cfg.ssm
+    d_inner, n_heads, _ = mamba_dims(cfg)
+    b, s, _ = hidden.shape
+
+    z = hidden @ p["wz"]
+    x = jax.nn.silu(_causal_conv(hidden @ p["wx"], p["conv_x"]))
+    bmat = jax.nn.silu(_causal_conv(hidden @ p["wb"], p["conv_b"]))
+    cmat = jax.nn.silu(_causal_conv(hidden @ p["wc"], p["conv_c"]))
+    dt = jax.nn.softplus(
+        (hidden @ p["wdt"]).astype(jnp.float32) + p["dt_bias"]
+    )
+    a = -jnp.exp(p["a_log"])
+
+    xh = x.reshape(b, s, n_heads, ssm.head_dim)
+    bh = _broadcast_groups(bmat, cfg, n_heads)
+    ch = _broadcast_groups(cmat, cfg, n_heads)
+
+    y, _ = ssd_chunked(xh, dt, a, bh, ch, chunk=ssm.chunk_size)
+    y = y + xh * p["d_skip"][:, None].astype(y.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode with recurrent state
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    ssm = cfg.ssm
+    d_inner, n_heads, d_bc = mamba_dims(cfg)
+    k = ssm.d_conv - 1
+    return {
+        "conv_x": jnp.zeros((batch, k, d_inner), dtype),
+        "conv_b": jnp.zeros((batch, k, d_bc), dtype),
+        "conv_c": jnp.zeros((batch, k, d_bc), dtype),
+        "state": jnp.zeros((batch, n_heads, ssm.head_dim, ssm.d_state),
+                           jnp.float32),
+    }
+
+
+def mamba_cache_specs(batch_axes) -> dict:
+    return {
+        "conv_x": P(batch_axes, None, "model"),
+        "conv_b": P(batch_axes, None, None),
+        "conv_c": P(batch_axes, None, None),
+        "state": P(batch_axes, "model", None, None),
+    }
+
+
+def mamba_decode(p: dict, hidden: jax.Array, cache: dict,
+                 cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """One-token decode. hidden: (B,1,d_model)."""
+    ssm = cfg.ssm
+    d_inner, n_heads, _ = mamba_dims(cfg)
+    h1 = hidden[:, 0, :]
+
+    z = h1 @ p["wz"]
+    cw_x, x = _conv_step(cache["conv_x"], h1 @ p["wx"], p["conv_x"])
+    cw_b, bmat = _conv_step(cache["conv_b"], h1 @ p["wb"], p["conv_b"])
+    cw_c, cmat = _conv_step(cache["conv_c"], h1 @ p["wc"], p["conv_c"])
+    x, bmat, cmat = map(jax.nn.silu, (x, bmat, cmat))
+    dt = jax.nn.softplus(
+        (h1 @ p["wdt"]).astype(jnp.float32) + p["dt_bias"]
+    )
+    a = -jnp.exp(p["a_log"])
+
+    xh = x.reshape(-1, n_heads, ssm.head_dim)
+    bh = _broadcast_groups(bmat, cfg, n_heads)
+    ch = _broadcast_groups(cmat, cfg, n_heads)
+    new_state, y = ssd_step(cache["state"], xh, dt, a, bh, ch)
+    y = y + xh * p["d_skip"][:, None].astype(y.dtype)
+    y = y.reshape(-1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["wo"])[:, None, :]
+    new_cache = {"conv_x": cw_x, "conv_b": cw_b, "conv_c": cw_c,
+                 "state": new_state}
+    return out, new_cache

@@ -1,0 +1,138 @@
+"""Mixture-of-Experts MLP with top-k routing, shared experts and a
+load-balance auxiliary loss.
+
+Two execution strategies (selectable; see EXPERIMENTS.md §Perf):
+
+* ``dense``    — every expert processes every token; outputs are combined
+  with the (sparse) gate weights.  Simple, numerically exact, and maps onto
+  expert sharding with a single all-reduce — but costs ``E/k`` times the
+  active-expert FLOPs.  This is the paper-faithful baseline path (the paper
+  treats Trainers as black boxes; MoE efficiency is our extension).
+* ``capacity`` — classic dispatch/combine einsum formulation with a token
+  capacity per expert (drops overflow tokens).  HLO FLOPs drop to the
+  active-expert count; used by the optimized configuration.
+
+Expert weights are sharded over the ``model`` axis on the expert dimension
+when ``n_experts % model_shards == 0`` (expert parallelism), otherwise on
+the per-expert hidden dimension (tensor parallelism inside each expert —
+e.g. granite's 40 experts on a 16-way axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import ACTIVATIONS, ParamDef, mlp_apply, mlp_defs
+
+
+def moe_defs(cfg: ArchConfig, model_shards: int = 1, dtype=jnp.float32) -> dict:
+    moe = cfg.moe
+    assert moe is not None
+    d, e, de = cfg.d_model, moe.n_experts, moe.d_expert
+    if e % model_shards == 0:
+        w_in_spec = P("model", None, None)       # expert-parallel
+        w_out_spec = P("model", None, None)
+    else:
+        w_in_spec = P(None, None, "model")       # TP inside experts
+        w_out_spec = P(None, "model", None)
+    defs = {
+        "router": ParamDef((d, e), spec=P(None, None), scale=d ** -0.5,
+                           dtype=jnp.float32),   # router kept in fp32
+        "w_gate": ParamDef((e, d, de), spec=w_in_spec, scale=d ** -0.5,
+                           dtype=dtype),
+        "w_up": ParamDef((e, d, de), spec=w_in_spec, scale=d ** -0.5,
+                         dtype=dtype),
+        "w_down": ParamDef((e, de, d), spec=w_out_spec, scale=de ** -0.5,
+                           dtype=dtype),
+    }
+    if moe.n_shared:
+        defs["shared"] = mlp_defs(d, de * moe.n_shared, dtype=dtype)
+    return defs
+
+
+def _route(p: dict, x2d: jax.Array, moe: MoEConfig):
+    """Returns (gates (T,E) sparse, aux_loss scalar)."""
+    logits = (x2d.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (T, E)
+    top_vals, top_idx = jax.lax.top_k(probs, moe.top_k)     # (T, k)
+    top_vals = top_vals / jnp.maximum(
+        top_vals.sum(-1, keepdims=True), 1e-9
+    )
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(x2d.shape[0])[:, None], top_idx
+    ].set(top_vals)
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    e = moe.n_experts
+    frac_tokens = (gates > 0).astype(jnp.float32).mean(0) * (e / moe.top_k)
+    frac_probs = probs.mean(0)
+    aux = moe.router_aux_coef * e * jnp.sum(frac_tokens * frac_probs)
+    return gates, aux
+
+
+def _experts_dense(p: dict, x2d: jax.Array, gates: jax.Array,
+                   activation: str) -> jax.Array:
+    act = ACTIVATIONS[activation]
+    # (T,d) x (E,d,de) -> (E,T,de); combine with gates -> (T,d)
+    h = act(jnp.einsum("td,edf->etf", x2d, p["w_gate"]),
+            jnp.einsum("td,edf->etf", x2d, p["w_up"]))
+    y = jnp.einsum("etf,efd->etd", h, p["w_down"])
+    return jnp.einsum("etd,te->td", y, gates.astype(y.dtype))
+
+
+def _experts_capacity(p: dict, x2d: jax.Array, gates: jax.Array,
+                      moe: MoEConfig, activation: str,
+                      group_size: int = 512) -> jax.Array:
+    """Dispatch/combine einsum with per-expert capacity (overflow dropped).
+
+    Tokens are processed in groups of ``group_size`` with a per-group
+    capacity ``C = g·k/E·cf`` (the t5x/MaxText formulation): the dispatch
+    tensor is (G, g, E, C), i.e. O(T·g·k·cf) elements instead of the
+    O(T²·k·cf) a global-capacity formulation would need.  Groups inherit
+    the token (data) sharding, experts the expert sharding.
+    """
+    act = ACTIVATIONS[activation]
+    t, d = x2d.shape
+    e = moe.n_experts
+    g = min(group_size, t)
+    pad = (-t) % g
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+        gates = jnp.pad(gates, ((0, pad), (0, 0)))
+    n_groups = x2d.shape[0] // g
+    xg = x2d.reshape(n_groups, g, d)
+    gg = gates.reshape(n_groups, g, e)
+    cap = int(max(1, round(g * moe.top_k / e * moe.capacity_factor)))
+
+    sel = gg > 0                                             # (G,g,E)
+    pos = jnp.cumsum(sel.astype(jnp.int32), axis=1) - 1      # slot in expert
+    keep = sel & (pos < cap)
+    disp = (keep[..., None]
+            & (pos[..., None] == jnp.arange(cap)[None, None, None, :]))
+    disp_f = disp.astype(x2d.dtype)                          # (G,g,E,C)
+    xe = jnp.einsum("gsec,gsd->gecd", disp_f, xg)            # (G,E,C,d)
+    h = act(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]),
+            jnp.einsum("gecd,edf->gecf", xe, p["w_up"]))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])        # (G,E,C,d)
+    comb = disp_f * gg.astype(x2d.dtype)[..., None]          # (G,g,E,C)
+    y = jnp.einsum("gsec,gecd->gsd", comb, ye)
+    return y.reshape(n_groups * g, d)[:t]
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ArchConfig, *,
+              strategy: str = "dense") -> tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) -> (y, aux_loss)."""
+    moe = cfg.moe
+    assert moe is not None
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    gates, aux = _route(p, x2d, moe)
+    if strategy == "capacity":
+        y = _experts_capacity(p, x2d, gates, moe, cfg.mlp_activation)
+    else:
+        y = _experts_dense(p, x2d, gates, cfg.mlp_activation)
+    if moe.n_shared:
+        y = y + mlp_apply(p["shared"], x2d, cfg.mlp_activation)
+    return y.reshape(b, s, d), aux

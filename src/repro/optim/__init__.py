@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, AdamWState, linear_scaling, warmup_cosine
+
+__all__ = ["AdamW", "AdamWState", "linear_scaling", "warmup_cosine"]

@@ -1,0 +1,90 @@
+"""AdamW optimizer + LR schedules, pure JAX (no optax dependency).
+
+Includes the linear-scaling rule the paper relies on for weak-scaling
+elastic training: per-node batch is fixed, so the global batch is
+proportional to the node count and the LR is scaled accordingly
+(Goyal et al. [13] in the paper; Adasum-style adjustment hook).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params: Pytree) -> AdamWState:
+        zeros = lambda p: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), p)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=zeros(params), nu=zeros(params))
+
+    def update(self, grads: Pytree, state: AdamWState, params: Pytree,
+               lr_scale: jax.Array | float = 1.0
+               ) -> tuple[Pytree, AdamWState]:
+        step = state.step + 1
+        if self.grad_clip:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        mu = jax.tree.map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: self.b2 * v +
+            (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        mu_hat_c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        nu_hat_c = 1.0 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr * lr_scale
+
+        def upd(p, m, v):
+            u = (m / mu_hat_c) / (jnp.sqrt(v / nu_hat_c) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(step: jax.Array, *, base_lr: float = 1.0,
+                  warmup_steps: int = 100, total_steps: int = 10_000,
+                  min_frac: float = 0.1) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / max(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(step < warmup_steps, warm, cos)
+
+
+def linear_scaling(n_nodes: int, base_nodes: int = 1,
+                   max_scale: float = 32.0) -> float:
+    """Linear LR scaling rule for weak-scaling elastic rescale."""
+    return float(min(n_nodes / base_nodes, max_scale))

@@ -1,0 +1,10 @@
+from repro.roofline.analysis import (
+    CollectiveStats,
+    Roofline,
+    markdown_table,
+    model_flops_estimate,
+    parse_collectives,
+)
+
+__all__ = ["CollectiveStats", "Roofline", "markdown_table",
+           "model_flops_estimate", "parse_collectives"]

@@ -1,0 +1,171 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` provides FLOPs and bytes; collective bytes are parsed
+from the post-partition HLO text (``compiled.as_text()``) with a per-op
+traffic model:  all-reduce ≈ 2×size (ring), all-gather / reduce-scatter ≈
+size×(k-1)/k, all-to-all / collective-permute ≈ size.  Sizes are
+per-device shard bytes, i.e. bytes crossing each chip's ICI links.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link (~ per-chip usable)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_ID_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shapes_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype == "tuple" or dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    link_bytes: float = 0.0     # traffic-model bytes crossing each chip
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "-done(" in line:        # avoid double counting async pairs
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shapes_str)
+        # group size k for the (k-1)/k factor
+        k = 2
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            k = max(2, len(gm.group(1).split(",")))
+        else:
+            gm2 = _GROUPS_ID_RE.search(line)
+            if gm2:
+                k = max(2, int(gm2.group(2)))
+        if kind == "all-reduce":
+            moved = 2.0 * size * (k - 1) / k
+        elif kind in ("all-gather", "reduce-scatter"):
+            moved = size * (k - 1) / k
+        else:  # all-to-all, collective-permute
+            moved = float(size)
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + size
+        stats.link_bytes += moved
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float               # whole-program FLOPs (all devices)
+    hlo_bytes: float               # whole-program bytes accessed
+    collective_link_bytes: float   # per-chip link traffic
+    model_flops: float             # 6·N·D (train) / 2·N_active·D (serve)
+    n_params: int
+    n_active_params: int
+    bytes_per_device: Optional[float] = None
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    collective_bytes: Dict[str, int] = field(default_factory=dict)
+
+    # --- derived terms (seconds) ---
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.n_devices * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.n_devices * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_link_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU implied by the roofline (useful FLOPs over
+        peak at the dominant term's duration)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.n_devices * PEAK_FLOPS_BF16 * t)
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 mfu_bound=self.mfu_bound)
+        return d
+
+
+def model_flops_estimate(n_params: int, n_active: int, tokens: int,
+                         kind: str) -> float:
+    """6·N·D for training, 2·N_active·D for single forward/decode."""
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens
+
+
+def markdown_table(rows: List[Roofline]) -> str:
+    hdr = ("| arch | shape | mesh | t_compute | t_memory | t_collective | "
+           "bottleneck | MODEL/HLO FLOPs | MFU bound |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.t_compute:.4f}s | "
+            f"{r.t_memory:.4f}s | {r.t_collective:.4f}s | {r.bottleneck} | "
+            f"{r.useful_flops_ratio:.2f} | {r.mfu_bound:.2f} |\n")
+    return "".join(out)

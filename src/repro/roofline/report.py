@@ -1,0 +1,64 @@
+"""Roofline report: reads dry-run JSONs and emits the §Roofline markdown
+table + hillclimb-pair selection.
+
+Run:  PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import List
+
+
+def load(dir_: str) -> List[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute']*1e3:9.2f} | {r['t_memory']*1e3:9.2f} | "
+            f"{r['t_collective']*1e3:9.2f} | {r['bottleneck']:10s} | "
+            f"{r['useful_flops_ratio']:5.2f} | {r['mfu_bound']:5.3f} |")
+
+
+def table(rows: List[dict]) -> str:
+    out = ["| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) "
+           "| bottleneck | MODEL/HLO | MFU bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(fmt_row(r))
+    return "\n".join(out)
+
+
+def pick_hillclimb(rows: List[dict]) -> dict:
+    single = [r for r in rows if r["mesh"].startswith("1pod")]
+    trains = [r for r in single if r["shape"] == "train_4k"]
+    worst = min(single, key=lambda r: r["mfu_bound"])
+    coll = max(single, key=lambda r: r["t_collective"] /
+               max(r["t_compute"], r["t_memory"], 1e-12))
+    representative = max(trains, key=lambda r: r["n_active_params"])
+    return {"worst_mfu": worst, "most_collective_bound": coll,
+            "paper_representative": representative}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(table(rows))
+    print()
+    picks = pick_hillclimb(rows)
+    for why, r in picks.items():
+        print(f"HILLCLIMB[{why}]: {r['arch']} x {r['shape']} "
+              f"(bottleneck={r['bottleneck']}, mfu_bound={r['mfu_bound']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

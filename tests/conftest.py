@@ -1,0 +1,7 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real device count; only launch/dryrun.py
+# (and the subprocess tests that exec it) force placeholder devices.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

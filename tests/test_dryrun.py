@@ -1,0 +1,78 @@
+"""Dry-run machinery tests.
+
+The full production dry-run (16x16 and 2x16x16 over all 40 combinations)
+runs via ``python -m repro.launch.dryrun``; here we assert the machinery
+end-to-end in a subprocess (which forces placeholder devices) on one
+small-but-real combination per step kind, plus mesh-factory unit checks.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_dryrun(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_single_and_multi(tmp_path):
+    out = str(tmp_path / "dr")
+    res = run_dryrun(["--arch", "gemma-2b", "--shape", "decode_32k",
+                      "--mesh", "both", "--out", out])
+    assert res.returncode == 0, res.stdout + res.stderr
+    files = os.listdir(out)
+    assert len(files) == 2
+    for f in files:
+        data = json.load(open(os.path.join(out, f)))
+        assert data["hlo_flops"] > 0
+        assert data["t_compute"] > 0 and data["t_memory"] > 0
+        assert data["bottleneck"] in ("compute", "memory", "collective")
+    # multi-pod result must show the pod axis sharding the batch:
+    single = json.load(open(os.path.join(
+        out, "gemma-2b__decode_32k__1pod-16x16.json")))
+    multi = json.load(open(os.path.join(
+        out, "gemma-2b__decode_32k__2pod-2x16x16.json")))
+    assert multi["n_devices"] == 2 * single["n_devices"]
+
+
+@pytest.mark.slow
+def test_dryrun_train_moe_subprocess(tmp_path):
+    out = str(tmp_path / "dr2")
+    res = run_dryrun(["--arch", "granite-moe-3b-a800m", "--shape",
+                      "train_4k", "--mesh", "single", "--out", out])
+    assert res.returncode == 0, res.stdout + res.stderr
+    data = json.load(open(os.path.join(
+        out, "granite-moe-3b-a800m__train_4k__1pod-16x16.json")))
+    assert data["n_active_params"] < data["n_params"]
+    assert data["collective_link_bytes"] > 0
+
+
+def test_mesh_factory_axes():
+    from repro.launch.mesh import make_production_mesh
+    # shape arithmetic only; building uses available (1-CPU) devices would
+    # fail, so assert via the documented contract instead of instantiating.
+    import inspect
+    src = inspect.getsource(make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '"pod", "data", "model"' in src
+
+
+def test_applicable_shapes_long_context_policy():
+    from repro.configs import applicable_shapes, get_arch
+    assert "long_500k" in applicable_shapes(get_arch("mamba2-2.7b"))
+    assert "long_500k" in applicable_shapes(get_arch("jamba-v0.1-52b"))
+    assert "long_500k" in applicable_shapes(get_arch("gemma2-27b"))
+    for a in ("yi-6b", "minitron-8b", "gemma-2b", "internvl2-76b",
+              "deepseek-v2-lite-16b", "granite-moe-3b-a800m",
+              "seamless-m4t-medium"):
+        assert "long_500k" not in applicable_shapes(get_arch(a)), a
+        assert "decode_32k" in applicable_shapes(get_arch(a))

@@ -1,0 +1,143 @@
+"""MILP model tests: paper-faithful node-level vs fast aggregate
+equivalence, brute-force optimality on small instances, constraint
+invariants, and the §3.6 timeout fallback."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.milp import AllocationProblem, TrainerSpec, solve_node_milp
+from repro.core.milp_fast import reconstruct_map, solve_fast_milp
+from repro.core.scaling import TAB2, tab2_curve
+
+
+def random_instance(seed, n_lo=6, n_hi=24, j_lo=2, j_hi=5):
+    rng = np.random.RandomState(seed)
+    n_nodes = rng.randint(n_lo, n_hi)
+    nodes = list(range(n_nodes))
+    trainers, current, used = [], {}, set()
+    for j in range(rng.randint(j_lo, j_hi)):
+        curve = tab2_curve(list(TAB2)[j % len(TAB2)])
+        n_min = rng.randint(1, 3)
+        n_max = rng.randint(n_min + 1, 12)
+        pts, vals = curve.breakpoints(n_min, n_max)
+        trainers.append(TrainerSpec(
+            id=j, n_min=n_min, n_max=n_max,
+            r_up=float(rng.uniform(5, 40)), r_dw=float(rng.uniform(1, 10)),
+            points=tuple(pts), values=tuple(vals)))
+        k = rng.randint(0, min(n_max, n_nodes - len(used)) + 1)
+        if 0 < k < n_min:
+            k = 0
+        avail = [x for x in nodes if x not in used]
+        cur = [int(c) for c in
+               rng.choice(avail, size=min(k, len(avail)), replace=False)]
+        current[j] = cur
+        used.update(cur)
+    t_fwd = float(rng.choice([10.0, 60.0, 120.0, 300.0]))
+    return AllocationProblem(nodes=nodes, trainers=trainers,
+                             current=current, t_fwd=t_fwd)
+
+
+def manual_objective(prob, counts):
+    obj = 0.0
+    for t in prob.trainers:
+        cj = len([n for n in prob.current.get(t.id, [])
+                  if n in set(prob.nodes)])
+        c = counts[t.id]
+        obj += prob.t_fwd * t.value_at(c)
+        if c > cj:
+            obj -= t.value_at(cj) * t.r_up
+        elif c < cj:
+            obj -= t.value_at(cj) * t.r_dw
+    return obj
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_node_vs_fast_equivalence(seed):
+    prob = random_instance(seed)
+    r1 = solve_node_milp(prob, time_limit=60)
+    r2 = solve_fast_milp(prob, time_limit=60)
+    assert r1.objective is not None and r2.objective is not None
+    tol = 1e-4 * max(1.0, abs(r1.objective))
+    assert abs(r1.objective - r2.objective) < tol
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_fast_matches_bruteforce(seed):
+    prob = random_instance(seed, n_lo=5, n_hi=10, j_hi=4)
+    r = solve_fast_milp(prob, time_limit=60)
+    ranges = [([0] if t.n_min > len(prob.nodes) else
+               [0] + list(range(t.n_min, min(t.n_max, len(prob.nodes)) + 1)))
+              for t in prob.trainers]
+    best = None
+    for counts in itertools.product(*ranges):
+        if sum(counts) > len(prob.nodes):
+            continue
+        obj = manual_objective(
+            prob, {t.id: c for t, c in zip(prob.trainers, counts)})
+        best = obj if best is None else max(best, obj)
+    assert abs(r.objective - best) < 1e-4 * max(1.0, abs(best))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_allocation_invariants(seed):
+    prob = random_instance(seed)
+    for solve in (solve_node_milp, solve_fast_milp):
+        r = solve(prob, time_limit=60)
+        node_set = set(prob.nodes)
+        seen = set()
+        for t in prob.trainers:
+            alloc = r.allocation[t.id]
+            # exclusivity (Eqn 5)
+            assert not (set(alloc) & seen)
+            seen |= set(alloc)
+            assert set(alloc) <= node_set
+            # size constraint (Eqn 4)
+            assert len(alloc) == 0 or t.n_min <= len(alloc) <= t.n_max
+            # no migration (Eqns 6-10): keep-own-nodes
+            cur = set(prob.current.get(t.id, [])) & node_set
+            if len(alloc) >= len(cur):
+                assert cur <= set(alloc)
+            else:
+                assert set(alloc) <= cur
+
+
+def test_solver_objective_matches_manual():
+    prob = random_instance(42)
+    r = solve_fast_milp(prob, time_limit=60)
+    assert abs(r.objective - manual_objective(prob, r.counts)) < \
+        1e-3 * max(1.0, abs(r.objective))
+
+
+def test_timeout_fallback_keeps_current_map():
+    prob = random_instance(3)
+    r = solve_fast_milp(prob, time_limit=1e-9)
+    if r.fell_back:    # §3.6 behaviour
+        node_set = set(prob.nodes)
+        for t in prob.trainers:
+            assert set(r.allocation[t.id]) == \
+                set(prob.current.get(t.id, [])) & node_set
+
+
+def test_reconstruct_map_properties():
+    rng = np.random.RandomState(0)
+    for _ in range(20):
+        n = rng.randint(4, 20)
+        nodes = list(range(n))
+        trainers = [TrainerSpec(id=j, n_min=1, n_max=n, r_up=1, r_dw=1,
+                                points=(0, 1, n), values=(0, 1, n))
+                    for j in range(3)]
+        current = {0: [0, 1], 1: [2], 2: []}
+        counts = {0: int(rng.randint(0, n // 2)),
+                  1: int(rng.randint(0, n // 3)), 2: int(rng.randint(0, 2))}
+        while sum(counts.values()) > n:
+            counts[0] = max(0, counts[0] - 1)
+        alloc = reconstruct_map(nodes, trainers, current, counts)
+        seen = set()
+        for t in trainers:
+            assert len(alloc[t.id]) == counts[t.id]
+            assert not (set(alloc[t.id]) & seen)
+            seen |= set(alloc[t.id])
+            kept = set(alloc[t.id]) & set(current[t.id])
+            # keep-own-first
+            assert len(kept) == min(counts[t.id], len(current[t.id]))

@@ -1,0 +1,128 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.events import Fragment, fragments_to_events, pool_sizes
+from repro.core.metrics import eq_nodes, resource_integral
+from repro.core.milp import AllocationProblem, TrainerSpec
+from repro.core.milp_fast import solve_fast_milp
+from repro.core.scaling import ScalingCurve
+
+
+# ---------------------------------------------------------------------------
+# Scaling curves
+# ---------------------------------------------------------------------------
+
+curve_points = st.lists(
+    st.floats(min_value=0.1, max_value=1e4), min_size=2, max_size=6)
+
+
+@given(curve_points)
+def test_curve_interp_within_hull(vals):
+    nodes = tuple(2 ** i for i in range(len(vals)))
+    c = ScalingCurve(nodes, tuple(vals))
+    lo, hi = min(vals), max(vals)
+    for n in np.linspace(nodes[0], nodes[-1], 17):
+        v = c(float(n))
+        assert lo - 1e-9 <= v <= hi + 1e-9
+    assert c(0) == 0.0
+
+
+@given(curve_points, st.integers(1, 4), st.integers(5, 40))
+def test_breakpoints_always_bracket(vals, n_min, n_max):
+    nodes = tuple(2 ** i for i in range(len(vals)))
+    c = ScalingCurve(nodes, tuple(vals))
+    pts, out = c.breakpoints(n_min, n_max)
+    assert pts[0] == 0 and out[0] == 0.0
+    assert n_min in pts and pts[-1] == n_max
+    assert len(pts) == len(out)
+    assert all(a < b for a, b in zip(pts, pts[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Events / metrics
+# ---------------------------------------------------------------------------
+
+fragment_lists = st.lists(
+    st.tuples(st.integers(0, 10),
+              st.floats(0, 1e4),
+              st.floats(1.0, 1e4)),
+    min_size=1, max_size=30)
+
+
+@given(fragment_lists)
+@settings(max_examples=50)
+def test_pool_size_conservation(raw):
+    # ensure per-node fragments don't overlap: offset each by node phase
+    frags = []
+    per_node_t = {}
+    for node, start, dur in raw:
+        t0 = max(start, per_node_t.get(node, 0.0) + 1e-3)
+        frags.append(Fragment(node=node, start=t0, end=t0 + dur))
+        per_node_t[node] = t0 + dur
+    events = fragments_to_events(frags)
+    sizes = pool_sizes(events)
+    assert all(n >= 0 for _, n in sizes)
+    assert sizes[-1][1] == 0  # every fragment eventually ends
+
+    t0 = min(f.start for f in frags)
+    t1 = max(f.end for f in frags)
+    integral = resource_integral(events, t0, t1)
+    manual = sum(f.length for f in frags) / 3600.0
+    assert abs(integral - manual) < 1e-6 * max(1.0, manual) + 1e-9
+    eq = eq_nodes(events, t0, t1)
+    assert 0 <= eq <= len({f.node for f in frags}) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# MILP invariants under hypothesis-generated instances
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def milp_instances(draw):
+    n_nodes = draw(st.integers(3, 16))
+    n_jobs = draw(st.integers(1, 4))
+    trainers, current, used = [], {}, set()
+    for j in range(n_jobs):
+        n_min = draw(st.integers(1, 2))
+        n_max = draw(st.integers(n_min, 10))
+        thr1 = draw(st.floats(0.5, 10.0))
+        pts = [0, n_min] if n_min == n_max else [0, n_min, n_max]
+        vals = [0.0] + [thr1 * p * (0.9 ** i)
+                        for i, p in enumerate(pts[1:])]
+        trainers.append(TrainerSpec(
+            id=j, n_min=n_min, n_max=n_max,
+            r_up=draw(st.floats(0.0, 50.0)), r_dw=draw(st.floats(0.0, 20.0)),
+            points=tuple(pts), values=tuple(vals)))
+        avail = [x for x in range(n_nodes) if x not in used]
+        k = draw(st.integers(0, min(n_max, len(avail))))
+        if 0 < k < n_min:
+            k = 0
+        cur = avail[:k]
+        current[j] = cur
+        used.update(cur)
+    t_fwd = draw(st.floats(1.0, 600.0))
+    return AllocationProblem(nodes=list(range(n_nodes)), trainers=trainers,
+                             current=current, t_fwd=t_fwd)
+
+
+@given(milp_instances())
+@settings(max_examples=25, deadline=None)
+def test_fast_milp_invariants(prob):
+    r = solve_fast_milp(prob, time_limit=30)
+    seen = set()
+    for t in prob.trainers:
+        alloc = r.allocation[t.id]
+        assert not (set(alloc) & seen)
+        seen |= set(alloc)
+        assert len(alloc) == 0 or t.n_min <= len(alloc) <= t.n_max
+    assert len(seen) <= len(prob.nodes)
+    if r.objective is not None:
+        # optimal must be at least as good as "keep current" and "all zero"
+        keep = {t.id: len(prob.current.get(t.id, [])) for t in prob.trainers}
+        zero_obj = sum(-t.value_at(keep[t.id]) * t.r_dw
+                       for t in prob.trainers if keep[t.id] > 0)
+        keep_obj = sum(prob.t_fwd * t.value_at(keep[t.id])
+                       for t in prob.trainers)
+        assert r.objective >= max(keep_obj, zero_obj) - 1e-6

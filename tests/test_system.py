@@ -1,0 +1,73 @@
+"""End-to-end behaviour test: the paper's headline claims at reduced scale.
+
+Replays a Summit-calibrated trace with Tab-2 DNN Trainers; asserts the
+reproduction-level behaviours: MILP >= heuristic efficiency, rescale-cost
+gap, efficiency U in a sane band, T_fwd monotonicity of rescale spend.
+"""
+import pytest
+
+from repro.core import (
+    EqualShareAllocator,
+    MILPAllocator,
+    Simulator,
+    TrainerJob,
+    eq_nodes,
+    fragments_to_events,
+    generate_summit_like,
+    static_outcome,
+    tab2_curve,
+)
+
+HORIZON = 36 * 3600.0
+
+
+@pytest.fixture(scope="module")
+def trace():
+    frags = generate_summit_like(n_nodes=128, duration=HORIZON, seed=21)
+    return fragments_to_events(frags)
+
+
+def _hpo_jobs(n=8):
+    curve = tab2_curve("ShuffleNet")
+    return [TrainerJob(id=i, curve=curve, work=1e12, n_min=1, n_max=24,
+                       r_up=20.0, r_dw=5.0) for i in range(n)]
+
+
+def test_hpo_efficiency_band(trace):
+    rep = Simulator(trace, _hpo_jobs(), MILPAllocator("fast"), t_fwd=120.0,
+                    horizon=HORIZON).run()
+    n_eq = eq_nodes(trace, 0.0, HORIZON)
+    a_s = static_outcome(_hpo_jobs(), max(1, round(n_eq)), HORIZON,
+                         MILPAllocator("fast"))
+    u = rep.total_samples / a_s
+    # paper: up to ~93%, average ~80%; superlinear Tab-2 rows and eq-node
+    # rounding allow >1 at miniature scale — assert a broad sane band.
+    assert 0.5 < u < 1.6, u
+
+
+def test_milp_vs_heuristic_headline(trace):
+    milp = Simulator(trace, _hpo_jobs(), MILPAllocator("fast"), t_fwd=120.0,
+                     horizon=HORIZON).run()
+    heur = Simulator(trace, _hpo_jobs(), EqualShareAllocator(), t_fwd=120.0,
+                     horizon=HORIZON).run()
+    assert milp.total_samples >= 0.95 * heur.total_samples
+    assert milp.rescale_cost_samples < 0.5 * heur.rescale_cost_samples
+
+
+def test_tfwd_monotone_rescale_investment(trace):
+    """Paper Fig 7b: rescale spend grows with forward-looking time."""
+    costs = []
+    for t_fwd in (10.0, 600.0):
+        rep = Simulator(trace, _hpo_jobs(), MILPAllocator("fast"),
+                        t_fwd=t_fwd, horizon=HORIZON).run()
+        costs.append(rep.rescale_cost_samples)
+    assert costs[0] <= costs[1] * 1.05
+
+
+def test_preemption_cost_allocator_independent(trace):
+    """Paper Fig 11a: preemption cost is outside the allocator's control."""
+    milp = Simulator(trace, _hpo_jobs(), MILPAllocator("fast"), t_fwd=120.0,
+                     horizon=HORIZON).run()
+    heur = Simulator(trace, _hpo_jobs(), EqualShareAllocator(), t_fwd=120.0,
+                     horizon=HORIZON).run()
+    assert milp.preempt_cost_s <= heur.preempt_cost_s * 2.0 + 1.0
