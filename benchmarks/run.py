@@ -11,6 +11,8 @@ import time
 
 SECTIONS = [
     ("milp", "Fig 5: MILP solve time", "benchmarks.bench_milp"),
+    ("engine", "Allocation engine portfolio vs per-event MILP (week trace)",
+     "benchmarks.bench_engine"),
     ("tfwd", "Figs 7-9: forward-looking time", "benchmarks.bench_tfwd"),
     ("week", "Figs 10-11: weekly efficiency MILP vs heuristic",
      "benchmarks.bench_week"),

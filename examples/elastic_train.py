@@ -1,8 +1,9 @@
 """End-to-end driver: REAL elastic JAX training under BFTrainer control.
 
 Two Trainers (reduced gemma-2b and mamba2 architectures) are trained with
-genuine train steps while the MILP allocator rescales them across a
-replayed idle-node trace.  Demonstrates:
+genuine train steps while the AllocationEngine (memoized greedy/MILP
+portfolio, DESIGN.md §3) rescales them across a replayed idle-node trace.
+Demonstrates:
   * state carry across rescale (no restart, no durable checkpoint),
   * per-node fixed minibatch => global batch tracks the allocation,
   * measured (not assumed) R_up / R_dw fed back into the MILP.
@@ -14,7 +15,7 @@ import argparse
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import MILPAllocator, amdahl_curve, fragments_to_events, \
+from repro.core import AllocationEngine, amdahl_curve, fragments_to_events, \
     generate_summit_like
 from repro.elastic import BFTrainerRuntime, ElasticTrainer, ManagedTrainer
 from repro.models import build_model
@@ -50,11 +51,16 @@ def main() -> None:
                        curve=amdahl_curve("mamba2", 120.0, 0.15),
                        n_min=1, n_max=1, target_steps=args.steps),
     ]
-    rt = BFTrainerRuntime(managed, MILPAllocator("fast"), t_fwd=120.0)
+    engine = AllocationEngine()
+    rt = BFTrainerRuntime(managed, engine, t_fwd=120.0)
     rep = rt.run(events, time_scale=1.0, max_steps_per_interval=8)
 
+    st = engine.stats
     print(f"\nallocation events: {rep.events} "
           f"(solver {rep.solver_wall_s:.2f}s), wall {rep.wall_time_s:.1f}s")
+    print(f"engine: {st.cache_hits}/{st.events} cache hits, "
+          f"{st.greedy_solves} greedy + {st.fast_milp_solves} fast-MILP "
+          f"solves, {st.fallbacks} fallbacks")
     for m in managed:
         losses = rep.losses[m.id]
         r_up, r_dw = m.trainer.measured_rescale_costs()

@@ -2,7 +2,9 @@
 # for DNN Trainers on unfillable idle nodes, plus the event-driven
 # BFTrainer scheduler/simulator around it.
 from repro.core.allocator import Allocator, EqualShareAllocator, MILPAllocator
+from repro.core.engine import AllocationEngine, EngineStats, problem_signature
 from repro.core.events import Fragment, PoolEvent, fragments_to_events, pool_sizes
+from repro.core.greedy import solve_greedy
 from repro.core.metrics import Efficiency, ROI, eq_nodes, resource_integral
 from repro.core.milp import AllocationProblem, AllocationResult, TrainerSpec, solve_node_milp
 from repro.core.milp_fast import reconstruct_map, solve_fast_milp
@@ -13,6 +15,7 @@ from repro.core.trace import TraceStats, clip_fragments, generate_summit_like, l
 
 __all__ = [
     "Allocator", "EqualShareAllocator", "MILPAllocator",
+    "AllocationEngine", "EngineStats", "problem_signature", "solve_greedy",
     "Fragment", "PoolEvent", "fragments_to_events", "pool_sizes",
     "Efficiency", "ROI", "eq_nodes", "resource_integral",
     "AllocationProblem", "AllocationResult", "TrainerSpec", "solve_node_milp",

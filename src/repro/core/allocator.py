@@ -10,6 +10,7 @@ from repro.core.milp import (
     AllocationProblem,
     AllocationResult,
     TrainerSpec,
+    project_current,
     solve_node_milp,
 )
 from repro.core.milp_fast import reconstruct_map, solve_fast_milp
@@ -75,8 +76,7 @@ class EqualShareAllocator(Allocator):
                         if counts[t2.id] > 0 or extra >= t2.n_min:
                             counts[t2.id] += extra
                             left -= extra
-        current = {t.id: [nid for nid in prob.current.get(t.id, [])
-                          if nid in set(nodes)] for t in trainers}
+        current = project_current(prob)
         allocation = reconstruct_map(nodes, trainers, current, counts)
         return AllocationResult(allocation=allocation, counts=counts,
                                 objective=None, wall_time=0.0,

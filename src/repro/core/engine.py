@@ -1,0 +1,194 @@
+"""AllocationEngine: memoized solver portfolio behind the Allocator
+protocol (DESIGN.md §3).
+
+Per-event allocation cost is the binding constraint for event-driven
+re-allocation at scale (MalleTrain, arXiv:2404.15668).  The engine makes it
+cheap with three layers:
+
+1. **Memoization** — solves are cached under a canonical problem signature
+   (pool size, T_fwd, per-Trainer spec + current count, node ids abstracted
+   away), so the many repeated/near-identical events in week-long traces
+   return in O(signature) time.  The cached *count vector* is re-grounded
+   onto the event's concrete node ids with ``reconstruct_map``.
+2. **Greedy first** — the water-filling heuristic (greedy.py) solves every
+   instance in microseconds and is near-optimal (see EXPERIMENTS.md
+   §Perf-Engine).
+3. **Escalation** — when the predicted solver cost fits the per-event time
+   budget, the engine escalates greedy → ``solve_fast_milp`` →
+   ``solve_node_milp`` and keeps the best objective.  The cost predictors
+   are deliberately crude linear/quadratic models; they only have to rank
+   instances as cheap/expensive.
+
+If every attempted solver fails (timeout/infeasible), the paper's §3.6
+policy applies: keep the current map (``fell_back=True``).
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.allocator import Allocator
+from repro.core.greedy import solve_greedy
+from repro.core.milp import (
+    AllocationProblem,
+    AllocationResult,
+    project_current,
+    solve_node_milp,
+)
+from repro.core.milp_fast import reconstruct_map, solve_fast_milp
+
+Signature = Tuple
+
+
+def problem_signature(prob: AllocationProblem) -> Tuple[Signature, List[int]]:
+    """Canonical, node-id-free signature of an allocation problem.
+
+    Returns ``(key, order)`` where ``order`` maps canonical position →
+    index into ``prob.trainers`` (Trainers sorted by their spec tuple, so
+    two interchangeable Trainers are interchangeable in the cache too).
+    """
+    node_set = set(prob.nodes)
+    items = []
+    for t in prob.trainers:
+        c = sum(1 for nid in prob.current.get(t.id, []) if nid in node_set)
+        items.append((t.n_min, t.n_max, round(t.r_up, 9), round(t.r_dw, 9),
+                      tuple(t.points), tuple(round(v, 9) for v in t.values),
+                      c))
+    order = sorted(range(len(items)), key=lambda i: items[i])
+    key = (len(node_set), round(prob.t_fwd, 6),
+           tuple(items[i] for i in order))
+    return key, order
+
+
+@dataclass
+class EngineStats:
+    events: int = 0
+    cache_hits: int = 0
+    greedy_solves: int = 0
+    fast_milp_solves: int = 0
+    node_milp_solves: int = 0
+    fallbacks: int = 0
+    wall_time: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(events=self.events, cache_hits=self.cache_hits,
+                    greedy_solves=self.greedy_solves,
+                    fast_milp_solves=self.fast_milp_solves,
+                    node_milp_solves=self.node_milp_solves,
+                    fallbacks=self.fallbacks, wall_time=self.wall_time)
+
+
+# Crude per-instance cost predictors (seconds), calibrated on the CPU
+# container (EXPERIMENTS.md §Perf-Engine).  They only need to *rank*
+# instances against the time budget, not predict wall time accurately.
+def _est_fast_milp(n_nodes: int, n_jobs: int) -> float:
+    return 2e-3 + 4e-4 * n_jobs + 2e-6 * n_nodes * n_jobs
+
+
+def _est_node_milp(n_nodes: int, n_jobs: int) -> float:
+    return 5e-3 + 2e-5 * n_nodes * n_nodes * max(1, n_jobs)
+
+
+class AllocationEngine(Allocator):
+    """Portfolio allocator: cache → greedy → fast MILP → node MILP."""
+
+    def __init__(self, *, time_budget: float = 0.050,
+                 use_greedy: bool = True, use_node_milp: bool = False,
+                 cache_size: int = 4096):
+        self.time_budget = time_budget
+        self.use_greedy = use_greedy
+        self.use_node_milp = use_node_milp
+        self.cache_size = cache_size
+        self.name = "engine"
+        self.stats = EngineStats()
+        self._cache: "OrderedDict[Signature, Tuple[Tuple[int, ...], Optional[float], str]]" = OrderedDict()
+
+    # ------------------------------------------------------------------
+
+    def allocate(self, prob: AllocationProblem) -> AllocationResult:
+        t0 = time.perf_counter()
+        self.stats.events += 1
+        key, order = problem_signature(prob)
+
+        cached = self._cache.get(key)
+        if cached is not None:
+            self._cache.move_to_end(key)
+            self.stats.cache_hits += 1
+            res = self._ground(prob, order, *cached)
+            res.wall_time = time.perf_counter() - t0
+            self.stats.wall_time += res.wall_time
+            return res
+
+        res = self._solve(prob)
+        if not res.fell_back:
+            counts = tuple(res.counts[prob.trainers[i].id] for i in order)
+            self._cache[key] = (counts, res.objective, res.solver_status)
+            if len(self._cache) > self.cache_size:
+                self._cache.popitem(last=False)
+        res.wall_time = time.perf_counter() - t0
+        self.stats.wall_time += res.wall_time
+        return res
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+
+    # ------------------------------------------------------------------
+
+    def _ground(self, prob: AllocationProblem, order: List[int],
+                canon_counts: Tuple[int, ...], objective: Optional[float],
+                status: str) -> AllocationResult:
+        """Re-ground a cached canonical count vector on concrete node ids."""
+        current = project_current(prob)
+        counts = {prob.trainers[i].id: canon_counts[pos]
+                  for pos, i in enumerate(order)}
+        allocation = reconstruct_map(list(prob.nodes), prob.trainers,
+                                     current, counts)
+        return AllocationResult(allocation=allocation, counts=counts,
+                                objective=objective, wall_time=0.0,
+                                solver_status=f"cache({status})")
+
+    def _solve(self, prob: AllocationProblem) -> AllocationResult:
+        n, j = len(prob.nodes), len(prob.trainers)
+        budget = self.time_budget
+        best: Optional[AllocationResult] = None
+
+        if self.use_greedy:
+            best = solve_greedy(prob)
+            self.stats.greedy_solves += 1
+
+        # Escalation gates and solver time limits use only the static cost
+        # estimators and the configured budget — never measured wall-clock —
+        # so identical problem sequences make identical decisions run-to-run.
+        if budget > 0 and _est_fast_milp(n, j) <= budget:
+            r = solve_fast_milp(prob, time_limit=max(budget, 1e-3))
+            self.stats.fast_milp_solves += 1
+            best = _better(best, r)
+
+        if self.use_node_milp and budget > 0 and \
+                _est_node_milp(n, j) <= budget:
+            r = solve_node_milp(prob, time_limit=max(budget, 1e-3))
+            self.stats.node_milp_solves += 1
+            best = _better(best, r)
+
+        if best is None or best.fell_back:
+            # §3.6: keep the current map
+            self.stats.fallbacks += 1
+            alloc = {j: sorted(ns)
+                     for j, ns in project_current(prob).items()}
+            return AllocationResult(
+                allocation=alloc,
+                counts={t.id: len(alloc[t.id]) for t in prob.trainers},
+                objective=None, wall_time=0.0,
+                solver_status="engine-fallback", fell_back=True)
+        return best
+
+
+def _better(a: Optional[AllocationResult],
+            b: AllocationResult) -> AllocationResult:
+    if b.fell_back or b.objective is None:
+        return a if a is not None else b
+    if a is None or a.fell_back or a.objective is None:
+        return b
+    return b if b.objective > a.objective else a

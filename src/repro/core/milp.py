@@ -53,6 +53,14 @@ class AllocationProblem:
     racks: Optional[Dict[int, int]] = None
 
 
+def project_current(prob: "AllocationProblem") -> Dict[int, List[int]]:
+    """Current map restricted to nodes still in the pool (nodes that left
+    were preempted; they must not appear in C when transferring state)."""
+    node_set = set(prob.nodes)
+    return {t.id: [nid for nid in prob.current.get(t.id, [])
+                   if nid in node_set] for t in prob.trainers}
+
+
 @dataclass
 class AllocationResult:
     allocation: Dict[int, List[int]]       # trainer id -> node ids
@@ -168,8 +176,7 @@ def solve_node_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
 
     if not res.success or res.x is None:
         # §3.6 fallback: keep the current map
-        alloc = {t.id: sorted(nid for nid in prob.current.get(t.id, [])
-                              if nid in node_pos) for t in trainers}
+        alloc = {j: sorted(ns) for j, ns in project_current(prob).items()}
         return AllocationResult(
             allocation=alloc,
             counts={t.id: len(alloc[t.id]) for t in trainers},

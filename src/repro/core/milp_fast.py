@@ -24,20 +24,23 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.lp import MILPBuilder, sos2_block
-from repro.core.milp import AllocationProblem, AllocationResult, TrainerSpec
+from repro.core.milp import (
+    AllocationProblem,
+    AllocationResult,
+    TrainerSpec,
+    project_current,
+)
 
 
 def solve_fast_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
                     ) -> AllocationResult:
     nodes = list(prob.nodes)
     n = len(nodes)
-    node_set = set(nodes)
     trainers = prob.trainers
     j_cnt = len(trainers)
     big_m = n + 1
 
-    current = {t.id: [nid for nid in prob.current.get(t.id, [])
-                      if nid in node_set] for t in trainers}
+    current = project_current(prob)
     c_count = {t.id: len(current[t.id]) for t in trainers}
 
     b = MILPBuilder()

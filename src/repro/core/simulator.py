@@ -14,6 +14,7 @@ Semantics (paper §2.1/§3.4):
 """
 from __future__ import annotations
 
+import bisect
 import heapq
 import itertools
 from dataclasses import dataclass, field
@@ -96,7 +97,7 @@ class Simulator:
     def __init__(self, events: Sequence[PoolEvent], jobs: Sequence[TrainerJob],
                  allocator: Allocator, *, t_fwd=120.0,
                  pj_max: int = 10, horizon: Optional[float] = None,
-                 sos2_points: int = 8):
+                 sos2_points: int = 8, coalesce_window: float = 0.0):
         self.events = sorted(events, key=lambda e: e.time)
         self.jobs = sorted(jobs, key=lambda j: (j.arrival, j.id))
         self.allocator = allocator
@@ -111,6 +112,11 @@ class Simulator:
         self.pj_max = pj_max
         self.horizon = horizon
         self.sos2_points = sos2_points
+        # coalesce_window > 0: defer re-allocation while further pool events
+        # land within the window, so a join/leave burst triggers one solve
+        # instead of N (DESIGN.md §3.4).  Preemption of departed nodes is
+        # never deferred — only the hand-out of new assignments is.
+        self.coalesce_window = coalesce_window
 
     # ------------------------------------------------------------------
 
@@ -132,10 +138,12 @@ class Simulator:
                              0.0, 0.0)
         t_end = self.horizon if self.horizon is not None else times[-1]
 
+        ev_times = [e.time for e in self.events]
         i = 0
         now = times[0]
         n_events = 0
         pending_realloc = True
+        pending_since: Optional[float] = None
         while now < t_end and (i < len(times) or active or queue):
             # 1) apply pool event at `now`, if any
             ev = ev_by_time.get(now)
@@ -165,9 +173,26 @@ class Simulator:
                 active.append(job)
                 pending_realloc = True
             # drop arrivals in the future from consideration now
-            # 3) reallocate
+            # 3) reallocate — unless a coalescing window says another pool
+            #    event is imminent, in which case defer (bounded by one
+            #    window from the first deferred event)
             realloc_cost_samples = 0.0
-            if pending_realloc and active:
+            ev_solver_wall = 0.0
+            defer = False
+            if pending_realloc and pending_since is None:
+                pending_since = now
+            if pending_realloc and self.coalesce_window > 0.0:
+                k = bisect.bisect_right(ev_times, now)
+                nxt_ev = ev_times[k] if k < len(ev_times) else None
+                # never defer while a preemption left a Trainer below its
+                # minimum size — running there violates Eqn 4 feasibility
+                feasible = all(len(j.nodes) == 0 or len(j.nodes) >= j.n_min
+                               for j in active)
+                if feasible and nxt_ev is not None and nxt_ev < t_end and \
+                        nxt_ev - now <= self.coalesce_window and \
+                        now - pending_since < self.coalesce_window:
+                    defer = True
+            if pending_realloc and active and not defer:
                 t_fwd = (self.t_fwd_estimator.estimate()
                          if self.t_fwd_estimator is not None else self.t_fwd)
                 prob = AllocationProblem(
@@ -178,6 +203,7 @@ class Simulator:
                 )
                 res = self.allocator.allocate(prob)
                 solver_wall += res.wall_time
+                ev_solver_wall = res.wall_time
                 for j in active:
                     new_nodes = res.allocation.get(j.id, [])
                     old = len(j.nodes)
@@ -194,7 +220,9 @@ class Simulator:
                     if j.nodes and j.started_at is None:
                         j.started_at = now
                 n_events += 1
-            pending_realloc = False
+            if not defer:
+                pending_realloc = False
+                pending_since = None
 
             # 4) integrate progress to the next timeline point (or a job
             #    completion, whichever comes first)
@@ -224,7 +252,7 @@ class Simulator:
             records.append(EventRecord(
                 time=now, pool_size=len(pool),
                 rescale_cost_samples=realloc_cost_samples,
-                outcome_until_next=outcome, solver_wall=0.0))
+                outcome_until_next=outcome, solver_wall=ev_solver_wall))
 
             # 5) retire finished jobs
             newly_done = [j for j in active if j.finished]
