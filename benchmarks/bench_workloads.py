@@ -1,0 +1,86 @@
+"""Scenario sweep: the AllocationEngine portfolio across the workload
+library (repro/sched/scenarios.py).
+
+For every scenario the batch-scheduler simulation emits its
+unfillable-hole trace; we replay it in the BFTrainer ``Simulator`` under
+each allocator and report utilization efficiency U = A_e / A_s against
+the dedicated-eq-nodes baseline (paper §4.1.2), plus solver wall time
+and engine cache behavior — how per-event allocation cost holds up as
+trace churn varies (MalleTrain's sensitivity axis).
+
+``--smoke`` (or ``BENCH_SMOKE=1``) shrinks every scenario for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Sequence
+
+from benchmarks.common import FULL, diverse_jobs, efficiency, emit
+from repro.core import AllocationEngine, EqualShareAllocator, \
+    fragments_to_events
+from repro.sched import SCENARIOS, build_scenario
+
+
+def _allocators():
+    return (
+        ("engine", lambda: AllocationEngine(time_budget=0.050)),
+        ("equal-share", lambda: EqualShareAllocator()),
+    )
+
+
+def run_scenario(name: str, scale: float, seed: int = 7,
+                 t_fwd: float = 120.0) -> None:
+    sc = build_scenario(name, scale=scale, seed=seed)
+    st = sc.stats
+    emit(f"workloads/{name}/n_nodes", sc.n_nodes)
+    emit(f"workloads/{name}/fragments", st.n_fragments)
+    emit(f"workloads/{name}/events_per_hour", f"{st.events_per_hour:.1f}")
+    emit(f"workloads/{name}/idle_fraction", f"{st.idle_fraction:.3f}")
+    emit(f"workloads/{name}/pct_fragments_short",
+         f"{st.pct_fragments_short:.2f}")
+    emit(f"workloads/{name}/sched_utilization",
+         f"{sc.sched.utilization:.3f}")
+    emit(f"workloads/{name}/sched_backfilled", sc.sched.n_backfilled)
+
+    events = fragments_to_events(sc.fragments)
+    # enough Trainers and work that the idle pool stays saturated — U then
+    # measures allocation quality, not early completion
+    n_jobs = max(4, int(round(st.eq_nodes / 3)))
+    jobs_fn = lambda: diverse_jobs(n=n_jobs, work=1e12, seed=seed)
+    for alloc_name, mk in _allocators():
+        alloc = mk()
+        rep, u = efficiency(events, jobs_fn, sc.duration, alloc,
+                            t_fwd=t_fwd)
+        emit(f"workloads/{name}/{alloc_name}/efficiency_u", f"{u:.3f}",
+             "vs dedicated eq-nodes")
+        emit(f"workloads/{name}/{alloc_name}/solver_wall_s",
+             f"{rep.solver_wall_total:.3f}")
+        emit(f"workloads/{name}/{alloc_name}/events",
+             rep.events_processed)
+        if isinstance(alloc, AllocationEngine):
+            s = alloc.stats
+            hit = s.cache_hits / s.events if s.events else 0.0
+            emit(f"workloads/{name}/{alloc_name}/cache_hit_rate",
+                 f"{hit:.2f}")
+
+
+def main(argv: Sequence[str] = ()) -> None:
+    # default () — benchmarks.run calls main() with section names still in
+    # sys.argv, so only the __main__ guard forwards the real CLI args
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scenarios for CI smoke runs")
+    ap.add_argument("--scenario", action="append", choices=sorted(SCENARIOS),
+                    help="restrict to named scenario(s)")
+    args = ap.parse_args(argv)
+    smoke = args.smoke or bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    scale = 0.15 if smoke else (1.0 if FULL else 0.5)
+    names = args.scenario or sorted(SCENARIOS)
+    for name in names:
+        run_scenario(name, scale=scale)
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

@@ -18,6 +18,8 @@ SECTIONS = [
      "benchmarks.bench_week"),
     ("objective", "Figs 12-13 + Tabs 3-4: objective metrics",
      "benchmarks.bench_objective"),
+    ("workloads", "Scenario library: engine efficiency per workload profile",
+     "benchmarks.bench_workloads"),
     ("pjmax", "Fig 14: max parallel Trainers", "benchmarks.bench_pjmax"),
     ("scalability", "Fig 15: per-DNN scalability", "benchmarks.bench_scalability"),
     ("rescale_cost", "Fig 16: rescale-cost sweep", "benchmarks.bench_rescale_cost"),

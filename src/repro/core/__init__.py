@@ -3,7 +3,14 @@
 # BFTrainer scheduler/simulator around it.
 from repro.core.allocator import Allocator, EqualShareAllocator, MILPAllocator
 from repro.core.engine import AllocationEngine, EngineStats, problem_signature
-from repro.core.events import Fragment, PoolEvent, fragments_to_events, pool_sizes
+from repro.core.events import (
+    Fragment,
+    PoolEvent,
+    fragments_to_events,
+    merge_fragments,
+    pool_sizes,
+    validate_fragments,
+)
 from repro.core.greedy import solve_greedy
 from repro.core.metrics import Efficiency, ROI, eq_nodes, resource_integral
 from repro.core.milp import AllocationProblem, AllocationResult, TrainerSpec, solve_node_milp
@@ -16,7 +23,8 @@ from repro.core.trace import TraceStats, clip_fragments, generate_summit_like, l
 __all__ = [
     "Allocator", "EqualShareAllocator", "MILPAllocator",
     "AllocationEngine", "EngineStats", "problem_signature", "solve_greedy",
-    "Fragment", "PoolEvent", "fragments_to_events", "pool_sizes",
+    "Fragment", "PoolEvent", "fragments_to_events", "merge_fragments",
+    "pool_sizes", "validate_fragments",
     "Efficiency", "ROI", "eq_nodes", "resource_integral",
     "AllocationProblem", "AllocationResult", "TrainerSpec", "solve_node_milp",
     "reconstruct_map", "solve_fast_milp",

@@ -50,3 +50,45 @@ def pool_sizes(events: Sequence[PoolEvent]) -> List[Tuple[float, int]]:
         size += len(e.joined) - len(e.left)
         out.append((e.time, size))
     return out
+
+
+def validate_fragments(fragments: Iterable[Fragment]) -> None:
+    """Raise ``ValueError`` on malformed fragments.
+
+    Checks the invariants every trace producer must uphold: ``end > start``,
+    non-negative node ids, and no two fragments of the same node overlapping
+    (overlaps would double-count a node in the idle pool).
+    """
+    last_end: Dict[int, float] = {}
+    for f in sorted(fragments, key=lambda f: (f.node, f.start)):
+        if f.node < 0:
+            raise ValueError(f"fragment has negative node id: {f}")
+        if not f.end > f.start:
+            raise ValueError(f"fragment has end <= start: {f}")
+        prev = last_end.get(f.node)
+        if prev is not None and f.start < prev:
+            raise ValueError(
+                f"fragments overlap on node {f.node}: "
+                f"[{f.start}, {f.end}) starts before {prev}")
+        last_end[f.node] = f.end
+
+
+def merge_fragments(fragments: Iterable[Fragment],
+                    gap: float = 0.0) -> List[Fragment]:
+    """Merge same-node fragments separated by at most ``gap`` seconds."""
+    by_node: Dict[int, List[Fragment]] = {}
+    for f in fragments:
+        by_node.setdefault(f.node, []).append(f)
+    out: List[Fragment] = []
+    for node, frs in by_node.items():
+        frs.sort(key=lambda f: f.start)
+        cur_s, cur_e = frs[0].start, frs[0].end
+        for f in frs[1:]:
+            if f.start <= cur_e + gap:
+                cur_e = max(cur_e, f.end)
+            else:
+                out.append(Fragment(node=node, start=cur_s, end=cur_e))
+                cur_s, cur_e = f.start, f.end
+        out.append(Fragment(node=node, start=cur_s, end=cur_e))
+    out.sort(key=lambda f: (f.start, f.node))
+    return out

@@ -15,13 +15,19 @@ with access to scheduler logs.
 from __future__ import annotations
 
 import csv
+import gzip
 import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.events import Fragment, PoolEvent, fragments_to_events
+from repro.core.events import (
+    Fragment,
+    PoolEvent,
+    fragments_to_events,
+    validate_fragments,
+)
 
 # Mixture calibration (seconds).  Short fragments: median ~3 min; long:
 # median ~1.4 h.  Busy periods tuned for ~9% idle fraction.
@@ -57,14 +63,46 @@ def generate_summit_like(n_nodes: int = 1024, duration: float = 7 * 86400.0,
     return fragments
 
 
-def load_trace_csv(path: str) -> List[Fragment]:
-    """Load fragments from a ``node,start,end`` CSV (real scheduler logs)."""
+def open_maybe_gz(path, mode: str = "rt"):
+    """Open a text file, transparently gunzipping ``.gz`` paths."""
+    p = str(path)
+    return gzip.open(p, mode) if p.endswith(".gz") else open(p, mode)
+
+
+def load_trace_csv(path: str, *, validate: bool = True) -> List[Fragment]:
+    """Load fragments from a ``node,start,end`` CSV (real scheduler logs).
+
+    Accepts plain or gzipped (``.gz``) files.  Each row is validated —
+    integer non-negative node id, ``end > start`` — and malformed rows
+    raise ``ValueError`` naming the offending line, rather than silently
+    corrupting the pool replay downstream.  ``validate=True`` additionally
+    rejects overlapping per-node fragments.
+    """
     out = []
-    with open(path) as f:
-        for row in csv.DictReader(f):
-            out.append(Fragment(node=int(row["node"]),
-                                start=float(row["start"]),
-                                end=float(row["end"])))
+    with open_maybe_gz(path) as f:
+        reader = csv.DictReader(f)
+        missing = {"node", "start", "end"} - set(reader.fieldnames or ())
+        if missing:
+            raise ValueError(
+                f"{path}: missing column(s) {sorted(missing)} "
+                f"(header must contain node,start,end)")
+        for lineno, row in enumerate(reader, start=2):
+            try:
+                node = int(row["node"])
+                start = float(row["start"])
+                end = float(row["end"])
+            except (TypeError, ValueError) as exc:
+                raise ValueError(
+                    f"{path}:{lineno}: malformed row {row}: {exc}") from exc
+            if node < 0:
+                raise ValueError(
+                    f"{path}:{lineno}: negative node id {node}")
+            if not end > start:
+                raise ValueError(
+                    f"{path}:{lineno}: end ({end}) must be > start ({start})")
+            out.append(Fragment(node=node, start=start, end=end))
+    if validate:
+        validate_fragments(out)
     out.sort(key=lambda fr: (fr.start, fr.node))
     return out
 
@@ -113,3 +151,18 @@ def clip_fragments(fragments: Sequence[Fragment], t0: float,
         if e > s:
             out.append(Fragment(node=f.node, start=s, end=e))
     return out
+
+
+# Scheduler-derived traces (repro.sched) are re-exported here lazily so
+# ``repro.core.trace`` stays the one-stop module for obtaining a trace;
+# a top-level import would be circular (sched computes its TraceStats
+# through this module).
+_SCHED_REEXPORTS = ("SCENARIOS", "build_scenario", "all_scenarios",
+                    "simulate_schedule", "synthetic_workload")
+
+
+def __getattr__(name):
+    if name in _SCHED_REEXPORTS:
+        import repro.sched as _sched
+        return getattr(_sched, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

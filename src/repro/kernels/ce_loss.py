@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 NEG_INF = -2.0 ** 30
 
 
@@ -93,7 +95,7 @@ def ce_loss(x: jax.Array, table: jax.Array, labels: jax.Array, *,
             pltpu.VMEM((block_rows,), jnp.float32),
             pltpu.VMEM((block_rows,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, table, labels)

@@ -1,0 +1,16 @@
+"""Version tolerance for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` in
+newer releases; the container pins an older jax.  ``tpu_compiler_params``
+resolves whichever name exists so the kernels run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    return _COMPILER_PARAMS(**kwargs)

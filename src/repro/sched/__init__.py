@@ -1,0 +1,34 @@
+# Workload subsystem: turns batch-job logs (real SWF or synthetic) into
+# the unfillable-hole traces BFTrainer consumes, via an FCFS+EASY
+# backfill scheduler simulation, plus a library of named scenarios.
+from repro.sched.backfill import (
+    BLOCKED,
+    LOW_LOAD,
+    Hole,
+    JobRecord,
+    SchedResult,
+    SchedStats,
+    simulate_schedule,
+)
+from repro.sched.scenarios import (
+    SCENARIOS,
+    Scenario,
+    all_scenarios,
+    build_scenario,
+)
+from repro.sched.swf import (
+    BatchJob,
+    dump_swf,
+    mean_size,
+    offered_load,
+    parse_swf,
+    synthetic_workload,
+)
+
+__all__ = [
+    "BLOCKED", "LOW_LOAD", "Hole", "JobRecord", "SchedResult", "SchedStats",
+    "simulate_schedule",
+    "SCENARIOS", "Scenario", "all_scenarios", "build_scenario",
+    "BatchJob", "dump_swf", "mean_size", "offered_load", "parse_swf",
+    "synthetic_workload",
+]

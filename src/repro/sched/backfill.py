@@ -1,0 +1,296 @@
+"""Event-driven FCFS + EASY-backfill batch-scheduler simulation.
+
+This is the layer that *produces* the idle-node traces BFTrainer
+consumes.  A hole in the cluster is **backfillable** when some queued job
+fits it (enough free nodes now, and — per EASY — it either finishes by
+the head job's reservation or only uses nodes the reservation doesn't
+need).  The simulator places those jobs, so they never surface as idle
+time.  Everything that remains — holes too small or too short for every
+queued job, and low-load idle with an empty queue — is **unfillable** by
+the batch scheduler and is emitted as per-node ``Fragment``s (paper §2:
+the resource BFTrainer harvests).
+
+Scheduling semantics (classic EASY, Lifka '95):
+
+* jobs start in FCFS order while the queue head fits the free nodes;
+* when the head doesn't fit, it gets a *reservation* at the shadow time
+  (earliest time enough nodes free, computed from running jobs'
+  **requested** walltimes — the scheduler never knows actual runtimes);
+* later jobs may backfill now iff they fit the free nodes and either
+  (a) their requested walltime ends by the shadow time, or (b) they use
+  no more than the ``extra`` nodes the reservation leaves over;
+* nodes actually free up at the **actual** runtime, which is how
+  walltime overestimation manufactures holes.
+
+Maintenance drains (``drains=[(start, end), ...]``) reserve the whole
+machine: no job may overlap a drain window, so the ramp-down ahead of a
+drain produces the paper's large sawtooth holes.  Drain node-time itself
+is *excluded* from the emitted fragments (the nodes are down, not idle).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.events import Fragment, merge_fragments, validate_fragments
+from repro.sched.swf import BatchJob
+
+BLOCKED = "blocked"       # queue non-empty: hole unfillable for every queued job
+LOW_LOAD = "low-load"     # queue empty: nothing submitted to fill the hole
+
+
+@dataclass(frozen=True)
+class Hole:
+    """One contiguous unfillable idle interval on one node."""
+
+    fragment: Fragment
+    blocked_frac: float     # share of the interval with a non-empty queue
+
+    @property
+    def kind(self) -> str:
+        return BLOCKED if self.blocked_frac >= 0.5 else LOW_LOAD
+
+
+@dataclass
+class JobRecord:
+    job: BatchJob
+    start: float
+    end: float                  # start + actual runtime
+    nodes: Tuple[int, ...]
+    backfilled: bool
+
+    @property
+    def wait(self) -> float:
+        return self.start - self.job.submit
+
+
+@dataclass
+class SchedStats:
+    n_nodes: int
+    duration: float
+    n_jobs: int
+    n_started: int
+    n_backfilled: int
+    n_rejected: int
+    n_unstarted: int
+    utilization: float          # busy node-time / (total - drain) node-time
+    idle_fraction: float        # unfillable node-time / total node-time
+    blocked_share: float        # of unfillable node-time, share queue-blocked
+    drain_nodetime: float
+    mean_wait: float
+    max_wait: float
+
+
+@dataclass
+class SchedResult:
+    n_nodes: int
+    t_end: float
+    records: List[JobRecord]
+    rejected: List[BatchJob]
+    unstarted: List[BatchJob]
+    holes: List[Hole]
+    stats: SchedStats
+
+    def fragments(self, *, min_length: float = 0.0,
+                  kinds: Sequence[str] = (BLOCKED, LOW_LOAD)
+                  ) -> List[Fragment]:
+        """The unfillable-hole trace, ready for ``fragments_to_events``."""
+        out = [h.fragment for h in self.holes
+               if h.kind in kinds and h.fragment.length >= min_length]
+        out.sort(key=lambda f: (f.start, f.node))
+        return out
+
+
+def _overlap(a0: float, a1: float, b0: float, b1: float) -> float:
+    return max(0.0, min(a1, b1) - max(a0, b0))
+
+
+def simulate_schedule(jobs: Sequence[BatchJob], n_nodes: int, *,
+                      horizon: Optional[float] = None,
+                      drains: Sequence[Tuple[float, float]] = (),
+                      min_fragment: float = 0.0) -> SchedResult:
+    """Run FCFS+EASY over ``jobs`` on ``n_nodes`` and emit the holes.
+
+    ``horizon`` clips the simulation (jobs submitted after it are ignored,
+    trailing idle runs to it); without it the simulation ends at the last
+    job completion.  ``min_fragment`` drops emitted holes shorter than the
+    given seconds (holes BFTrainer could never amortize).
+    """
+    drains = sorted((float(s), float(e)) for s, e in drains if e > s)
+    for (s0, e0), (s1, e1) in zip(drains, drains[1:]):
+        if s1 < e0:
+            raise ValueError("drain windows overlap")
+    jobs = sorted(jobs, key=lambda j: (j.submit, j.id))
+    if horizon is not None:
+        jobs = [j for j in jobs if j.submit < horizon]
+
+    free = set(range(n_nodes))
+    free_since = {n: 0.0 for n in range(n_nodes)}
+    raw_holes: List[Fragment] = []
+    queue: List[BatchJob] = []
+    running: List[JobRecord] = []
+    records: List[JobRecord] = []
+    rejected: List[BatchJob] = []
+
+    # event heap: (time, seq, kind, payload); kinds: 0 completion frees
+    # nodes, 1 arrival enqueues, 2 bare scheduling tick (drain ends)
+    seq = 0
+    heap: List[Tuple[float, int, int, object]] = []
+    for j in jobs:
+        heapq.heappush(heap, (j.submit, seq, 1, j)); seq += 1
+    for _, e in drains:
+        if horizon is None or e < horizon:
+            heapq.heappush(heap, (e, seq, 2, None)); seq += 1
+
+    blocked_segs: List[Tuple[float, float]] = []
+    blocked_since: Optional[float] = None
+
+    def _fits_drains(t: float, wall: float) -> bool:
+        return all(not (t < de and t + wall > ds) for ds, de in drains)
+
+    def _start(job: BatchJob, t: float, backfilled: bool) -> None:
+        nonlocal seq
+        chosen = tuple(sorted(free)[:job.nodes])
+        for n in chosen:
+            free.discard(n)
+            if t > free_since[n]:
+                raw_holes.append(Fragment(node=n, start=free_since[n], end=t))
+        rec = JobRecord(job=job, start=t, end=t + job.runtime,
+                        nodes=chosen, backfilled=backfilled)
+        running.append(rec)
+        records.append(rec)
+        heapq.heappush(heap, (rec.end, seq, 0, rec)); seq += 1
+
+    def _schedule(t: float) -> None:
+        # FCFS: start queue heads while they fit
+        while queue:
+            head = queue[0]
+            if head.nodes > n_nodes:
+                rejected.append(queue.pop(0))
+                continue
+            if head.nodes <= len(free) and _fits_drains(t, head.walltime):
+                _start(queue.pop(0), t, backfilled=False)
+            else:
+                break
+        if not queue:
+            return
+        head = queue[0]
+        # head's reservation (shadow time): earliest node availability per
+        # running jobs' *requested* end times, then pushed past any drain
+        # the head cannot straddle
+        if head.nodes <= len(free):
+            shadow, extra = t, len(free) - head.nodes   # drain-blocked only
+        else:
+            avail = len(free)
+            shadow, extra = math.inf, 0
+            for req_end, cnt in sorted((r.start + r.job.walltime,
+                                        len(r.nodes)) for r in running):
+                avail += cnt
+                if avail >= head.nodes:
+                    shadow, extra = req_end, avail - head.nodes
+                    break
+        moved = True
+        while moved and math.isfinite(shadow):
+            moved = False
+            for ds, de in drains:
+                if shadow < de and shadow + head.walltime > ds:
+                    shadow, moved = de, True
+        # EASY backfill pass over the rest of the queue, FCFS order
+        for job in list(queue[1:]):
+            if not free:
+                break
+            if job.nodes > len(free) or not _fits_drains(t, job.walltime):
+                continue
+            fits_window = t + job.walltime <= shadow
+            if fits_window or job.nodes <= extra:
+                if not fits_window:
+                    extra -= job.nodes
+                queue.remove(job)
+                _start(job, t, backfilled=True)
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+    t_last = 0.0
+    while heap:
+        t = heap[0][0]
+        if horizon is not None and t >= horizon:
+            break
+        while heap and heap[0][0] == t:
+            _, _, kind, payload = heapq.heappop(heap)
+            if kind == 0:
+                rec = payload
+                running.remove(rec)
+                for n in rec.nodes:
+                    free.add(n)
+                    free_since[n] = t
+            elif kind == 1:
+                queue.append(payload)
+        _schedule(t)
+        now_blocked = bool(queue)
+        if now_blocked and blocked_since is None:
+            blocked_since = t
+        elif not now_blocked and blocked_since is not None:
+            blocked_segs.append((blocked_since, t))
+            blocked_since = None
+        t_last = t
+
+    t_end = horizon if horizon is not None else t_last
+    if blocked_since is not None:
+        blocked_segs.append((blocked_since, t_end))
+    for n in free:
+        if t_end > free_since[n]:
+            raw_holes.append(Fragment(node=n, start=free_since[n], end=t_end))
+    unstarted = list(queue)
+
+    # subtract drain windows, classify by queue-blocked overlap
+    holes: List[Hole] = []
+    for f in merge_fragments(raw_holes):
+        pieces = [(max(f.start, 0.0), min(f.end, t_end))]
+        for ds, de in drains:
+            nxt = []
+            for s, e in pieces:
+                if e <= ds or s >= de:
+                    nxt.append((s, e))
+                else:
+                    if s < ds:
+                        nxt.append((s, ds))
+                    if de < e:
+                        nxt.append((de, e))
+            pieces = nxt
+        for s, e in pieces:
+            if e - s <= 0.0 or e - s < min_fragment:
+                continue
+            blocked = sum(_overlap(s, e, b0, b1) for b0, b1 in blocked_segs)
+            holes.append(Hole(fragment=Fragment(node=f.node, start=s, end=e),
+                              blocked_frac=blocked / (e - s)))
+    holes.sort(key=lambda h: (h.fragment.start, h.fragment.node))
+    validate_fragments([h.fragment for h in holes])
+
+    # ------------------------------------------------------------------
+    # stats
+    # ------------------------------------------------------------------
+    busy = sum(len(r.nodes) * max(0.0, min(r.end, t_end) - r.start)
+               for r in records)
+    drain_nt = n_nodes * sum(_overlap(s, e, 0.0, t_end) for s, e in drains)
+    idle = sum(h.fragment.length for h in holes)
+    blocked_nt = sum(h.fragment.length * h.blocked_frac for h in holes)
+    total_nt = n_nodes * t_end if t_end > 0 else 0.0
+    waits = [r.wait for r in records]
+    stats = SchedStats(
+        n_nodes=n_nodes, duration=t_end,
+        n_jobs=len(jobs), n_started=len(records),
+        n_backfilled=sum(1 for r in records if r.backfilled),
+        n_rejected=len(rejected), n_unstarted=len(unstarted),
+        utilization=busy / (total_nt - drain_nt) if total_nt > drain_nt else 0.0,
+        idle_fraction=idle / total_nt if total_nt else 0.0,
+        blocked_share=blocked_nt / idle if idle else 0.0,
+        drain_nodetime=drain_nt,
+        mean_wait=float(sum(waits) / len(waits)) if waits else 0.0,
+        max_wait=float(max(waits)) if waits else 0.0,
+    )
+    return SchedResult(n_nodes=n_nodes, t_end=t_end, records=records,
+                       rejected=rejected, unstarted=unstarted,
+                       holes=holes, stats=stats)

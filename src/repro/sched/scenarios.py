@@ -1,0 +1,217 @@
+"""Scenario library: named cluster/workload profiles → unfillable-hole
+traces.
+
+Each builder synthesizes a job log (``swf.synthetic_workload``), runs it
+through the FCFS+EASY simulator (``backfill.simulate_schedule``) and
+returns a ``Scenario`` carrying the per-node unfillable fragments plus
+the shared ``TraceStats`` (core/trace.py) — directly consumable by
+``fragments_to_events`` → ``Simulator`` / ``AllocationEngine``.
+
+``scale`` shrinks node count and (except the weekly profile) duration so
+tests and ``--smoke`` benchmarks stay cheap; submission rates re-derive
+from the target offered load, so the *character* of each scenario is
+scale-invariant.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterator, List, Sequence, Tuple
+
+from repro.core.events import Fragment
+from repro.core.trace import TraceStats, trace_stats
+from repro.sched.backfill import SchedResult, SchedStats, simulate_schedule
+from repro.sched.swf import BatchJob, synthetic_workload
+
+_HOUR = 3600.0
+_DAY = 86400.0
+
+
+@dataclass
+class Scenario:
+    name: str
+    description: str
+    n_nodes: int
+    duration: float
+    fragments: List[Fragment]       # the unfillable-hole trace
+    stats: TraceStats               # shared trace statistics
+    sched: SchedStats               # batch-scheduler-side statistics
+    result: SchedResult             # full simulation (records, holes, ...)
+
+
+def _interarrival(load: float, mean_nodes: float, mean_runtime: float,
+                  n_nodes: int) -> float:
+    """Mean interarrival achieving the target offered load."""
+    return mean_nodes * mean_runtime / (load * n_nodes)
+
+
+def _lognormal_mean(median: float, sigma: float) -> float:
+    return median * math.exp(sigma * sigma / 2.0)
+
+
+def _build(name: str, description: str, *, n_nodes: int, duration: float,
+           seed: int, drains: Sequence[Tuple[float, float]] = (),
+           min_fragment: float = 0.0, **wl) -> Scenario:
+    jobs = synthetic_workload(duration=duration, seed=seed, **wl)
+    res = simulate_schedule(jobs, n_nodes, horizon=duration, drains=drains,
+                            min_fragment=min_fragment)
+    frags = res.fragments()
+    return Scenario(name=name, description=description, n_nodes=n_nodes,
+                    duration=duration, fragments=frags,
+                    stats=trace_stats(frags, n_nodes, duration),
+                    sched=res.stats, result=res)
+
+
+def _dims(base_nodes: int, base_hours: float, scale: float,
+          *, fixed_duration: bool = False) -> Tuple[int, float]:
+    n = max(8, int(round(base_nodes * scale)))
+    hours = base_hours if fixed_duration else max(4.0, base_hours * scale)
+    return n, hours * _HOUR
+
+
+# ---------------------------------------------------------------------------
+# Profiles
+# ---------------------------------------------------------------------------
+
+
+def capability(scale: float = 1.0, seed: int = 0) -> Scenario:
+    """Summit-like capability mix: few large, long jobs; holes appear when
+    a wide head job drains the machine waiting for its reservation."""
+    n, dur = _dims(128, 24.0, scale)
+    keep = [(s, w) for s, w in zip((8, 16, 32, 64),
+                                   (0.35, 0.30, 0.25, 0.10)) if s <= n]
+    sizes = tuple(s for s, _ in keep)
+    weights = tuple(w for _, w in keep)
+    mean_nodes = sum(s * w for s, w in keep) / sum(weights)
+    rt_med, rt_sig = 4 * _HOUR, 0.8
+    return _build(
+        "capability", "capability cluster, large long jobs, load ~0.9",
+        n_nodes=n, duration=dur, seed=seed,
+        mean_interarrival=_interarrival(0.9, mean_nodes,
+                                        _lognormal_mean(rt_med, rt_sig), n),
+        size_choices=sizes, size_weights=weights,
+        runtime_median=rt_med, runtime_sigma=rt_sig,
+        overestimate=2.0)
+
+
+def capacity(scale: float = 1.0, seed: int = 0) -> Scenario:
+    """Capacity cluster: many small short jobs — high event churn, mostly
+    short fragments (the MalleTrain-style stress case)."""
+    n, dur = _dims(64, 24.0, scale)
+    sizes, weights = (1, 2, 4), (0.5, 0.3, 0.2)
+    mean_nodes = sum(s * w for s, w in zip(sizes, weights))
+    rt_med, rt_sig = 0.5 * _HOUR, 1.0
+    return _build(
+        "capacity", "capacity cluster, many small short jobs, load ~0.85",
+        n_nodes=n, duration=dur, seed=seed,
+        mean_interarrival=_interarrival(0.85, mean_nodes,
+                                        _lognormal_mean(rt_med, rt_sig), n),
+        size_choices=sizes, size_weights=weights,
+        runtime_median=rt_med, runtime_sigma=rt_sig,
+        overestimate=2.0)
+
+
+def bursty(scale: float = 1.0, seed: int = 0) -> Scenario:
+    """Submission storms: a quiet Poisson base overlaid with bursts of
+    jobs every ~2 h — alternating deep backlog and post-storm holes."""
+    n, dur = _dims(64, 24.0, scale)
+    sizes, weights = (1, 2, 4, 8), (0.4, 0.3, 0.2, 0.1)
+    mean_nodes = sum(s * w for s, w in zip(sizes, weights))
+    rt_med, rt_sig = 0.5 * _HOUR, 0.9
+    return _build(
+        "bursty", "burst storms every ~2h over a light Poisson base",
+        n_nodes=n, duration=dur, seed=seed,
+        mean_interarrival=_interarrival(0.35, mean_nodes,
+                                        _lognormal_mean(rt_med, rt_sig), n),
+        size_choices=sizes, size_weights=weights,
+        runtime_median=rt_med, runtime_sigma=rt_sig,
+        burst_every=2 * _HOUR, burst_size=max(8, int(round(0.4 * n))),
+        overestimate=2.0)
+
+
+def maintenance(scale: float = 1.0, seed: int = 0) -> Scenario:
+    """Periodic maintenance drains: no job may straddle a window, so the
+    ramp-down ahead of each drain yields wide sawtooth holes."""
+    n, dur = _dims(96, 24.0, scale)
+    hours = dur / _HOUR
+    drains = [(s * _HOUR, (s + 1.0) * _HOUR)
+              for s in _drain_starts(hours)]
+    sizes, weights = (2, 4, 8, 16), (0.3, 0.3, 0.25, 0.15)
+    mean_nodes = sum(s * w for s, w in zip(sizes, weights))
+    rt_med, rt_sig = 1.5 * _HOUR, 0.8
+    return _build(
+        "maintenance", "1h machine drains with pre-drain ramp-down holes",
+        n_nodes=n, duration=dur, seed=seed, drains=drains,
+        mean_interarrival=_interarrival(0.85, mean_nodes,
+                                        _lognormal_mean(rt_med, rt_sig), n),
+        size_choices=sizes, size_weights=weights,
+        runtime_median=rt_med, runtime_sigma=rt_sig,
+        overestimate=2.0)
+
+
+def _drain_starts(hours: float) -> List[float]:
+    """One 1h drain every ~8h, placed away from the trace edges."""
+    starts, s = [], 6.0
+    while s + 1.0 < hours:
+        starts.append(s)
+        s += 8.0
+    return starts or [max(1.0, hours / 2.0)]
+
+
+def weekend(scale: float = 1.0, seed: int = 0) -> Scenario:
+    """Low-load weekends: a full synthetic week with day/night/weekend
+    submission-rate modulation — long low-load holes, mostly queue-empty."""
+    n, dur = _dims(32, 7 * 24.0, scale, fixed_duration=True)
+    sizes, weights = (1, 2, 4, 8), (0.4, 0.3, 0.2, 0.1)
+    mean_nodes = sum(s * w for s, w in zip(sizes, weights))
+    rt_med, rt_sig = 1.0 * _HOUR, 0.9
+    return _build(
+        "weekend", "7-day trace, weekday/weekend modulated submissions",
+        n_nodes=n, duration=dur, seed=seed,
+        mean_interarrival=_interarrival(0.75, mean_nodes,
+                                        _lognormal_mean(rt_med, rt_sig), n),
+        size_choices=sizes, size_weights=weights,
+        runtime_median=rt_med, runtime_sigma=rt_sig,
+        weekly_modulation=True, overestimate=2.0)
+
+
+def overestimate(scale: float = 1.0, seed: int = 0) -> Scenario:
+    """High walltime overestimation (~8x): EASY turns conservative, so
+    backfill misses holes that were in fact usable — more unfillable
+    node-time at the same load."""
+    n, dur = _dims(64, 24.0, scale)
+    sizes, weights = (1, 2, 4, 8), (0.35, 0.3, 0.2, 0.15)
+    mean_nodes = sum(s * w for s, w in zip(sizes, weights))
+    rt_med, rt_sig = 0.75 * _HOUR, 0.9
+    return _build(
+        "overestimate", "8x requested-walltime overestimation",
+        n_nodes=n, duration=dur, seed=seed,
+        mean_interarrival=_interarrival(0.85, mean_nodes,
+                                        _lognormal_mean(rt_med, rt_sig), n),
+        size_choices=sizes, size_weights=weights,
+        runtime_median=rt_med, runtime_sigma=rt_sig,
+        overestimate=8.0, overestimate_sigma=0.3)
+
+
+SCENARIOS: Dict[str, Callable[..., Scenario]] = {
+    "capability": capability,
+    "capacity": capacity,
+    "bursty": bursty,
+    "maintenance": maintenance,
+    "weekend": weekend,
+    "overestimate": overestimate,
+}
+
+
+def build_scenario(name: str, scale: float = 1.0, seed: int = 0) -> Scenario:
+    try:
+        builder = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"available: {sorted(SCENARIOS)}") from None
+    return builder(scale=scale, seed=seed)
+
+
+def all_scenarios(scale: float = 1.0, seed: int = 0) -> Iterator[Scenario]:
+    for name in SCENARIOS:
+        yield build_scenario(name, scale=scale, seed=seed)

@@ -79,6 +79,49 @@ def test_pool_size_conservation(raw):
 
 
 # ---------------------------------------------------------------------------
+# Scheduler-derived traces (repro.sched)
+# ---------------------------------------------------------------------------
+
+batch_jobs = st.lists(
+    st.tuples(st.floats(0.0, 500.0),      # submit
+              st.integers(1, 6),          # nodes (may exceed the machine)
+              st.floats(1.0, 100.0),      # runtime
+              st.floats(1.0, 3.0)),       # walltime overestimation factor
+    min_size=1, max_size=25)
+
+
+@given(batch_jobs, st.integers(2, 5),
+       st.sampled_from([(), ((40.0, 60.0),), ((40.0, 60.0), (200.0, 230.0))]))
+@settings(max_examples=60, deadline=None)
+def test_sched_fragments_replay_cleanly(raw, n_nodes, drains):
+    """FCFS+EASY output → fragments_to_events → pool replay: sizes never
+    negative, per-node fragments never overlap, node-time conserved."""
+    from repro.core.events import validate_fragments
+    from repro.sched import BatchJob, simulate_schedule
+
+    jobs = [BatchJob(id=i, submit=s, nodes=n, runtime=r,
+                     walltime=r * f)
+            for i, (s, n, r, f) in enumerate(raw)]
+    horizon = 600.0
+    res = simulate_schedule(jobs, n_nodes, horizon=horizon, drains=drains)
+    frags = res.fragments()
+    validate_fragments(frags)              # raises on per-node overlap
+    if frags:
+        sizes = pool_sizes(fragments_to_events(frags))
+        assert all(n >= 0 for _, n in sizes)
+        assert sizes[-1][1] == 0
+        assert all(0.0 <= f.start < f.end <= res.t_end for f in frags)
+    busy = sum(len(r.nodes) * (min(r.end, res.t_end) - r.start)
+               for r in res.records)
+    idle = sum(h.fragment.length for h in res.holes)
+    total = n_nodes * res.t_end
+    assert busy + idle + res.stats.drain_nodetime == pytest.approx(total)
+    # every accepted job is either running/ran, still queued, or rejected
+    assert (len(res.records) + len(res.unstarted) + len(res.rejected)
+            == len([j for j in jobs if j.submit < horizon]))
+
+
+# ---------------------------------------------------------------------------
 # MILP invariants under hypothesis-generated instances
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,315 @@
+"""Workload subsystem: SWF I/O, FCFS+EASY backfill correctness, the
+scenario library, and end-to-end consumption by the AllocationEngine."""
+import math
+
+import pytest
+
+from repro.core import (
+    AllocationEngine,
+    Simulator,
+    TrainerJob,
+    fragments_to_events,
+    pool_sizes,
+    tab2_curve,
+    validate_fragments,
+)
+from repro.core.trace import trace_stats
+from repro.sched import (
+    BLOCKED,
+    LOW_LOAD,
+    BatchJob,
+    SCENARIOS,
+    build_scenario,
+    dump_swf,
+    offered_load,
+    parse_swf,
+    simulate_schedule,
+    synthetic_workload,
+)
+
+
+def J(jid, submit, nodes, runtime, walltime=None):
+    return BatchJob(id=jid, submit=submit, nodes=nodes, runtime=runtime,
+                    walltime=walltime if walltime is not None else runtime)
+
+
+def rec_of(res, jid):
+    return next(r for r in res.records if r.job.id == jid)
+
+
+# ---------------------------------------------------------------------------
+# FCFS + EASY backfill correctness
+# ---------------------------------------------------------------------------
+
+
+def test_fcfs_order_and_trailing_holes():
+    res = simulate_schedule(
+        [J(0, 0.0, 4, 100.0), J(1, 0.0, 2, 100.0)], 4, horizon=300.0)
+    a, b = rec_of(res, 0), rec_of(res, 1)
+    assert a.start == 0.0 and not a.backfilled
+    assert b.start == 100.0 and not b.backfilled      # waited for A
+    # nodes 2,3 sit idle from B's start to the horizon
+    frags = res.fragments()
+    tail = {f.node: f for f in frags if f.end == 300.0}
+    assert set(tail) >= {2, 3}
+    assert all(math.isclose(tail[n].start, 100.0) for n in (2, 3))
+
+
+def test_backfillable_job_is_placed_in_the_hole():
+    """EASY: a short job jumps a blocked head into the hole in front of
+    the head's reservation."""
+    res = simulate_schedule(
+        [J(0, 0.0, 2, 100.0),          # A runs on 2 of 4 nodes
+         J(1, 1.0, 4, 100.0),          # B = head, needs the whole machine
+         J(2, 2.0, 2, 50.0)],          # C fits the hole and ends by shadow
+        4, horizon=500.0)
+    c = rec_of(res, 2)
+    assert c.backfilled and c.start == 2.0
+    # B still starts at its shadow time (A's requested end), undelayed
+    assert rec_of(res, 1).start == 100.0
+
+
+def test_backfill_never_delays_the_reservation():
+    """A job that would outlive the shadow time and doesn't fit in the
+    'extra' nodes must NOT backfill."""
+    res = simulate_schedule(
+        [J(0, 0.0, 3, 100.0),          # leaves 1 free node
+         J(1, 1.0, 4, 100.0),          # head, reserved at t=100
+         J(2, 2.0, 1, 200.0)],         # would hold its node past t=100
+        4, horizon=1000.0)
+    b, c = rec_of(res, 1), rec_of(res, 2)
+    assert b.start == 100.0            # reservation honored
+    assert not c.backfilled and c.start >= b.end
+
+
+def test_unfillable_hole_is_emitted_as_fragment():
+    """Two free nodes, but the only queued job needs four: the hole is
+    unfillable and must surface in the trace, tagged queue-blocked."""
+    res = simulate_schedule(
+        [J(0, 0.0, 2, 100.0), J(1, 0.0, 4, 300.0)], 4, horizon=400.0)
+    blocked = [h for h in res.holes
+               if h.kind == BLOCKED and h.fragment.end <= 100.0]
+    assert {h.fragment.node for h in blocked} == {2, 3}
+    for h in blocked:
+        assert h.fragment.start == 0.0
+        assert math.isclose(h.fragment.end, 100.0)
+        assert h.blocked_frac == 1.0
+    # and it is in the BFTrainer-facing trace
+    assert {(f.node, f.start) for f in res.fragments()} >= {(2, 0.0), (3, 0.0)}
+
+
+def test_overestimated_walltime_creates_early_start():
+    """Nodes free up at the *actual* runtime even though the reservation
+    was computed from the requested walltime."""
+    res = simulate_schedule(
+        [J(0, 0.0, 2, 10.0, walltime=100.0),   # ends at 10, promised 100
+         J(1, 1.0, 4, 100.0),                  # head, shadow = 100
+         J(2, 2.0, 2, 60.0)],                  # backfills (ends 62 <= 100)
+        4, horizon=500.0)
+    assert rec_of(res, 2).backfilled
+    assert rec_of(res, 1).start == 62.0        # not 100: freed early
+
+
+def test_low_load_hole_kind():
+    res = simulate_schedule([J(0, 0.0, 1, 10.0)], 2, horizon=100.0)
+    assert res.holes and all(h.kind == LOW_LOAD for h in res.holes)
+
+
+def test_oversized_job_rejected():
+    res = simulate_schedule(
+        [J(0, 0.0, 8, 100.0), J(1, 1.0, 2, 100.0)], 4, horizon=300.0)
+    assert [j.id for j in res.rejected] == [0]
+    assert rec_of(res, 1).start == 1.0         # queue not wedged behind it
+
+
+def test_drain_windows_block_and_are_excluded():
+    res = simulate_schedule(
+        [J(0, 50.0, 1, 80.0),      # 50+80 crosses the drain: waits for 200
+         J(1, 60.0, 1, 30.0)],     # 60+30=90 <= 100: may still run
+        2, horizon=400.0, drains=[(100.0, 200.0)])
+    assert rec_of(res, 0).start == 200.0
+    assert rec_of(res, 1).start == 60.0
+    for f in res.fragments():                  # drain node-time is not idle
+        assert f.end <= 100.0 or f.start >= 200.0
+    assert res.stats.drain_nodetime == 2 * 100.0
+
+
+def test_min_fragment_filter():
+    res = simulate_schedule(
+        [J(0, 0.0, 2, 100.0), J(1, 100.5, 2, 100.0)], 2, horizon=300.0,
+        min_fragment=10.0)
+    assert all(h.fragment.length >= 10.0 for h in res.holes)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_sched_replay_invariants_random(seed):
+    """No-hypothesis mirror of the property test in test_property.py
+    (hypothesis is optional in some environments): random workloads →
+    fragments replay with non-negative pool sizes and no overlap."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    jobs = [BatchJob(id=i, submit=float(rng.uniform(0, 500)),
+                     nodes=int(rng.integers(1, 7)),
+                     runtime=float(rng.uniform(1, 100)),
+                     walltime=float(rng.uniform(1, 100)) + 100.0)
+            for i in range(20)]
+    drains = ((40.0, 60.0),) if seed % 2 else ()
+    res = simulate_schedule(jobs, 4, horizon=600.0, drains=drains)
+    frags = res.fragments()
+    validate_fragments(frags)
+    if frags:
+        sizes = pool_sizes(fragments_to_events(frags))
+        assert all(n >= 0 for _, n in sizes)
+        assert sizes[-1][1] == 0
+    busy = sum(len(r.nodes) * (min(r.end, res.t_end) - r.start)
+               for r in res.records)
+    idle = sum(h.fragment.length for h in res.holes)
+    assert busy + idle + res.stats.drain_nodetime == \
+        pytest.approx(4 * res.t_end)
+
+
+def test_sched_conservation():
+    """busy + unfillable-idle + drain node-time == n_nodes * duration."""
+    jobs = synthetic_workload(duration=6 * 3600.0, seed=5,
+                              mean_interarrival=120.0,
+                              size_choices=(1, 2, 4),
+                              runtime_median=1200.0)
+    res = simulate_schedule(jobs, 8, horizon=6 * 3600.0,
+                            drains=[(7200.0, 9000.0)])
+    busy = sum(len(r.nodes) * (min(r.end, res.t_end) - r.start)
+               for r in res.records)
+    idle = sum(h.fragment.length for h in res.holes)
+    total = res.n_nodes * res.t_end
+    assert abs(busy + idle + res.stats.drain_nodetime - total) < 1e-6 * total
+
+
+# ---------------------------------------------------------------------------
+# SWF I/O + synthetic generator
+# ---------------------------------------------------------------------------
+
+
+def test_swf_round_trip(tmp_path):
+    jobs = synthetic_workload(duration=4 * 3600.0, seed=1,
+                              mean_interarrival=300.0)
+    for name in ("log.swf", "log.swf.gz"):
+        p = str(tmp_path / name)
+        dump_swf(jobs, p)
+        back = parse_swf(p)
+        assert len(back) == len(jobs)
+        for a, b in zip(sorted(jobs, key=lambda j: (j.submit, j.id)), back):
+            assert (a.id, a.nodes) == (b.id, b.nodes)
+            assert abs(a.runtime - b.runtime) <= 1.0
+            assert abs(a.walltime - b.walltime) <= 1.0
+
+
+def test_parse_swf_skips_comments_and_invalid_jobs():
+    lines = [
+        "; SWF header comment",
+        "1 0 5 100 4 -1 -1 4 200 -1 1 1 1 -1 -1 -1 -1 -1",
+        "2 10 0 -1 4 -1 -1 4 200 -1 0 1 1 -1 -1 -1 -1 -1",   # runtime -1
+        "3 20 0 50 0 -1 -1 0 -1 -1 0 1 1 -1 -1 -1 -1 -1",    # 0 procs
+        "4 30 0 50 8 -1 -1 -1 -1 -1 1 1 1 -1 -1 -1 -1 -1",   # alloc fallback
+    ]
+    jobs = parse_swf(lines, procs_per_node=2)
+    assert [j.id for j in jobs] == [1, 4]
+    assert jobs[0].nodes == 2                  # 4 procs / 2 per node
+    assert jobs[0].walltime == 200.0
+    assert jobs[1].nodes == 4                  # allocated-procs fallback
+    assert jobs[1].walltime == 50.0            # requested-time fallback
+
+
+def test_parse_swf_rejects_short_lines():
+    with pytest.raises(ValueError, match="fields"):
+        parse_swf(["1 0 5 100 4"])
+
+
+def test_batchjob_validation():
+    with pytest.raises(ValueError):
+        BatchJob(id=0, submit=0.0, nodes=0, runtime=10.0, walltime=10.0)
+    with pytest.raises(ValueError, match="walltime"):
+        BatchJob(id=0, submit=0.0, nodes=1, runtime=10.0, walltime=5.0)
+
+
+def test_synthetic_workload_shapes():
+    dur = 24 * 3600.0
+    jobs = synthetic_workload(duration=dur, seed=2, mean_interarrival=200.0,
+                              size_choices=(1, 2), overestimate=4.0,
+                              burst_every=4 * 3600.0, burst_size=10)
+    assert jobs and all(0 <= j.submit < dur for j in jobs)
+    assert all(j.walltime >= j.runtime for j in jobs)
+    # overestimation factor is real: median request well above runtime
+    factors = sorted(j.walltime / j.runtime for j in jobs)
+    assert factors[len(factors) // 2] > 2.0
+    # bursts exist: some submit times repeat
+    assert len({j.submit for j in jobs}) < len(jobs)
+    assert offered_load(jobs, 16, dur) > 0
+
+
+# ---------------------------------------------------------------------------
+# Scenario library round-trip (acceptance: all scenarios non-empty, stats
+# asserted, engine consumes them end-to-end)
+# ---------------------------------------------------------------------------
+
+
+SCALE = 0.15
+
+
+def test_scenario_registry_complete():
+    assert set(SCENARIOS) == {"capability", "capacity", "bursty",
+                              "maintenance", "weekend", "overestimate"}
+    with pytest.raises(KeyError, match="unknown scenario"):
+        build_scenario("nope")
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_produces_consistent_trace(name):
+    sc = build_scenario(name, scale=SCALE, seed=7)
+    assert sc.fragments, f"{name}: empty unfillable-hole trace"
+    validate_fragments(sc.fragments)
+    sizes = pool_sizes(fragments_to_events(sc.fragments))
+    assert all(n >= 0 for _, n in sizes)
+    st = sc.stats
+    assert st.n_fragments == len(sc.fragments)
+    assert 0.0 < st.idle_fraction < 1.0
+    assert st.eq_nodes > 0
+    assert 0.0 <= st.pct_fragments_short <= 1.0
+    # scheduler side is consistent with the trace side
+    assert abs(sc.sched.idle_fraction - st.idle_fraction) < 1e-6
+    assert sc.sched.n_started > 0
+
+
+def test_capacity_scenario_is_short_fragment_heavy():
+    sc = build_scenario("capacity", scale=0.25, seed=7)
+    assert sc.stats.pct_fragments_short > 0.3
+    assert 0.05 < sc.stats.idle_fraction < 0.6
+    assert sc.sched.n_backfilled > 0
+
+
+def test_weekend_scenario_is_low_load_dominated():
+    sc = build_scenario("weekend", scale=0.25, seed=7)
+    assert sc.sched.blocked_share < 0.5          # idle mostly queue-empty
+    assert sc.stats.idle_fraction > 0.3
+
+
+def test_maintenance_scenario_has_no_drain_idle():
+    # full scale: 24h trace with 1h drains starting at 6h, 14h, 22h
+    sc = build_scenario("maintenance", scale=1.0, seed=7)
+    assert sc.sched.drain_nodetime == sc.n_nodes * 3 * 3600.0
+    drains = [(s * 3600.0, (s + 1) * 3600.0) for s in (6.0, 14.0, 22.0)]
+    for f in sc.fragments:
+        for s, e in drains:
+            assert f.end <= s or f.start >= e, (f, s, e)
+
+
+def test_engine_consumes_scenario_end_to_end():
+    sc = build_scenario("capacity", scale=SCALE, seed=7)
+    events = fragments_to_events(sc.fragments)
+    jobs = [TrainerJob(id=i, curve=tab2_curve("ShuffleNet"), work=1e9,
+                       n_min=1, n_max=8, r_up=20.0, r_dw=5.0)
+            for i in range(4)]
+    eng = AllocationEngine(time_budget=0.050)
+    rep = Simulator(events, jobs, eng, t_fwd=120.0,
+                    horizon=sc.duration).run()
+    assert rep.total_samples > 0
+    assert rep.events_processed > 0
+    assert eng.stats.events == rep.events_processed

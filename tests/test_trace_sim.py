@@ -99,3 +99,69 @@ def test_static_outcome_has_no_rescale_cost():
     assert a_s > 0
     # upper bound: best split of 8 nodes for an hour
     assert a_s <= curve(8) * 3600.0 * 1.01
+
+
+# ---------------------------------------------------------------------------
+# load_trace_csv hardening (validation + gzip)
+# ---------------------------------------------------------------------------
+
+
+def _write_csv(tmp_path, body, name="trace.csv"):
+    p = tmp_path / name
+    p.write_text("node,start,end\n" + body)
+    return str(p)
+
+
+def test_load_trace_csv_roundtrip_and_gzip(tmp_path):
+    import gzip
+
+    from repro.core import load_trace_csv
+
+    body = "0,0.0,10.0\n1,5.0,20.0\n0,12.0,30.0\n"
+    plain = _write_csv(tmp_path, body)
+    frags = load_trace_csv(plain)
+    assert [(f.node, f.start, f.end) for f in frags] == \
+        [(0, 0.0, 10.0), (1, 5.0, 20.0), (0, 12.0, 30.0)]
+
+    gz = str(tmp_path / "trace.csv.gz")
+    with gzip.open(gz, "wt") as f:
+        f.write("node,start,end\n" + body)
+    assert load_trace_csv(gz) == frags
+
+
+def test_load_trace_csv_rejects_malformed_rows(tmp_path):
+    from repro.core import load_trace_csv
+
+    with pytest.raises(ValueError, match="end .* must be > start"):
+        load_trace_csv(_write_csv(tmp_path, "0,10.0,10.0\n"))
+    with pytest.raises(ValueError, match="negative node id"):
+        load_trace_csv(_write_csv(tmp_path, "-2,0.0,10.0\n"))
+    with pytest.raises(ValueError, match="trace.csv:3"):   # line number
+        load_trace_csv(_write_csv(tmp_path, "0,0.0,10.0\n1,abc,10.0\n"))
+    with pytest.raises(ValueError, match="missing column"):
+        p = tmp_path / "bad.csv"
+        p.write_text("node,begin,end\n0,0.0,10.0\n")
+        load_trace_csv(str(p))
+    with pytest.raises(ValueError, match="overlap"):
+        load_trace_csv(_write_csv(tmp_path, "0,0.0,10.0\n0,5.0,15.0\n"))
+    # overlap check can be disabled for raw logs
+    from repro.core.trace import load_trace_csv as raw_loader
+    assert len(raw_loader(_write_csv(tmp_path, "0,0.0,10.0\n0,5.0,15.0\n"),
+                          validate=False)) == 2
+
+
+def test_validate_and_merge_fragments():
+    from repro.core import Fragment, merge_fragments, validate_fragments
+
+    frags = [Fragment(0, 0.0, 10.0), Fragment(0, 10.0, 15.0),
+             Fragment(1, 3.0, 4.0), Fragment(0, 20.0, 25.0)]
+    validate_fragments(frags)
+    merged = merge_fragments(frags)
+    assert (0, 0.0, 15.0) in [(f.node, f.start, f.end) for f in merged]
+    assert len(merged) == 3
+    with pytest.raises(ValueError, match="overlap"):
+        validate_fragments([Fragment(2, 0.0, 10.0), Fragment(2, 9.0, 12.0)])
+    with pytest.raises(ValueError, match="end <= start"):
+        validate_fragments([Fragment(0, 5.0, 5.0)])
+    with pytest.raises(ValueError, match="negative node"):
+        validate_fragments([Fragment(-1, 0.0, 1.0)])
