@@ -1,0 +1,101 @@
+"""Live-path benchmark: the shared ControlLoop driving real
+ElasticTrainers (LiveBackend) over a replayed idle-node trace.
+
+Reports end-to-end steps/s, measured rescale wall time, and
+policy-side solver wall — the numbers that tell you what the live path
+costs beyond pure simulation (DESIGN.md §9).
+
+``--smoke`` (or ``BENCH_SMOKE=1``) runs a toy scenario sized for CI:
+tiny reduced architectures on a small summit-like trace.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_arch
+from repro.core import (
+    AllocationEngine,
+    amdahl_curve,
+    fragments_to_events,
+    generate_summit_like,
+)
+from repro.elastic import BFTrainerRuntime, ElasticTrainer, ManagedTrainer
+from repro.models import build_model
+from repro.optim import AdamW
+
+
+def make_trainer(arch: str, seed: int, seq: int = 48) -> ElasticTrainer:
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg, remat=False)
+    tr = ElasticTrainer(model, per_node_batch=2, seed=seed,
+                        optimizer=AdamW(lr=1e-3), warmup_steps=5)
+    tr.pipeline.cfg.seq_len = seq
+    return tr
+
+
+def run(smoke: bool) -> None:
+    hours = 12.0 if smoke else 48.0
+    target = 4 if smoke else 60
+    frags = generate_summit_like(n_nodes=6, duration=hours * 3600.0, seed=13)
+    events = fragments_to_events(frags)
+    emit("runtime/trace_events", len(events))
+
+    managed = [
+        ManagedTrainer(id=0, trainer=make_trainer("gemma-2b", 1),
+                       curve=amdahl_curve("gemma-2b", 100.0, 0.2),
+                       n_min=1, n_max=1, target_steps=target),
+        ManagedTrainer(id=1, trainer=make_trainer("mamba2-2.7b", 2),
+                       curve=amdahl_curve("mamba2", 120.0, 0.15),
+                       n_min=1, n_max=1, target_steps=target),
+    ]
+    rt = BFTrainerRuntime(managed, AllocationEngine(), t_fwd=120.0,
+                          coalesce_window=30.0)
+    t0 = time.perf_counter()
+    rep = rt.run(events, time_scale=1.0,
+                 max_steps_per_interval=2 if smoke else 8)
+    wall = time.perf_counter() - t0
+
+    steps = sum(rep.steps.values())
+    emit("runtime/steps", steps)
+    emit("runtime/steps_per_s", f"{steps / max(wall, 1e-9):.2f}",
+         "end-to-end incl. solver+rescale")
+    emit("runtime/wall_s", f"{wall:.2f}")
+    emit("runtime/solver_wall_s", f"{rep.solver_wall_s:.3f}")
+    emit("runtime/alloc_events", rep.events)
+    rescale_ts = [dt for m in managed
+                  for (_, _, dt) in m.trainer.rescale_history]
+    emit("runtime/rescales", len(rescale_ts))
+    if rescale_ts:
+        emit("runtime/rescale_wall_mean_ms",
+             f"{1e3 * float(np.mean(rescale_ts)):.1f}",
+             "measured R_up/R_dw source")
+        emit("runtime/rescale_wall_total_s",
+             f"{float(np.sum(rescale_ts)):.2f}")
+    st = rep.stats
+    emit("runtime/policy_rescale_cost_s", f"{st.rescale_cost_s:.2f}",
+         "trace-time stall accounting (shared loop)")
+    emit("runtime/policy_preempt_cost_s", f"{st.preempt_cost_s:.2f}")
+    for m in managed:
+        ls = rep.losses[m.id]
+        if ls:
+            emit(f"runtime/trainer{m.id}/steps", rep.steps[m.id])
+            emit(f"runtime/trainer{m.id}/loss_first_last",
+                 f"{ls[0]:.3f}->{ls[-1]:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized toy run")
+    args, _ = ap.parse_known_args()
+    smoke = args.smoke or bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    run(smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,8 @@ SECTIONS = [
      "benchmarks.bench_objective"),
     ("workloads", "Scenario library: engine efficiency per workload profile",
      "benchmarks.bench_workloads"),
+    ("runtime", "Live ControlLoop: real elastic trainers on a replayed trace",
+     "benchmarks.bench_runtime"),
     ("pjmax", "Fig 14: max parallel Trainers", "benchmarks.bench_pjmax"),
     ("scalability", "Fig 15: per-DNN scalability", "benchmarks.bench_scalability"),
     ("rescale_cost", "Fig 16: rescale-cost sweep", "benchmarks.bench_rescale_cost"),

@@ -3,10 +3,13 @@
 Two Trainers (reduced gemma-2b and mamba2 architectures) are trained with
 genuine train steps while the AllocationEngine (memoized greedy/MILP
 portfolio, DESIGN.md §3) rescales them across a replayed idle-node trace.
-Demonstrates:
+The runtime is the same ControlLoop the simulator uses (DESIGN.md §9), so
+the live path is policy-complete.  Demonstrates:
   * state carry across rescale (no restart, no durable checkpoint),
   * per-node fixed minibatch => global batch tracks the allocation,
-  * measured (not assumed) R_up / R_dw fed back into the MILP.
+  * measured (not assumed) R_up / R_dw fed back into the MILP,
+  * FCFS admission under pj_max, event coalescing, and rescale/preemption
+    stall accounting — live, not just simulated.
 
 Run:  PYTHONPATH=src python examples/elastic_train.py [--steps 200]
 """
@@ -52,12 +55,17 @@ def main() -> None:
                        n_min=1, n_max=1, target_steps=args.steps),
     ]
     engine = AllocationEngine()
-    rt = BFTrainerRuntime(managed, engine, t_fwd=120.0)
+    rt = BFTrainerRuntime(managed, engine, t_fwd=120.0, pj_max=2,
+                          coalesce_window=30.0)
     rep = rt.run(events, time_scale=1.0, max_steps_per_interval=8)
 
     st = engine.stats
     print(f"\nallocation events: {rep.events} "
           f"(solver {rep.solver_wall_s:.2f}s), wall {rep.wall_time_s:.1f}s")
+    ls = rep.stats
+    print(f"policy (shared ControlLoop): rescale stalls {ls.rescale_cost_s:.1f}s, "
+          f"preemption {ls.preempt_cost_s:.1f}s of trace time, "
+          f"{ls.unfinished} unfinished")
     print(f"engine: {st.cache_hits}/{st.events} cache hits, "
           f"{st.greedy_solves} greedy + {st.fast_milp_solves} fast-MILP "
           f"solves, {st.fallbacks} fallbacks")

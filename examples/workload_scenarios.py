@@ -8,6 +8,11 @@
    the ``AllocationEngine`` and compare against a named scenario from
    the library.
 
+Every scenario also runs *live* with the same policy: pass
+``run_live=True`` (and ``ManagedTrainer``s) to ``repro.sched.run_scenario``
+and the identical ControlLoop decisions drive real elastic JAX trainers
+(DESIGN.md §9).
+
 Run:  PYTHONPATH=src python examples/workload_scenarios.py
 """
 from repro.core import (
@@ -23,6 +28,7 @@ from repro.core import (
 from repro.sched import (
     build_scenario,
     offered_load,
+    run_scenario,
     simulate_schedule,
     synthetic_workload,
 )
@@ -71,6 +77,9 @@ def main() -> None:
     print(f"scenario '{sc.name}': {sc.stats.n_fragments} fragments, "
           f"idle fraction {sc.stats.idle_fraction:.1%} "
           f"({sc.description})")
+    rep2 = run_scenario(sc, trainers())    # run_live=True for real trainers
+    print(f"scenario replay: {rep2.total_samples:.3e} samples, "
+          f"{rep2.events_processed} allocation events")
 
 
 if __name__ == "__main__":

@@ -2,16 +2,19 @@
 # for DNN Trainers on unfillable idle nodes, plus the event-driven
 # BFTrainer scheduler/simulator around it.
 from repro.core.allocator import Allocator, EqualShareAllocator, MILPAllocator
+from repro.core.backend import AnalyticBackend, ExecutionBackend, LiveBackend
 from repro.core.engine import AllocationEngine, EngineStats, problem_signature
 from repro.core.events import (
     Fragment,
     PoolEvent,
     fragments_to_events,
+    merge_events,
     merge_fragments,
     pool_sizes,
     validate_fragments,
 )
 from repro.core.greedy import solve_greedy
+from repro.core.loop import ControlLoop, EventRecord, LoopStats
 from repro.core.metrics import Efficiency, ROI, eq_nodes, resource_integral
 from repro.core.milp import AllocationProblem, AllocationResult, TrainerSpec, solve_node_milp
 from repro.core.milp_fast import reconstruct_map, solve_fast_milp
@@ -22,9 +25,11 @@ from repro.core.trace import TraceStats, clip_fragments, generate_summit_like, l
 
 __all__ = [
     "Allocator", "EqualShareAllocator", "MILPAllocator",
+    "AnalyticBackend", "ExecutionBackend", "LiveBackend",
+    "ControlLoop", "EventRecord", "LoopStats",
     "AllocationEngine", "EngineStats", "problem_signature", "solve_greedy",
-    "Fragment", "PoolEvent", "fragments_to_events", "merge_fragments",
-    "pool_sizes", "validate_fragments",
+    "Fragment", "PoolEvent", "fragments_to_events", "merge_events",
+    "merge_fragments", "pool_sizes", "validate_fragments",
     "Efficiency", "ROI", "eq_nodes", "resource_integral",
     "AllocationProblem", "AllocationResult", "TrainerSpec", "solve_node_milp",
     "reconstruct_map", "solve_fast_milp",

@@ -1,0 +1,184 @@
+"""Execution backends for the ControlLoop (DESIGN.md §9).
+
+The ``ControlLoop`` decides *who gets which nodes when*; an
+``ExecutionBackend`` is where Trainer progress actually happens between
+decisions.  Two substrates implement the protocol:
+
+* ``AnalyticBackend`` — trace-driven simulation: progress is the integral
+  of the Trainer's scaling curve over the interval (minus rescale stalls),
+  and completion times are predicted analytically so the loop can cut an
+  interval at the exact finish instant.
+* ``LiveBackend`` — the deployable path: every allocation decision is
+  executed against real ``ElasticTrainer``s (``rescale()`` +
+  ``train_step()``), with trace time mapped to a per-interval step budget
+  via ``time_scale`` and measured rescale costs fed back into the MILP.
+
+The loop owns all cost *accounting* (stalls, rescale/preemption costs,
+records); backends only execute.  Keeping both behind one protocol is
+what makes the live path policy-complete: FCFS admission, ``pj_max``,
+coalescing and preemption-stall bookkeeping apply identically.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.loop import TrainerJob
+
+
+class ExecutionBackend:
+    """Protocol (as an overridable base) between ControlLoop and the
+    substrate that executes its decisions.  All hooks receive the
+    ``TrainerJob`` whose policy state (``nodes``, ``busy_until``,
+    ``done``/``work``) the loop maintains."""
+
+    name = "base"
+
+    def bind(self, jobs: Sequence[TrainerJob]) -> None:
+        """Called once at loop start with the full (sorted) job list."""
+
+    def refresh(self, job: TrainerJob, now: float) -> None:
+        """Update job parameters (e.g. measured r_up/r_dw) before a solve."""
+
+    def apply_allocation(self, job: TrainerJob, old_n: int,
+                         now: float) -> None:
+        """Execute the allocator's decision; ``job.nodes`` is already the
+        new assignment, ``old_n`` the previous node count."""
+
+    def on_preempt(self, job: TrainerJob, taken: List[int],
+                   now: float) -> None:
+        """Nodes ``taken`` left the pool mid-run; ``job.nodes`` is already
+        the surviving set."""
+
+    def eta(self, job: TrainerJob, now: float,
+            horizon: float) -> Optional[float]:
+        """Predicted completion time under the current allocation, or
+        ``None`` if unknown (the loop then integrates to the horizon)."""
+        return None
+
+    def advance(self, job: TrainerJob, start: float, end: float) -> float:
+        """Execute/integrate progress over [start, end); returns samples
+        processed.  Must respect ``job.busy_until`` (rescale stall) and
+        update ``job.done``."""
+        return 0.0
+
+    def on_finish(self, job: TrainerJob, now: float) -> None:
+        """``job.done`` reached ``job.work``; release execution resources."""
+
+
+class AnalyticBackend(ExecutionBackend):
+    """Scaling-curve integration — the simulation substrate (paper §4)."""
+
+    name = "analytic"
+
+    def eta(self, job: TrainerJob, now: float,
+            horizon: float) -> Optional[float]:
+        thr = job.throughput()
+        if thr <= 0:
+            return None
+        start = max(now, job.busy_until)
+        return start + (job.work - job.done) / thr
+
+    def advance(self, job: TrainerJob, start: float, end: float) -> float:
+        thr = job.throughput()
+        t0 = max(start, min(job.busy_until, end))
+        delta = max(0.0, end - t0) * thr
+        delta = min(delta, job.work - job.done)   # clamp at completion
+        job.done += delta
+        return delta
+
+
+class LiveBackend(ExecutionBackend):
+    """Real elastic training — the deployable substrate (paper §4.3).
+
+    Wraps ``ManagedTrainer``-like objects (duck-typed: ``id``, ``curve``,
+    ``n_min``/``n_max``, ``target_steps``, ``steps_done``, ``samples_done``
+    and a ``trainer`` with ``rescale``/``train_step``/``n_nodes``/
+    ``measured_rescale_costs``) so core/ carries no JAX import.
+
+    Trace time maps to execution via ``time_scale``: an interval of ``dt``
+    trace seconds grants ``min(max_steps_per_interval,
+    int(dt · time_scale · steps_per_second))`` real train steps, after
+    deducting any rescale-stall overlap (``job.busy_until``, trace
+    seconds).  ``job.work``/``job.done`` are counted in *steps* here
+    (``target_steps``); per-interval outcome is real samples processed.
+    """
+
+    name = "live"
+
+    def __init__(self, managed: Sequence, *, time_scale: float = 1.0,
+                 steps_per_second: float = 1.0,
+                 max_steps_per_interval: int = 4,
+                 metric: str = "throughput",
+                 measure_rescale_costs: bool = True):
+        self.managed = {m.id: m for m in managed}
+        self.time_scale = time_scale
+        self.steps_per_second = steps_per_second
+        self.max_steps_per_interval = max_steps_per_interval
+        self.metric = metric
+        # off → specs keep their initial r_up/r_dw (deterministic problem
+        # sequences, e.g. for backend-parity tests)
+        self.measure_rescale_costs = measure_rescale_costs
+        self.losses: Dict[int, List[float]] = {m.id: [] for m in managed}
+
+    def jobs(self) -> List[TrainerJob]:
+        """TrainerJobs mirroring the managed trainers, for the loop."""
+        out = []
+        for m in self.managed.values():
+            r_up, r_dw = m.trainer.measured_rescale_costs()
+            job = TrainerJob(
+                id=m.id, curve=m.curve,
+                work=(float(m.target_steps) if m.target_steps is not None
+                      else math.inf),
+                n_min=m.n_min, n_max=m.n_max, r_up=r_up, r_dw=r_dw,
+                metric=self.metric)
+            job.done = float(m.steps_done)
+            out.append(job)
+        return out
+
+    def refresh(self, job: TrainerJob, now: float) -> None:
+        if self.measure_rescale_costs:
+            job.r_up, job.r_dw = \
+                self.managed[job.id].trainer.measured_rescale_costs()
+
+    def _sync(self, job: TrainerJob) -> None:
+        tr = self.managed[job.id].trainer
+        if tr.n_nodes != len(job.nodes):
+            tr.rescale(len(job.nodes))
+
+    def apply_allocation(self, job: TrainerJob, old_n: int,
+                         now: float) -> None:
+        self._sync(job)
+
+    def on_preempt(self, job: TrainerJob, taken: List[int],
+                   now: float) -> None:
+        # departed nodes are gone now — shrink (or park) immediately, even
+        # if the re-allocation itself is coalesced
+        self._sync(job)
+
+    def advance(self, job: TrainerJob, start: float, end: float) -> float:
+        m = self.managed[job.id]
+        if m.trainer.n_nodes <= 0:
+            return 0.0
+        t0 = max(start, min(job.busy_until, end))
+        dt = max(0.0, end - t0)
+        n_steps = min(self.max_steps_per_interval,
+                      max(0, int(dt * self.time_scale
+                                 * self.steps_per_second)))
+        samples = 0
+        for _ in range(n_steps):
+            if job.done >= job.work:
+                break
+            met = m.trainer.train_step()
+            m.steps_done += 1
+            m.samples_done += met.samples
+            samples += met.samples
+            self.losses[m.id].append(met.loss)
+            job.done = float(m.steps_done)
+        return float(samples)
+
+    def on_finish(self, job: TrainerJob, now: float) -> None:
+        m = self.managed[job.id]
+        if m.trainer.n_nodes > 0:
+            m.trainer.rescale(0)      # park: snapshot to host, free devices
+        job.nodes = []

@@ -42,6 +42,30 @@ def fragments_to_events(fragments: Sequence[Fragment]) -> List[PoolEvent]:
     return out
 
 
+def merge_events(events: Sequence[PoolEvent]) -> List[PoolEvent]:
+    """Sort events and merge those sharing a timestamp into one event per
+    time point, preserving sequential-application semantics: events at the
+    same instant are applied in their given order, and the *last* action
+    on a node wins (a leave followed by a rejoin keeps the node; a join
+    followed by a leave drops it)."""
+    out: List[PoolEvent] = []
+    for e in sorted(events, key=lambda e: e.time):
+        if out and out[-1].time == e.time:
+            delta: Dict[int, bool] = {}
+            for ev in (out[-1], e):
+                for n in ev.joined:
+                    delta[n] = True
+                for n in ev.left:
+                    delta[n] = False
+            out[-1] = PoolEvent(
+                time=e.time,
+                joined=tuple(sorted(n for n, v in delta.items() if v)),
+                left=tuple(sorted(n for n, v in delta.items() if not v)))
+        else:
+            out.append(e)
+    return out
+
+
 def pool_sizes(events: Sequence[PoolEvent]) -> List[Tuple[float, int]]:
     """(time, |N|) step function after each event."""
     size = 0

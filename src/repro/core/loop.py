@@ -1,0 +1,316 @@
+"""The BFTrainer control loop (paper §3–§5), shared by simulation and
+live execution.
+
+``ControlLoop`` owns the *policy*: the merged timeline of pool events and
+Trainer arrivals, FCFS admission up to ``pj_max``, the event-coalescing
+window, preemption handling, rescale-stall (``busy_until``) bookkeeping,
+adaptive ``t_fwd`` estimation, and the per-event records.  What it does
+*not* own is execution: progress integration and physical rescales are
+delegated to an ``ExecutionBackend`` (core/backend.py) — analytic
+scaling-curve integration for trace-driven simulation, or real
+``ElasticTrainer`` steps for live runs.  One policy, two substrates
+(DESIGN.md §9).
+
+Cost semantics (paper §2.1/§3.4), identical for both backends:
+* scale-up of Trainer j stalls all its nodes for ``r_up`` seconds,
+  scale-down for ``r_dw`` seconds (costs measured both in seconds and in
+  foregone samples O_j(C_j)·R);
+* nodes leaving mid-run force a scale-down at cost ``r_dw`` (preemption);
+  the preempted node-time itself is counted as preemption cost;
+* Trainers are admitted FCFS, at most ``pj_max`` concurrently (§5.3).
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.allocator import Allocator
+from repro.core.events import PoolEvent, merge_events
+from repro.core.milp import AllocationProblem, TrainerSpec
+from repro.core.scaling import ScalingCurve
+from repro.core.tfwd import TfwdEstimator, resolve_tfwd
+
+
+@dataclass
+class TrainerJob:
+    """One Trainer (a DNN training job) submitted to BFTrainer.
+
+    ``work``/``done`` are in the backend's progress unit: samples for the
+    analytic backend, train steps for the live backend.
+    """
+
+    id: int
+    curve: ScalingCurve
+    work: float                     # total progress units to process
+    n_min: int = 1
+    n_max: int = 64
+    r_up: float = 20.0              # seconds (paper §2.1 example)
+    r_dw: float = 5.0
+    arrival: float = 0.0
+    metric: str = "throughput"      # objective metric for the MILP
+
+    # --- runtime state ---
+    done: float = 0.0
+    nodes: List[int] = field(default_factory=list)
+    busy_until: float = 0.0         # rescale stall deadline
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    rescale_cost_s: float = 0.0
+    rescale_cost_samples: float = 0.0
+    preempt_cost_s: float = 0.0
+    n_rescales: int = 0
+    n_preemptions: int = 0
+
+    def spec(self, max_points: int = 8) -> TrainerSpec:
+        pts, vals = self.curve.breakpoints(self.n_min, self.n_max,
+                                           metric=self.metric,
+                                           max_points=max_points)
+        return TrainerSpec(id=self.id, n_min=self.n_min, n_max=self.n_max,
+                           r_up=self.r_up, r_dw=self.r_dw,
+                           points=tuple(pts), values=tuple(vals))
+
+    @property
+    def finished(self) -> bool:
+        return self.done >= self.work
+
+    def throughput(self) -> float:
+        return self.curve(len(self.nodes))
+
+
+@dataclass
+class EventRecord:
+    time: float
+    pool_size: int
+    rescale_cost_samples: float
+    outcome_until_next: float
+    solver_wall: float
+    allocated: int = 0              # Σ nodes held by Trainers after the event
+
+
+@dataclass
+class LoopStats:
+    """The shared report core: everything the ControlLoop itself measures,
+    regardless of backend.  ``SimReport``/``RuntimeReport`` build on it."""
+
+    total_samples: float
+    makespan: float
+    events_processed: int
+    allocator: str
+    per_trainer_runtime: Dict[int, float]
+    rescale_cost_samples: float
+    rescale_cost_s: float
+    preempt_cost_s: float
+    solver_wall_total: float
+    event_records: List[EventRecord] = field(default_factory=list)
+    unfinished: int = 0
+
+
+class ControlLoop:
+    """The single policy engine behind ``Simulator`` and
+    ``BFTrainerRuntime``.  ``backend`` is any ``ExecutionBackend``."""
+
+    def __init__(self, events: Sequence[PoolEvent],
+                 jobs: Sequence[TrainerJob], allocator: Allocator,
+                 backend, *, t_fwd: Union[float, str] = 120.0,
+                 pj_max: int = 10, horizon: Optional[float] = None,
+                 sos2_points: int = 8, coalesce_window: float = 0.0):
+        self.events = sorted(events, key=lambda e: e.time)
+        self.jobs = sorted(jobs, key=lambda j: (j.arrival, j.id))
+        self.allocator = allocator
+        self.backend = backend
+        # t_fwd: a constant (paper) or "adaptive" (beyond-paper online
+        # quantile estimator over leave-event gaps, core/tfwd.py)
+        self.t_fwd_estimator, self.t_fwd = resolve_tfwd(t_fwd)
+        self.pj_max = pj_max
+        self.horizon = horizon
+        self.sos2_points = sos2_points
+        # coalesce_window > 0: defer re-allocation while further pool events
+        # land within the window, so a join/leave burst triggers one solve
+        # instead of N (DESIGN.md §3.4).  Preemption of departed nodes is
+        # never deferred — only the hand-out of new assignments is.
+        self.coalesce_window = coalesce_window
+
+    # ------------------------------------------------------------------
+
+    def run(self) -> LoopStats:
+        backend = self.backend
+        jobs = self.jobs
+        backend.bind(jobs)
+        pool: set[int] = set()
+        qi = 0                                        # FCFS admission pointer
+        active: List[TrainerJob] = []
+        finished: List[TrainerJob] = []
+        records: List[EventRecord] = []
+        solver_wall = 0.0
+        total_outcome = 0.0
+
+        # one event per time point (hand-built streams may carry several
+        # events at one timestamp; sequential last-action-wins semantics)
+        events = merge_events(self.events)
+        # merged timeline: pool events + job arrivals (+ completions found
+        # during integration)
+        times = sorted({e.time for e in events}
+                       | {j.arrival for j in jobs})
+        ev_by_time: Dict[float, PoolEvent] = {e.time: e for e in events}
+        if not times:
+            return LoopStats(0.0, 0.0, 0, self.allocator.name, {}, 0.0, 0.0,
+                             0.0, 0.0)
+        t_end = self.horizon if self.horizon is not None else times[-1]
+
+        ev_times = [e.time for e in events]
+        i = 0
+        now = times[0]
+        n_events = 0
+        pending_realloc = True
+        pending_since: Optional[float] = None
+        while now < t_end and (i < len(times) or active or qi < len(jobs)):
+            # 1) apply pool event at `now`, if any: join/leave + preemption
+            ev = ev_by_time.get(now)
+            if ev is not None:
+                if self.t_fwd_estimator is not None:
+                    self.t_fwd_estimator.observe(now, len(ev.left))
+                for nid in ev.joined:
+                    pool.add(nid)
+                lost = set(ev.left)
+                pool -= lost
+                for j in active:
+                    taken = [n for n in j.nodes if n in lost]
+                    if taken:
+                        j.nodes = [n for n in j.nodes if n not in lost]
+                        j.n_preemptions += 1
+                        j.preempt_cost_s += len(taken) * j.r_dw
+                        if j.nodes:
+                            # forced scale-down stall
+                            j.busy_until = max(j.busy_until, now) + j.r_dw
+                            j.rescale_cost_s += j.r_dw
+                        backend.on_preempt(j, taken, now)
+                pending_realloc = True
+
+            # 2) admit arrivals FCFS up to pj_max; a job that is already
+            #    finished (e.g. a resumed live run) never takes a slot
+            while qi < len(jobs) and jobs[qi].arrival <= now and \
+                    len(active) < self.pj_max:
+                job = jobs[qi]
+                qi += 1
+                if job.finished:
+                    finished.append(job)
+                    continue
+                active.append(job)
+                pending_realloc = True
+
+            # 3) reallocate — unless a coalescing window says another pool
+            #    event is imminent, in which case defer (bounded by one
+            #    window from the first deferred event)
+            realloc_cost_samples = 0.0
+            ev_solver_wall = 0.0
+            defer = False
+            if pending_realloc and pending_since is None:
+                pending_since = now
+            if pending_realloc and self.coalesce_window > 0.0:
+                k = bisect.bisect_right(ev_times, now)
+                nxt_ev = ev_times[k] if k < len(ev_times) else None
+                # never defer while a preemption left a Trainer below its
+                # minimum size — running there violates Eqn 4 feasibility
+                feasible = all(len(j.nodes) == 0 or len(j.nodes) >= j.n_min
+                               for j in active)
+                if feasible and nxt_ev is not None and nxt_ev < t_end and \
+                        nxt_ev - now <= self.coalesce_window and \
+                        now - pending_since < self.coalesce_window:
+                    defer = True
+            if pending_realloc and active and not defer:
+                t_fwd = (self.t_fwd_estimator.estimate()
+                         if self.t_fwd_estimator is not None else self.t_fwd)
+                for j in active:
+                    backend.refresh(j, now)
+                prob = AllocationProblem(
+                    nodes=sorted(pool),
+                    trainers=[j.spec(self.sos2_points) for j in active],
+                    current={j.id: list(j.nodes) for j in active},
+                    t_fwd=t_fwd,
+                )
+                res = self.allocator.allocate(prob)
+                solver_wall += res.wall_time
+                ev_solver_wall = res.wall_time
+                for j in active:
+                    new_nodes = res.allocation.get(j.id, [])
+                    old = len(j.nodes)
+                    new = len(new_nodes)
+                    j.nodes = list(new_nodes)
+                    if new != old:
+                        cost = j.r_up if new > old else j.r_dw
+                        j.busy_until = max(j.busy_until, now) + cost
+                        j.rescale_cost_s += cost
+                        c_samples = j.curve(old) * cost
+                        j.rescale_cost_samples += c_samples
+                        realloc_cost_samples += c_samples
+                        j.n_rescales += 1
+                    if j.nodes and j.started_at is None:
+                        j.started_at = now
+                    backend.apply_allocation(j, old, now)
+                n_events += 1
+            if not defer:
+                pending_realloc = False
+                pending_since = None
+
+            # 4) integrate progress to the next timeline point (or a job
+            #    completion, whichever comes first)
+            nxt = t_end
+            k = bisect.bisect_right(times, now, i)
+            if k < len(times):
+                nxt = min(nxt, times[k])
+            for j in active:
+                if j.nodes and not j.finished:
+                    eta = backend.eta(j, now, nxt)
+                    if eta is not None and now < eta < nxt:
+                        nxt = eta
+            outcome = 0.0
+            for j in active:
+                if j.nodes and not j.finished:
+                    outcome += backend.advance(j, now, nxt)
+            total_outcome += outcome
+            records.append(EventRecord(
+                time=now, pool_size=len(pool),
+                rescale_cost_samples=realloc_cost_samples,
+                outcome_until_next=outcome, solver_wall=ev_solver_wall,
+                allocated=sum(len(j.nodes) for j in active)))
+
+            # 5) retire finished jobs
+            newly_done = [j for j in active if j.finished]
+            if newly_done:
+                for j in newly_done:
+                    j.finished_at = nxt
+                    backend.on_finish(j, nxt)
+                    finished.append(j)
+                active = [j for j in active if not j.finished]
+                pending_realloc = True
+
+            # advance
+            while i < len(times) and times[i] <= nxt:
+                i += 1
+            now = nxt
+            if not active and qi >= len(jobs):
+                break            # no job left; replaying more events is idle
+            if not ev_by_time.get(now) and not newly_done and \
+                    not (qi < len(jobs) and jobs[qi].arrival <= now) and \
+                    i >= len(times):
+                break
+
+        all_jobs = finished + active + jobs[qi:]
+        # pre-finished jobs still queued (never admitted) are not unfinished
+        queued = [j for j in jobs[qi:] if not j.finished]
+        per_rt = {j.id: (j.finished_at - j.arrival)
+                  for j in finished if j.finished_at is not None}
+        return LoopStats(
+            total_samples=total_outcome,
+            makespan=now - times[0],
+            events_processed=n_events,
+            allocator=self.allocator.name,
+            per_trainer_runtime=per_rt,
+            rescale_cost_samples=sum(j.rescale_cost_samples for j in all_jobs),
+            rescale_cost_s=sum(j.rescale_cost_s for j in all_jobs),
+            preempt_cost_s=sum(j.preempt_cost_s for j in all_jobs),
+            solver_wall_total=solver_wall,
+            event_records=records,
+            unfinished=len(active) + len(queued),
+        )

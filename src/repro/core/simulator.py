@@ -1,293 +1,61 @@
-"""Event-driven BFTrainer simulator (paper §4–5).
+"""Event-driven BFTrainer simulator (paper §4–5): a thin facade over the
+shared ``ControlLoop`` with the ``AnalyticBackend``.
 
-Replays an idle-node trace; at every pool event (and whenever a Trainer
-arrives or completes) it invokes an allocator, applies rescale/preemption
-costs, and integrates each Trainer's progress between events.
-
-Semantics (paper §2.1/§3.4):
-* scale-up of Trainer j stalls all its nodes for ``r_up`` seconds,
-  scale-down for ``r_dw`` seconds (costs measured both in seconds and in
-  foregone samples O_j(C_j)·R);
-* nodes leaving mid-run force a scale-down at cost ``r_dw`` (preemption);
-  the preempted node-time itself is counted as preemption cost;
-* Trainers are admitted FCFS, at most ``pj_max`` concurrently (§5.3).
+The policy — merged timeline, FCFS admission up to ``pj_max``, event
+coalescing, preemption handling, rescale-stall bookkeeping, adaptive
+``t_fwd`` — lives in core/loop.py and is identical to what
+``BFTrainerRuntime`` runs against live trainers; only progress
+integration differs (scaling-curve integral here, real train steps
+there).  See DESIGN.md §9.
 """
 from __future__ import annotations
 
-import bisect
-import heapq
-import itertools
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, fields
+from typing import Optional, Sequence, Union
 
 from repro.core.allocator import Allocator
+from repro.core.backend import AnalyticBackend
 from repro.core.events import PoolEvent
-from repro.core.milp import AllocationProblem, TrainerSpec
-from repro.core.scaling import ScalingCurve
-from repro.core.tfwd import TfwdEstimator
+from repro.core.loop import ControlLoop, EventRecord, LoopStats, TrainerJob
+
+__all__ = ["EventRecord", "SimReport", "Simulator", "TrainerJob",
+           "static_outcome"]
 
 
 @dataclass
-class TrainerJob:
-    """One Trainer (a DNN training job) submitted to BFTrainer."""
+class SimReport(LoopStats):
+    """Simulation report — exactly the shared ``LoopStats`` core."""
 
-    id: int
-    curve: ScalingCurve
-    work: float                     # total samples to process
-    n_min: int = 1
-    n_max: int = 64
-    r_up: float = 20.0              # seconds (paper §2.1 example)
-    r_dw: float = 5.0
-    arrival: float = 0.0
-    metric: str = "throughput"      # objective metric for the MILP
-
-    # --- runtime state ---
-    done: float = 0.0
-    nodes: List[int] = field(default_factory=list)
-    busy_until: float = 0.0         # rescale stall deadline
-    started_at: Optional[float] = None
-    finished_at: Optional[float] = None
-    rescale_cost_s: float = 0.0
-    rescale_cost_samples: float = 0.0
-    preempt_cost_s: float = 0.0
-    n_rescales: int = 0
-    n_preemptions: int = 0
-
-    def spec(self, max_points: int = 8) -> TrainerSpec:
-        pts, vals = self.curve.breakpoints(self.n_min, self.n_max,
-                                           metric=self.metric,
-                                           max_points=max_points)
-        return TrainerSpec(id=self.id, n_min=self.n_min, n_max=self.n_max,
-                           r_up=self.r_up, r_dw=self.r_dw,
-                           points=tuple(pts), values=tuple(vals))
-
-    @property
-    def finished(self) -> bool:
-        return self.done >= self.work
-
-    def throughput(self) -> float:
-        return self.curve(len(self.nodes))
-
-
-@dataclass
-class EventRecord:
-    time: float
-    pool_size: int
-    rescale_cost_samples: float
-    outcome_until_next: float
-    solver_wall: float
-
-
-@dataclass
-class SimReport:
-    total_samples: float
-    makespan: float
-    events_processed: int
-    allocator: str
-    per_trainer_runtime: Dict[int, float]
-    rescale_cost_samples: float
-    rescale_cost_s: float
-    preempt_cost_s: float
-    solver_wall_total: float
-    event_records: List[EventRecord] = field(default_factory=list)
-    unfinished: int = 0
+    @classmethod
+    def from_stats(cls, stats: LoopStats) -> "SimReport":
+        return cls(**{f.name: getattr(stats, f.name)
+                      for f in fields(LoopStats)})
 
 
 class Simulator:
     def __init__(self, events: Sequence[PoolEvent], jobs: Sequence[TrainerJob],
-                 allocator: Allocator, *, t_fwd=120.0,
+                 allocator: Allocator, *, t_fwd: Union[float, str] = 120.0,
                  pj_max: int = 10, horizon: Optional[float] = None,
                  sos2_points: int = 8, coalesce_window: float = 0.0):
-        self.events = sorted(events, key=lambda e: e.time)
-        self.jobs = sorted(jobs, key=lambda j: (j.arrival, j.id))
-        self.allocator = allocator
-        # t_fwd: a constant (paper) or "adaptive" (beyond-paper online
-        # quantile estimator over leave-event gaps, core/tfwd.py)
-        if t_fwd == "adaptive":
-            self.t_fwd_estimator: Optional[TfwdEstimator] = TfwdEstimator()
-            self.t_fwd = self.t_fwd_estimator.default
-        else:
-            self.t_fwd_estimator = None
-            self.t_fwd = float(t_fwd)
-        self.pj_max = pj_max
-        self.horizon = horizon
-        self.sos2_points = sos2_points
-        # coalesce_window > 0: defer re-allocation while further pool events
-        # land within the window, so a join/leave burst triggers one solve
-        # instead of N (DESIGN.md §3.4).  Preemption of departed nodes is
-        # never deferred — only the hand-out of new assignments is.
-        self.coalesce_window = coalesce_window
-
-    # ------------------------------------------------------------------
-
+        self.loop = ControlLoop(events, jobs, allocator, AnalyticBackend(),
+                                t_fwd=t_fwd, pj_max=pj_max, horizon=horizon,
+                                sos2_points=sos2_points,
+                                coalesce_window=coalesce_window)
     def run(self) -> SimReport:
-        pool: set[int] = set()
-        queue: List[TrainerJob] = list(self.jobs)     # FCFS arrival order
-        active: List[TrainerJob] = []
-        finished: List[TrainerJob] = []
-        records: List[EventRecord] = []
-        solver_wall = 0.0
+        return SimReport.from_stats(self.loop.run())
 
-        # merged timeline: pool events + job arrivals (+ completions found
-        # during integration)
-        times = sorted({e.time for e in self.events}
-                       | {j.arrival for j in self.jobs})
-        ev_by_time: Dict[float, PoolEvent] = {e.time: e for e in self.events}
-        if not times:
-            return SimReport(0.0, 0.0, 0, self.allocator.name, {}, 0.0, 0.0,
-                             0.0, 0.0)
-        t_end = self.horizon if self.horizon is not None else times[-1]
 
-        ev_times = [e.time for e in self.events]
-        i = 0
-        now = times[0]
-        n_events = 0
-        pending_realloc = True
-        pending_since: Optional[float] = None
-        while now < t_end and (i < len(times) or active or queue):
-            # 1) apply pool event at `now`, if any
-            ev = ev_by_time.get(now)
-            if ev is not None:
-                if self.t_fwd_estimator is not None:
-                    self.t_fwd_estimator.observe(now, len(ev.left))
-                for nid in ev.joined:
-                    pool.add(nid)
-                lost = set(ev.left)
-                pool -= lost
-                for j in active:
-                    taken = [n for n in j.nodes if n in lost]
-                    if taken:
-                        j.nodes = [n for n in j.nodes if n not in lost]
-                        j.n_preemptions += 1
-                        j.preempt_cost_s += len(taken) * j.r_dw
-                        if j.nodes:
-                            # forced scale-down stall
-                            j.busy_until = max(j.busy_until, now) + j.r_dw
-                            j.rescale_cost_s += j.r_dw
-                pending_realloc = True
+# every pre-refactor Simulator attribute delegates to the loop, so
+# post-construction mutation (sim.pj_max = 3, sim.allocator = other)
+# keeps taking effect
+def _delegate(attr):
+    return property(lambda self: getattr(self.loop, attr),
+                    lambda self, v: setattr(self.loop, attr, v))
 
-            # 2) admit arrivals FCFS up to pj_max
-            while queue and queue[0].arrival <= now and \
-                    len(active) < self.pj_max:
-                job = queue.pop(0)
-                active.append(job)
-                pending_realloc = True
-            # drop arrivals in the future from consideration now
-            # 3) reallocate — unless a coalescing window says another pool
-            #    event is imminent, in which case defer (bounded by one
-            #    window from the first deferred event)
-            realloc_cost_samples = 0.0
-            ev_solver_wall = 0.0
-            defer = False
-            if pending_realloc and pending_since is None:
-                pending_since = now
-            if pending_realloc and self.coalesce_window > 0.0:
-                k = bisect.bisect_right(ev_times, now)
-                nxt_ev = ev_times[k] if k < len(ev_times) else None
-                # never defer while a preemption left a Trainer below its
-                # minimum size — running there violates Eqn 4 feasibility
-                feasible = all(len(j.nodes) == 0 or len(j.nodes) >= j.n_min
-                               for j in active)
-                if feasible and nxt_ev is not None and nxt_ev < t_end and \
-                        nxt_ev - now <= self.coalesce_window and \
-                        now - pending_since < self.coalesce_window:
-                    defer = True
-            if pending_realloc and active and not defer:
-                t_fwd = (self.t_fwd_estimator.estimate()
-                         if self.t_fwd_estimator is not None else self.t_fwd)
-                prob = AllocationProblem(
-                    nodes=sorted(pool),
-                    trainers=[j.spec(self.sos2_points) for j in active],
-                    current={j.id: list(j.nodes) for j in active},
-                    t_fwd=t_fwd,
-                )
-                res = self.allocator.allocate(prob)
-                solver_wall += res.wall_time
-                ev_solver_wall = res.wall_time
-                for j in active:
-                    new_nodes = res.allocation.get(j.id, [])
-                    old = len(j.nodes)
-                    new = len(new_nodes)
-                    j.nodes = list(new_nodes)
-                    if new != old:
-                        cost = j.r_up if new > old else j.r_dw
-                        j.busy_until = max(j.busy_until, now) + cost
-                        j.rescale_cost_s += cost
-                        c_samples = j.curve(old) * cost
-                        j.rescale_cost_samples += c_samples
-                        realloc_cost_samples += c_samples
-                        j.n_rescales += 1
-                    if j.nodes and j.started_at is None:
-                        j.started_at = now
-                n_events += 1
-            if not defer:
-                pending_realloc = False
-                pending_since = None
 
-            # 4) integrate progress to the next timeline point (or a job
-            #    completion, whichever comes first)
-            nxt = t_end
-            for t in times[i:]:
-                if t > now:
-                    nxt = min(nxt, t)
-                    break
-            # completion times
-            for j in active:
-                if j.nodes and not j.finished:
-                    thr = j.throughput()
-                    if thr > 0:
-                        start = max(now, j.busy_until)
-                        eta = start + (j.work - j.done) / thr
-                        if now < eta < nxt:
-                            nxt = eta
-            outcome = 0.0
-            for j in active:
-                if j.nodes and not j.finished:
-                    thr = j.throughput()
-                    start = max(now, min(j.busy_until, nxt))
-                    delta = max(0.0, nxt - start) * thr
-                    delta = min(delta, j.work - j.done)   # clamp at completion
-                    j.done += delta
-                    outcome += delta
-            records.append(EventRecord(
-                time=now, pool_size=len(pool),
-                rescale_cost_samples=realloc_cost_samples,
-                outcome_until_next=outcome, solver_wall=ev_solver_wall))
-
-            # 5) retire finished jobs
-            newly_done = [j for j in active if j.finished]
-            if newly_done:
-                for j in newly_done:
-                    j.finished_at = nxt
-                    active.remove(j)
-                    finished.append(j)
-                pending_realloc = True
-
-            # advance
-            while i < len(times) and times[i] <= nxt:
-                i += 1
-            now = nxt
-            if not ev_by_time.get(now) and not newly_done and \
-                    not (queue and queue[0].arrival <= now) and \
-                    i >= len(times):
-                break
-
-        all_jobs = finished + active + queue
-        per_rt = {j.id: (j.finished_at - j.arrival)
-                  for j in finished if j.finished_at is not None}
-        return SimReport(
-            total_samples=sum(j.done for j in all_jobs),
-            makespan=now - times[0],
-            events_processed=n_events,
-            allocator=self.allocator.name,
-            per_trainer_runtime=per_rt,
-            rescale_cost_samples=sum(j.rescale_cost_samples for j in all_jobs),
-            rescale_cost_s=sum(j.rescale_cost_s for j in all_jobs),
-            preempt_cost_s=sum(j.preempt_cost_s for j in all_jobs),
-            solver_wall_total=solver_wall,
-            event_records=records,
-            unfinished=len(active) + len(queue),
-        )
+for _attr in ("events", "jobs", "allocator", "t_fwd", "t_fwd_estimator",
+              "pj_max", "horizon", "sos2_points", "coalesce_window"):
+    setattr(Simulator, _attr, _delegate(_attr))
 
 
 # ---------------------------------------------------------------------------
@@ -300,13 +68,18 @@ def static_outcome(jobs: Sequence[TrainerJob], n_static: int,
                    pj_max: int = 10) -> float:
     """Outcome A_s of running the same Trainers on ``n_static`` dedicated
     nodes for ``duration`` seconds (no preemption, no rescale costs other
-    than initial starts — matching the paper's cost-free static baseline)."""
+    than initial starts — matching the paper's cost-free static baseline).
+
+    Runs through the same ``ControlLoop`` as the elastic paths, so the
+    baseline and elastic policies cannot drift apart.  Arrivals before the
+    static pool opens at t=0 are clamped to 0.
+    """
     ev = [PoolEvent(time=0.0, joined=tuple(range(n_static)))]
     jobs2 = [TrainerJob(id=j.id, curve=j.curve, work=j.work, n_min=j.n_min,
                         n_max=j.n_max, r_up=0.0, r_dw=0.0,
-                        arrival=min(j.arrival, 0.0) if j.arrival == 0 else j.arrival,
+                        arrival=max(j.arrival, 0.0),
                         metric=j.metric)
              for j in jobs]
-    sim = Simulator(ev, jobs2, allocator, t_fwd=duration, pj_max=pj_max,
-                    horizon=duration)
-    return sim.run().total_samples
+    loop = ControlLoop(ev, jobs2, allocator, AnalyticBackend(),
+                       t_fwd=duration, pj_max=pj_max, horizon=duration)
+    return loop.run().total_samples

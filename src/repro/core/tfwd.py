@@ -19,7 +19,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Optional
+from typing import Deque, Optional, Tuple, Union
 
 import numpy as np
 
@@ -54,3 +54,15 @@ class TfwdEstimator:
             return self.default
         q = float(np.quantile(np.asarray(self._gaps), self.quantile))
         return float(np.clip(q, self.t_min, self.t_max))
+
+
+def resolve_tfwd(t_fwd: Union[float, str]
+                 ) -> Tuple[Optional[TfwdEstimator], float]:
+    """Parse a ``t_fwd`` config value as the ControlLoop accepts it: a
+    constant (the paper's fixed forward-looking time) returns
+    ``(None, value)``; the string ``"adaptive"`` returns a fresh estimator
+    and its pre-observation default."""
+    if t_fwd == "adaptive":
+        est = TfwdEstimator()
+        return est, est.default
+    return None, float(t_fwd)

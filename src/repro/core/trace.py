@@ -158,7 +158,8 @@ def clip_fragments(fragments: Sequence[Fragment], t0: float,
 # a top-level import would be circular (sched computes its TraceStats
 # through this module).
 _SCHED_REEXPORTS = ("SCENARIOS", "build_scenario", "all_scenarios",
-                    "simulate_schedule", "synthetic_workload")
+                    "run_scenario", "simulate_schedule",
+                    "synthetic_workload")
 
 
 def __getattr__(name):

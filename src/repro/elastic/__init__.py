@@ -1,5 +1,6 @@
+from repro.core.backend import LiveBackend
 from repro.elastic.runtime import BFTrainerRuntime, ManagedTrainer, RuntimeReport
 from repro.elastic.trainer import ElasticTrainer, TrainMetrics
 
-__all__ = ["BFTrainerRuntime", "ManagedTrainer", "RuntimeReport",
-           "ElasticTrainer", "TrainMetrics"]
+__all__ = ["BFTrainerRuntime", "LiveBackend", "ManagedTrainer",
+           "RuntimeReport", "ElasticTrainer", "TrainMetrics"]

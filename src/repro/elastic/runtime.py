@@ -1,23 +1,25 @@
 """BFTrainerRuntime: the full system — real ElasticTrainers driven by the
 MILP allocator over a replayed idle-node trace.
 
-This is the deployable composition: the discrete-event layer decides *who
-gets which nodes when* (paper §3), and each decision is executed against
-live JAX Trainers (rescale + train steps).  Trace time is scaled by
-``time_scale`` so a week-long trace can be exercised in seconds of wall
-time while still performing real training steps at each interval.
+This is the deployable composition, now a thin facade over the shared
+``ControlLoop`` with the ``LiveBackend`` (DESIGN.md §9): the *same*
+policy engine that powers the trace-driven ``Simulator`` — FCFS admission
+up to ``pj_max``, event coalescing, preemption handling, rescale-stall
+accounting, adaptive ``t_fwd`` — executes each decision against live JAX
+Trainers (rescale + train steps).  Trace time is scaled by ``time_scale``
+so a week-long trace can be exercised in seconds of wall time while still
+performing real training steps at each interval.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
-
-import jax
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core.allocator import Allocator, MILPAllocator
+from repro.core.backend import LiveBackend
 from repro.core.events import PoolEvent
-from repro.core.milp import AllocationProblem, TrainerSpec
+from repro.core.loop import ControlLoop, LoopStats
 from repro.core.scaling import ScalingCurve
 from repro.elastic.trainer import ElasticTrainer
 
@@ -32,14 +34,6 @@ class ManagedTrainer:
     steps_done: int = 0
     samples_done: int = 0
     target_steps: Optional[int] = None
-
-    def spec(self, metric: str = "throughput") -> TrainerSpec:
-        r_up, r_dw = self.trainer.measured_rescale_costs()
-        pts, vals = self.curve.breakpoints(self.n_min, self.n_max,
-                                           metric=metric)
-        return TrainerSpec(id=self.id, n_min=self.n_min, n_max=self.n_max,
-                           r_up=r_up, r_dw=r_dw, points=tuple(pts),
-                           values=tuple(vals))
 
     @property
     def finished(self) -> bool:
@@ -56,73 +50,49 @@ class RuntimeReport:
     events: int
     wall_time_s: float
     solver_wall_s: float
+    # the shared policy-side report core (same shape the Simulator returns)
+    stats: Optional[LoopStats] = None
 
 
 class BFTrainerRuntime:
     def __init__(self, managed: Sequence[ManagedTrainer],
                  allocator: Optional[Allocator] = None, *,
-                 t_fwd: float = 120.0, steps_per_second: float = 1.0,
-                 metric: str = "throughput"):
+                 t_fwd: Union[float, str] = 120.0,
+                 steps_per_second: float = 1.0,
+                 metric: str = "throughput", pj_max: int = 10,
+                 coalesce_window: float = 0.0, sos2_points: int = 8):
         self.managed = list(managed)
         self.allocator = allocator or MILPAllocator("fast")
         self.t_fwd = t_fwd
         self.steps_per_second = steps_per_second
         self.metric = metric
+        self.pj_max = pj_max
+        self.coalesce_window = coalesce_window
+        self.sos2_points = sos2_points
 
     def run(self, events: Sequence[PoolEvent], *, time_scale: float = 1.0,
-            max_steps_per_interval: int = 4) -> RuntimeReport:
+            max_steps_per_interval: int = 4,
+            horizon: Optional[float] = None,
+            measure_rescale_costs: bool = True) -> RuntimeReport:
         t0 = time.perf_counter()
-        pool: set[int] = set()
-        current: Dict[int, List[int]] = {m.id: [] for m in self.managed}
-        losses: Dict[int, List[float]] = {m.id: [] for m in self.managed}
-        solver_wall = 0.0
-        n_events = 0
-
-        events = sorted(events, key=lambda e: e.time)
-        for k, ev in enumerate(events):
-            pool |= set(ev.joined)
-            pool -= set(ev.left)
-            active = [m for m in self.managed if not m.finished]
-            if not active:
-                break
-            for m in active:   # preempt lost nodes
-                current[m.id] = [n for n in current[m.id] if n in pool]
-
-            prob = AllocationProblem(
-                nodes=sorted(pool),
-                trainers=[m.spec(self.metric) for m in active],
-                current={m.id: current[m.id] for m in active},
-                t_fwd=self.t_fwd)
-            res = self.allocator.allocate(prob)
-            solver_wall += res.wall_time
-            n_events += 1
-
-            for m in active:
-                new_nodes = res.allocation.get(m.id, [])
-                current[m.id] = list(new_nodes)
-                if len(new_nodes) != m.trainer.n_nodes:
-                    m.trainer.rescale(len(new_nodes))
-
-            # real training during the interval (scaled time)
-            dt = (events[k + 1].time - ev.time) if k + 1 < len(events) else 0.0
-            n_steps = min(max_steps_per_interval,
-                          max(0, int(dt * time_scale * self.steps_per_second)))
-            for m in active:
-                if m.trainer.n_nodes > 0:
-                    for _ in range(n_steps):
-                        if m.finished:
-                            break
-                        met = m.trainer.train_step()
-                        m.steps_done += 1
-                        m.samples_done += met.samples
-                        losses[m.id].append(met.loss)
-
+        backend = LiveBackend(
+            self.managed, time_scale=time_scale,
+            steps_per_second=self.steps_per_second,
+            max_steps_per_interval=max_steps_per_interval,
+            metric=self.metric,
+            measure_rescale_costs=measure_rescale_costs)
+        loop = ControlLoop(events, backend.jobs(), self.allocator, backend,
+                           t_fwd=self.t_fwd, pj_max=self.pj_max,
+                           horizon=horizon, sos2_points=self.sos2_points,
+                           coalesce_window=self.coalesce_window)
+        stats = loop.run()
         return RuntimeReport(
             steps={m.id: m.steps_done for m in self.managed},
             samples={m.id: m.samples_done for m in self.managed},
-            losses=losses,
+            losses=backend.losses,
             rescales={m.id: len(m.trainer.rescale_history)
                       for m in self.managed},
-            events=n_events,
+            events=stats.events_processed,
             wall_time_s=time.perf_counter() - t0,
-            solver_wall_s=solver_wall)
+            solver_wall_s=stats.solver_wall_total,
+            stats=stats)

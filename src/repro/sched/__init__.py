@@ -15,6 +15,7 @@ from repro.sched.scenarios import (
     Scenario,
     all_scenarios,
     build_scenario,
+    run_scenario,
 )
 from repro.sched.swf import (
     BatchJob,
@@ -29,6 +30,7 @@ __all__ = [
     "BLOCKED", "LOW_LOAD", "Hole", "JobRecord", "SchedResult", "SchedStats",
     "simulate_schedule",
     "SCENARIOS", "Scenario", "all_scenarios", "build_scenario",
+    "run_scenario",
     "BatchJob", "dump_swf", "mean_size", "offered_load", "parse_swf",
     "synthetic_workload",
 ]

@@ -215,3 +215,43 @@ def build_scenario(name: str, scale: float = 1.0, seed: int = 0) -> Scenario:
 def all_scenarios(scale: float = 1.0, seed: int = 0) -> Iterator[Scenario]:
     for name in SCENARIOS:
         yield build_scenario(name, scale=scale, seed=seed)
+
+
+def run_scenario(scenario, trainers, *, allocator=None, run_live: bool = False,
+                 t_fwd=120.0, pj_max: int = 10, coalesce_window: float = 0.0,
+                 horizon: float = None, scale: float = 1.0, seed: int = 0,
+                 time_scale: float = 1.0, max_steps_per_interval: int = 4,
+                 steps_per_second: float = 1.0):
+    """Run a scenario's unfillable-hole trace through the shared
+    ``ControlLoop`` — simulated or live, same policy (DESIGN.md §9).
+
+    ``scenario`` is a ``Scenario`` or a name from ``SCENARIOS`` (built at
+    ``scale``/``seed``).  With ``run_live=False`` (default), ``trainers``
+    is a list of ``TrainerJob``s and the trace replays through the
+    ``Simulator`` (AnalyticBackend), returning a ``SimReport``.  With
+    ``run_live=True``, ``trainers`` is a list of ``ManagedTrainer``s
+    wrapping real ``ElasticTrainer``s; the same decisions drive actual
+    rescales and train steps (LiveBackend, trace time compressed by
+    ``time_scale``), returning a ``RuntimeReport``.
+    """
+    from repro.core import AllocationEngine
+    from repro.core.events import fragments_to_events
+
+    if isinstance(scenario, str):
+        scenario = build_scenario(scenario, scale=scale, seed=seed)
+    events = fragments_to_events(scenario.fragments)
+    if horizon is None:
+        horizon = scenario.duration
+    if allocator is None:
+        allocator = AllocationEngine()
+    if run_live:
+        from repro.elastic import BFTrainerRuntime
+        rt = BFTrainerRuntime(trainers, allocator, t_fwd=t_fwd,
+                              pj_max=pj_max, coalesce_window=coalesce_window,
+                              steps_per_second=steps_per_second)
+        return rt.run(events, time_scale=time_scale,
+                      max_steps_per_interval=max_steps_per_interval,
+                      horizon=horizon)
+    from repro.core import Simulator
+    return Simulator(events, trainers, allocator, t_fwd=t_fwd, pj_max=pj_max,
+                     horizon=horizon, coalesce_window=coalesce_window).run()

@@ -1,0 +1,250 @@
+"""ControlLoop / ExecutionBackend split (DESIGN.md §9): backend parity —
+the same policy engine must hand identical allocation decisions to the
+analytic (simulation) and live (real JAX trainers) backends — plus the
+live path's newly policy-complete behaviours (pj_max, FCFS admission,
+coalescing, stall accounting)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (
+    AllocationEngine,
+    Allocator,
+    AnalyticBackend,
+    ControlLoop,
+    MILPAllocator,
+    Simulator,
+    TrainerJob,
+    amdahl_curve,
+    fragments_to_events,
+    generate_summit_like,
+)
+from repro.elastic import BFTrainerRuntime, ElasticTrainer, ManagedTrainer
+from repro.models import build_model
+
+R_UP, R_DW = 0.5, 0.1   # ElasticTrainer's pre-measurement defaults
+
+
+class RecordingAllocator(Allocator):
+    """Wraps an allocator and records every (problem, decision) pair in a
+    node-id-level canonical form."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = f"recording-{inner.name}"
+        self.calls = []
+
+    def allocate(self, prob):
+        res = self.inner.allocate(prob)
+        self.calls.append((
+            tuple(sorted(prob.nodes)),
+            round(prob.t_fwd, 9),
+            tuple(sorted((tid, tuple(sorted(cur)))
+                         for tid, cur in prob.current.items())),
+            tuple(sorted((t.id, tuple(sorted(res.allocation.get(t.id, ()))))
+                         for t in prob.trainers)),
+        ))
+        return res
+
+
+def tiny_trainer(seed=0):
+    from repro.optim import AdamW
+    cfg = get_arch("gemma-2b").reduced()
+    model = build_model(cfg, remat=False)
+    tr = ElasticTrainer(model, per_node_batch=2, seed=seed,
+                        optimizer=AdamW(lr=3e-3), warmup_steps=2)
+    tr.pipeline.cfg.seq_len = 32
+    return tr
+
+
+def small_events(seed=17, n_nodes=4, hours=12.0):
+    frags = generate_summit_like(n_nodes=n_nodes, duration=hours * 3600.0,
+                                 seed=seed)
+    return fragments_to_events(frags)
+
+
+CURVES = [amdahl_curve("t0", 100.0, 0.2), amdahl_curve("t1", 120.0, 0.15)]
+
+
+def sim_jobs():
+    return [TrainerJob(id=i, curve=CURVES[i], work=math.inf, n_min=1,
+                       n_max=1, r_up=R_UP, r_dw=R_DW) for i in range(2)]
+
+
+def managed_trainers():
+    return [ManagedTrainer(id=i, trainer=tiny_trainer(seed=10 + i),
+                           curve=CURVES[i], n_min=1, n_max=1,
+                           target_steps=None) for i in range(2)]
+
+
+def test_analytic_and_live_backends_get_identical_decisions():
+    """The parity guarantee: on the same trace with a fixed allocator, the
+    loop presents the same problems and hands out the same allocations
+    regardless of execution substrate."""
+    events = small_events()
+    kw = dict(t_fwd=120.0, pj_max=10, coalesce_window=30.0)
+
+    rec_sim = RecordingAllocator(AllocationEngine(time_budget=0.0))
+    Simulator(events, sim_jobs(), rec_sim, horizon=12 * 3600.0, **kw).run()
+
+    rec_live = RecordingAllocator(AllocationEngine(time_budget=0.0))
+    rt = BFTrainerRuntime(managed_trainers(), rec_live, **kw)
+    rep = rt.run(events, time_scale=1.0, max_steps_per_interval=1,
+                 horizon=12 * 3600.0, measure_rescale_costs=False)
+
+    assert rec_sim.calls, "no allocation decisions recorded"
+    assert rec_sim.calls == rec_live.calls
+    # and the live side really trained while following those decisions
+    assert sum(rep.steps.values()) > 0
+    assert all(np.isfinite(v) for ls in rep.losses.values() for v in ls)
+
+
+def test_live_runtime_enforces_pjmax_and_fcfs():
+    """Pre-refactor, BFTrainerRuntime silently dropped pj_max/FCFS; via the
+    shared loop, at most pj_max Trainers are ever in a problem, admitted
+    in id (arrival) order."""
+    events = small_events(seed=23)
+    managed = [ManagedTrainer(id=i, trainer=tiny_trainer(seed=30 + i),
+                              curve=CURVES[i % 2], n_min=1, n_max=1,
+                              target_steps=2) for i in range(2)]
+    rec = RecordingAllocator(MILPAllocator("fast"))
+    rt = BFTrainerRuntime(managed, rec, t_fwd=120.0, pj_max=1)
+    rep = rt.run(events, time_scale=1.0, max_steps_per_interval=2)
+
+    ids_per_call = [tuple(tid for tid, _ in call[2]) for call in rec.calls]
+    assert all(len(ids) <= 1 for ids in ids_per_call)
+    assert ids_per_call[0] == (0,)           # FCFS: lowest id first
+    # trainer 1 only enters after trainer 0 finished its target steps
+    assert rep.steps[0] == 2
+    assert rep.steps[1] > 0
+    assert (1,) in ids_per_call
+
+
+def test_runtime_report_carries_shared_loop_stats():
+    events = small_events(seed=29)
+    managed = managed_trainers()
+    rt = BFTrainerRuntime(managed, AllocationEngine(time_budget=0.0),
+                          t_fwd=120.0)
+    rep = rt.run(events, max_steps_per_interval=1, horizon=6 * 3600.0)
+    st = rep.stats
+    assert st is not None
+    assert st.events_processed == rep.events
+    assert st.event_records and st.makespan > 0
+    # preemption/rescale accounting now exists on the live path
+    assert st.rescale_cost_s >= 0 and st.preempt_cost_s >= 0
+    assert all(r.allocated <= r.pool_size for r in st.event_records)
+
+
+def test_live_coalescing_reduces_solves():
+    """coalesce_window now applies to the live path: a join/leave burst
+    triggers fewer solves with the window on."""
+    from repro.core.events import PoolEvent
+    events = []
+    t, nid = 0.0, 0
+    for burst in range(4):
+        for k in range(3):
+            events.append(PoolEvent(time=t, joined=(nid,)))
+            nid += 1
+            t += 5.0
+        t += 900.0
+
+    def run(window):
+        rec = RecordingAllocator(AllocationEngine(time_budget=0.0))
+        rt = BFTrainerRuntime(
+            [ManagedTrainer(id=0, trainer=tiny_trainer(seed=40),
+                            curve=CURVES[0], n_min=1, n_max=1)],
+            rec, t_fwd=120.0, coalesce_window=window)
+        rt.run(events, max_steps_per_interval=1, horizon=t)
+        return len(rec.calls)
+
+    assert run(30.0) < run(0.0)
+
+
+def test_static_outcome_clamps_negative_arrivals():
+    """The static baseline opens its pool at t=0; a Trainer 'arriving'
+    before that must be treated as arriving at 0, not silently keep a
+    negative arrival (the old dead-expression bug)."""
+    from repro.core import static_outcome, tab2_curve
+    jobs = [TrainerJob(id=0, curve=tab2_curve("ShuffleNet"), work=1e12,
+                       n_min=1, n_max=8, arrival=-500.0)]
+    ref = [TrainerJob(id=0, curve=tab2_curve("ShuffleNet"), work=1e12,
+                      n_min=1, n_max=8, arrival=0.0)]
+    a_neg = static_outcome(jobs, 4, 3600.0, MILPAllocator("fast"))
+    a_ref = static_outcome(ref, 4, 3600.0, MILPAllocator("fast"))
+    assert a_neg == pytest.approx(a_ref)
+    assert a_neg > 0
+
+
+def test_duplicate_timestamp_events_are_merged_not_dropped():
+    """Hand-built event streams (unlike fragments_to_events output) may
+    carry several PoolEvents at one timestamp; the loop must apply all of
+    them, as the pre-refactor runtime did when iterating the raw list."""
+    from repro.core.events import PoolEvent
+    events = [PoolEvent(time=0.0, joined=(0,)),
+              PoolEvent(time=0.0, joined=(1,)),
+              PoolEvent(time=50.0, left=(0,)),
+              PoolEvent(time=50.0, left=(1,)),
+              PoolEvent(time=60.0, joined=(2,))]
+    jobs = [TrainerJob(id=0, curve=CURVES[0], work=1e12, n_min=1, n_max=4)]
+    stats = ControlLoop(events, jobs, MILPAllocator("fast"),
+                        AnalyticBackend(), t_fwd=60.0, horizon=100.0).run()
+    by_time = {r.time: r for r in stats.event_records}
+    assert by_time[0.0].pool_size == 2
+    assert by_time[50.0].pool_size == 0
+    assert all(r.allocated <= r.pool_size for r in stats.event_records)
+
+    # sequential semantics: leave followed by same-instant rejoin keeps the
+    # node (the pre-refactor runtime applied same-time events in order)
+    events2 = [PoolEvent(time=0.0, joined=(0,)),
+               PoolEvent(time=50.0, left=(0,)),
+               PoolEvent(time=50.0, joined=(0,)),
+               PoolEvent(time=200.0, left=(0,))]
+    stats2 = ControlLoop(events2, [TrainerJob(id=0, curve=CURVES[0],
+                                              work=1e12, n_max=4)],
+                         MILPAllocator("fast"), AnalyticBackend(),
+                         t_fwd=60.0, horizon=300.0).run()
+    by_time2 = {r.time: r for r in stats2.event_records}
+    assert by_time2[50.0].pool_size == 1
+    assert by_time2[200.0].pool_size == 0
+
+    # post-construction mutation goes through the same normalization
+    sim = Simulator(events2, [TrainerJob(id=0, curve=CURVES[0], work=1e12,
+                                         n_max=4)],
+                    MILPAllocator("fast"), t_fwd=60.0, horizon=100.0)
+    sim.events = [PoolEvent(time=0.0, joined=(0,)),
+                  PoolEvent(time=0.0, joined=(1,))]
+    rep = sim.run()
+    assert rep.event_records[0].pool_size == 2
+
+
+def test_prefinished_job_neither_admitted_nor_unfinished():
+    """A job that is already done on entry (resumed run) must not occupy a
+    pj_max slot, must not be rescaled, and must not count as unfinished."""
+    events = small_events(seed=37)
+    pre = TrainerJob(id=0, curve=CURVES[0], work=5.0)
+    pre.done = 10.0
+    live = TrainerJob(id=1, curve=CURVES[1], work=1e12, n_min=1, n_max=4)
+    stats = ControlLoop(events, [pre, live], MILPAllocator("fast"),
+                        AnalyticBackend(), t_fwd=120.0, pj_max=1,
+                        horizon=6 * 3600.0).run()
+    assert pre.n_rescales == 0 and not pre.nodes
+    assert live.done > 0                      # the slot went to the real job
+    assert stats.unfinished == 1              # only the still-running job
+
+
+def test_control_loop_direct_use_matches_simulator_facade():
+    """Simulator is a pure facade: driving the ControlLoop directly with
+    an AnalyticBackend gives the identical report core."""
+    events = small_events(seed=31)
+    jobs = lambda: [TrainerJob(id=i, curve=CURVES[i % 2], work=1e9,
+                               n_min=1, n_max=2) for i in range(3)]
+    rep = Simulator(events, jobs(), MILPAllocator("fast"), t_fwd=120.0,
+                    horizon=6 * 3600.0).run()
+    stats = ControlLoop(events, jobs(), MILPAllocator("fast"),
+                        AnalyticBackend(), t_fwd=120.0,
+                        horizon=6 * 3600.0).run()
+    assert rep.total_samples == pytest.approx(stats.total_samples)
+    assert rep.events_processed == stats.events_processed
+    assert rep.rescale_cost_s == pytest.approx(stats.rescale_cost_s)

@@ -79,6 +79,53 @@ def test_pool_size_conservation(raw):
 
 
 # ---------------------------------------------------------------------------
+# ControlLoop conservation (shared policy engine, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@given(fragment_lists,
+       st.lists(st.tuples(st.integers(1, 3),          # n_min
+                          st.integers(3, 8),          # n_max - extra
+                          st.floats(1e3, 1e9),        # work
+                          st.floats(0.0, 2e3)),       # arrival
+                min_size=1, max_size=4),
+       st.sampled_from([0.0, 30.0]))
+@settings(max_examples=40, deadline=None)
+def test_control_loop_never_allocates_beyond_pool(raw, raw_jobs, window):
+    """Conservation invariant on the shared loop: at every event the nodes
+    held by Trainers never exceed the pool, so allocated node-seconds ≤
+    pool node-seconds over the whole replay."""
+    from repro.core import (AnalyticBackend, ControlLoop,
+                            EqualShareAllocator, TrainerJob, amdahl_curve)
+
+    frags, per_node_t = [], {}
+    for node, start, dur in raw:
+        t0 = max(start, per_node_t.get(node, 0.0) + 1e-3)
+        frags.append(Fragment(node=node, start=t0, end=t0 + dur))
+        per_node_t[node] = t0 + dur
+    events = fragments_to_events(frags)
+    jobs = [TrainerJob(id=i, curve=amdahl_curve(f"j{i}", 50.0, 0.3),
+                       work=w, n_min=lo, n_max=lo + hi, arrival=arr)
+            for i, (lo, hi, w, arr) in enumerate(raw_jobs)]
+    stats = ControlLoop(events, jobs, EqualShareAllocator(),
+                        AnalyticBackend(), t_fwd=60.0,
+                        coalesce_window=window).run()
+
+    recs = stats.event_records
+    assert all(r.allocated <= r.pool_size for r in recs)
+    t_close = max(r.time for r in recs) if recs else 0.0
+    alloc_ns = pool_ns = 0.0
+    for a, b in zip(recs, recs[1:] + [None]):
+        dt = (b.time if b is not None else t_close) - a.time
+        alloc_ns += a.allocated * dt
+        pool_ns += a.pool_size * dt
+    assert alloc_ns <= pool_ns + 1e-9
+    # and progress is only ever non-negative and bounded by requested work
+    assert stats.total_samples >= 0.0
+    assert all(0.0 <= j.done <= j.work for j in jobs)
+
+
+# ---------------------------------------------------------------------------
 # Scheduler-derived traces (repro.sched)
 # ---------------------------------------------------------------------------
 
