@@ -1,0 +1,151 @@
+"""Policy sweep: the objective portfolio (repro/core/objectives.py)
+across the workload scenario library — the throughput-vs-fairness
+tradeoff curve (EXPERIMENTS.md §Objectives, DESIGN.md §10).
+
+For every scenario x policy we replay the scenario's unfillable-hole
+trace in the ``Simulator`` under the ``AllocationEngine`` and report:
+
+* ``efficiency_u``      — U = A_e / A_s vs the dedicated-eq-nodes static
+  baseline (paper §4.1.2; same denominator for every policy);
+* ``jain_fairness``     — Jain index over per-job normalized progress
+  x_j = min(done_j / work_j, 1)  (1 = perfectly even);
+* ``min_norm_progress`` — min_j x_j (what MaxMinFairness maximizes);
+* ``deadline_miss_rate``— fraction of jobs whose soft deadline passed
+  unfinished (what DeadlineAware minimizes);
+* ``solver_wall_s`` / ``cache_hit_rate`` — policy cost in the engine.
+
+Jobs carry finite work (sized so a fair share finishes ~most of it),
+staggered soft deadlines, and node-second budgets on half the fleet, so
+every policy has something to act on.  ``--smoke`` (or ``BENCH_SMOKE=1``)
+shrinks scenarios for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import List, Sequence
+
+from benchmarks.common import FULL, emit
+from repro.core import (
+    AllocationEngine,
+    CostCap,
+    DeadlineAware,
+    MaxMinFairness,
+    MILPAllocator,
+    Simulator,
+    Throughput,
+    WeightedPriority,
+    eq_nodes,
+    fragments_to_events,
+    static_outcome,
+)
+from repro.core.loop import TrainerJob
+from repro.core.scaling import TAB2, tab2_curve
+from repro.sched import SCENARIOS, build_scenario
+
+
+def policy_jobs(n: int, duration: float, share: float,
+                seed: int = 0) -> List[TrainerJob]:
+    """Trainers cycled from Tab 2 with the per-job policy fields set:
+    finite work 1.5x what a fair ``share``-node slice delivers over the
+    trace (so the pool is contended and progress spreads out) — except
+    every third job, which is smaller (0.8x fair share) and carries a
+    soft deadline at 75% of the trace (achievable at ~1.1x its fair
+    rate, so deadline-aware allocation can actually save it); double
+    weight on the first quarter of the fleet, and a node-second budget
+    on every other job."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    names = list(TAB2)
+    jobs, t = [], 0.0
+    for i in range(n):
+        curve = tab2_curve(names[i % len(names)])
+        t += float(rng.exponential(duration / (4.0 * max(n, 1))))
+        deadlined = i % 3 == 0
+        work = ((0.8 if deadlined else 1.5)
+                * duration * curve(max(share, 1.0)))
+        jobs.append(TrainerJob(
+            id=i, curve=curve, work=work, n_min=1, n_max=24,
+            r_up=20.0, r_dw=5.0, arrival=t,
+            weight=2.0 if i < max(1, n // 4) else 1.0,
+            deadline=(t + 0.75 * duration) if deadlined else None,
+            budget=(0.35 * duration * share if i % 2 else None)))
+    return jobs
+
+
+def _policies():
+    return (
+        ("throughput", lambda: Throughput()),
+        ("weighted", lambda: WeightedPriority()),
+        ("maxmin", lambda: MaxMinFairness()),
+        ("deadline", lambda: DeadlineAware()),
+        ("costcap", lambda: CostCap()),
+    )
+
+
+def jain(xs: Sequence[float]) -> float:
+    """Jain fairness index (Σx)² / (n·Σx²); 1.0 when perfectly even."""
+    xs = [max(x, 0.0) for x in xs]
+    if not xs or sum(xs) == 0:
+        return 0.0
+    return sum(xs) ** 2 / (len(xs) * sum(x * x for x in xs))
+
+
+def run_scenario_sweep(name: str, scale: float, seed: int = 7,
+                       t_fwd: float = 120.0) -> None:
+    sc = build_scenario(name, scale=scale, seed=seed)
+    events = fragments_to_events(sc.fragments)
+    n_eq = max(1, round(eq_nodes(events, 0.0, sc.duration)))
+    # capped at the default pj_max so admission never confounds fairness
+    n_jobs = min(10, max(4, int(round(sc.stats.eq_nodes / 3))))
+    share = sc.stats.eq_nodes / max(n_jobs, 1)
+
+    jobs_fn = lambda: policy_jobs(n_jobs, sc.duration, share, seed=seed)
+    # one static baseline per scenario: the U denominator is
+    # policy-independent so efficiency stays comparable across policies
+    a_s = static_outcome(jobs_fn(), n_eq, sc.duration, MILPAllocator("fast"))
+    emit(f"objectives/{name}/n_jobs", n_jobs)
+    emit(f"objectives/{name}/eq_nodes", n_eq)
+
+    for pol_name, mk in _policies():
+        eng = AllocationEngine(time_budget=0.050)
+        jobs = jobs_fn()
+        rep = Simulator(events, jobs, eng, t_fwd=t_fwd,
+                        horizon=sc.duration, objective=mk()).run()
+        u = rep.total_samples / a_s if a_s > 0 else 0.0
+        xs = [min(j.done / j.work, 1.0) for j in jobs]
+        missed = [j for j in jobs
+                  if j.deadline is not None and j.deadline <= sc.duration
+                  and (j.finished_at is None or j.finished_at > j.deadline)]
+        pre = f"objectives/{name}/{pol_name}"
+        emit(f"{pre}/efficiency_u", f"{u:.3f}", "vs dedicated eq-nodes")
+        emit(f"{pre}/jain_fairness", f"{jain(xs):.3f}")
+        emit(f"{pre}/min_norm_progress", f"{min(xs):.3f}")
+        emit(f"{pre}/deadline_miss_rate",
+             f"{len(missed) / max(len(jobs), 1):.2f}")
+        emit(f"{pre}/solver_wall_s", f"{rep.solver_wall_total:.3f}")
+        s = eng.stats
+        emit(f"{pre}/cache_hit_rate",
+             f"{(s.cache_hits / s.events if s.events else 0.0):.2f}")
+
+
+def main(argv: Sequence[str] = ()) -> None:
+    # default () — benchmarks.run calls main() with section names still in
+    # sys.argv, so only the __main__ guard forwards the real CLI args
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scenarios for CI smoke runs")
+    ap.add_argument("--scenario", action="append", choices=sorted(SCENARIOS),
+                    help="restrict to named scenario(s)")
+    args = ap.parse_args(argv)
+    smoke = args.smoke or bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    scale = 0.12 if smoke else (1.0 if FULL else 0.5)
+    names = args.scenario or (
+        ["bursty", "capacity"] if smoke else sorted(SCENARIOS))
+    for name in names:
+        run_scenario_sweep(name, scale=scale)
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

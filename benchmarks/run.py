@@ -20,6 +20,8 @@ SECTIONS = [
      "benchmarks.bench_objective"),
     ("workloads", "Scenario library: engine efficiency per workload profile",
      "benchmarks.bench_workloads"),
+    ("objectives", "Policy portfolio: throughput-vs-fairness across scenarios",
+     "benchmarks.bench_objectives"),
     ("runtime", "Live ControlLoop: real elastic trainers on a replayed trace",
      "benchmarks.bench_runtime"),
     ("pjmax", "Fig 14: max parallel Trainers", "benchmarks.bench_pjmax"),

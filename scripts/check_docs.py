@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Docs-consistency check: every ``repro`` import shown in a Markdown
+python code fence must actually work against ``src/``.
+
+Scans the given Markdown files (default: README.md DESIGN.md
+EXPERIMENTS.md), extracts fenced ```python blocks, parses each with
+``ast`` (fences that are pseudo-code and do not parse are skipped), and
+for every ``import repro...`` / ``from repro... import name`` statement
+verifies the module imports and the names exist.  Exits non-zero with a
+per-failure report — wired into CI so documented examples cannot rot
+when the API moves (as happened after the PR-3 facade refactor).
+
+Usage:  PYTHONPATH=src python scripts/check_docs.py [files...]
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import re
+import sys
+from pathlib import Path
+
+FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def iter_repro_imports(code: str):
+    """Yield (lineno, module, names) for repro imports in parseable code."""
+    try:
+        tree = ast.parse(code)
+    except SyntaxError:
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.split(".")[0] == "repro":
+                    yield node.lineno, alias.name, []
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and node.module.split(".")[0] == "repro":
+                yield (node.lineno, node.module,
+                       [a.name for a in node.names])
+
+
+def check_file(path: Path) -> list:
+    failures = []
+    text = path.read_text(encoding="utf-8")
+    for m in FENCE.finditer(text):
+        code = m.group(1)
+        for lineno, module, names in iter_repro_imports(code):
+            try:
+                mod = importlib.import_module(module)
+            except Exception as exc:
+                failures.append(f"{path}: import {module}: {exc!r}")
+                continue
+            for name in names:
+                if name == "*":
+                    continue
+                if not hasattr(mod, name):
+                    failures.append(
+                        f"{path}: from {module} import {name}: "
+                        f"name does not exist")
+    return failures
+
+
+def main(argv) -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = ([Path(a) for a in argv] if argv else
+             [root / n for n in ("README.md", "DESIGN.md", "EXPERIMENTS.md")])
+    failures, checked = [], 0
+    for f in files:
+        if not f.exists():
+            failures.append(f"{f}: file not found")
+            continue
+        checked += 1
+        failures.extend(check_file(f))
+    if failures:
+        print(f"docs-consistency: {len(failures)} failure(s):")
+        for fail in failures:
+            print(f"  {fail}")
+        return 1
+    print(f"docs-consistency: OK ({checked} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

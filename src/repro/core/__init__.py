@@ -16,11 +16,27 @@ from repro.core.events import (
 from repro.core.greedy import solve_greedy
 from repro.core.loop import ControlLoop, EventRecord, LoopStats
 from repro.core.metrics import Efficiency, ROI, eq_nodes, resource_integral
-from repro.core.milp import AllocationProblem, AllocationResult, TrainerSpec, solve_node_milp
+from repro.core.milp import (
+    AllocationProblem,
+    AllocationResult,
+    TrainerSpec,
+    project_current,
+    solve_node_milp,
+)
 from repro.core.milp_fast import reconstruct_map, solve_fast_milp
+from repro.core.objectives import (
+    OBJECTIVES,
+    CostCap,
+    DeadlineAware,
+    MaxMinFairness,
+    Objective,
+    Throughput,
+    WeightedPriority,
+    resolve_objective,
+)
 from repro.core.scaling import ScalingCurve, all_tab2_curves, amdahl_curve, model_zoo_curves, tab2_curve
 from repro.core.simulator import SimReport, Simulator, TrainerJob, static_outcome
-from repro.core.tfwd import TfwdEstimator
+from repro.core.tfwd import TfwdEstimator, resolve_tfwd
 from repro.core.trace import TraceStats, clip_fragments, generate_summit_like, load_trace_csv, trace_stats
 
 __all__ = [
@@ -31,10 +47,13 @@ __all__ = [
     "Fragment", "PoolEvent", "fragments_to_events", "merge_events",
     "merge_fragments", "pool_sizes", "validate_fragments",
     "Efficiency", "ROI", "eq_nodes", "resource_integral",
-    "AllocationProblem", "AllocationResult", "TrainerSpec", "solve_node_milp",
+    "AllocationProblem", "AllocationResult", "TrainerSpec",
+    "project_current", "solve_node_milp",
     "reconstruct_map", "solve_fast_milp",
+    "OBJECTIVES", "CostCap", "DeadlineAware", "MaxMinFairness", "Objective",
+    "Throughput", "WeightedPriority", "resolve_objective",
     "ScalingCurve", "all_tab2_curves", "amdahl_curve", "model_zoo_curves", "tab2_curve",
     "SimReport", "Simulator", "TrainerJob", "static_outcome",
-    "TfwdEstimator",
+    "TfwdEstimator", "resolve_tfwd",
     "TraceStats", "clip_fragments", "generate_summit_like", "load_trace_csv", "trace_stats",
 ]

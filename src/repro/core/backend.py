@@ -52,14 +52,16 @@ class ExecutionBackend:
 
     def eta(self, job: TrainerJob, now: float,
             horizon: float) -> Optional[float]:
-        """Predicted completion time under the current allocation, or
-        ``None`` if unknown (the loop then integrates to the horizon)."""
+        """Predicted completion time (absolute trace-clock seconds)
+        under the current allocation, or ``None`` if unknown (the loop
+        then integrates to the horizon)."""
         return None
 
     def advance(self, job: TrainerJob, start: float, end: float) -> float:
-        """Execute/integrate progress over [start, end); returns samples
-        processed.  Must respect ``job.busy_until`` (rescale stall) and
-        update ``job.done``."""
+        """Execute/integrate progress over ``[start, end)`` (trace-clock
+        seconds); returns progress units processed (samples analytic,
+        samples-per-real-step live).  Must respect ``job.busy_until``
+        (rescale stall) and update ``job.done``."""
         return 0.0
 
     def on_finish(self, job: TrainerJob, now: float) -> None:
@@ -122,7 +124,11 @@ class LiveBackend(ExecutionBackend):
         self.losses: Dict[int, List[float]] = {m.id: [] for m in managed}
 
     def jobs(self) -> List[TrainerJob]:
-        """TrainerJobs mirroring the managed trainers, for the loop."""
+        """TrainerJobs mirroring the managed trainers, for the loop.
+
+        Per-job policy fields (``weight``/``deadline``/``budget`` — see
+        ``repro.core.objectives``) are carried over when the managed
+        object declares them (duck-typed, defaults otherwise)."""
         out = []
         for m in self.managed.values():
             r_up, r_dw = m.trainer.measured_rescale_costs()
@@ -131,7 +137,10 @@ class LiveBackend(ExecutionBackend):
                 work=(float(m.target_steps) if m.target_steps is not None
                       else math.inf),
                 n_min=m.n_min, n_max=m.n_max, r_up=r_up, r_dw=r_dw,
-                metric=self.metric)
+                metric=self.metric,
+                weight=float(getattr(m, "weight", 1.0)),
+                deadline=getattr(m, "deadline", None),
+                budget=getattr(m, "budget", None))
             job.done = float(m.steps_done)
             out.append(job)
         return out

@@ -45,19 +45,38 @@ Signature = Tuple
 def problem_signature(prob: AllocationProblem) -> Tuple[Signature, List[int]]:
     """Canonical, node-id-free signature of an allocation problem.
 
-    Returns ``(key, order)`` where ``order`` maps canonical position →
-    index into ``prob.trainers`` (Trainers sorted by their spec tuple, so
-    two interchangeable Trainers are interchangeable in the cache too).
+    The key covers everything that can change the optimal *count vector*:
+    pool size, ``t_fwd``, each Trainer's curve/cost spec and current
+    count, the policy identity + parameters (``objective.cache_key()``)
+    and — via ``objective.spec_key(t)`` — exactly the per-Trainer policy
+    fields (weight/deadline/budget/work/progress) that policy reads.
+    Policies that ignore a field (e.g. ``Throughput`` ignores progress)
+    therefore keep their cache-hit rate even while the field drifts
+    every event (DESIGN.md §10 cache-key semantics).
+
+    Returns
+    -------
+    (key, order)
+        ``order`` maps canonical position → index into ``prob.trainers``
+        (Trainers sorted by their spec tuple, so two interchangeable
+        Trainers are interchangeable in the cache too).
     """
+    from repro.core.objectives import resolve_objective
+
+    objective = resolve_objective(prob.objective)
     node_set = set(prob.nodes)
     items = []
     for t in prob.trainers:
         c = sum(1 for nid in prob.current.get(t.id, []) if nid in node_set)
+        # optional policy fields encode as (present, value) so mixed
+        # None/float spec keys stay sortable
+        pol = tuple((0, 0.0) if v is None else (1, v)
+                    for v in objective.spec_key(t))
         items.append((t.n_min, t.n_max, round(t.r_up, 9), round(t.r_dw, 9),
                       tuple(t.points), tuple(round(v, 9) for v in t.values),
-                      c))
+                      c) + pol)
     order = sorted(range(len(items)), key=lambda i: items[i])
-    key = (len(node_set), round(prob.t_fwd, 6),
+    key = (len(node_set), round(prob.t_fwd, 6), objective.cache_key(),
            tuple(items[i] for i in order))
     return key, order
 
@@ -92,7 +111,26 @@ def _est_node_milp(n_nodes: int, n_jobs: int) -> float:
 
 
 class AllocationEngine(Allocator):
-    """Portfolio allocator: cache → greedy → fast MILP → node MILP."""
+    """Portfolio allocator: cache → greedy → fast MILP → node MILP.
+
+    Memoization is keyed per ``(problem signature, policy)`` — see
+    :func:`problem_signature` — so one engine instance can safely serve
+    problems carrying different ``objective`` policies.
+
+    Parameters
+    ----------
+    time_budget : float
+        Per-event solver budget (seconds); MILP escalation only runs
+        when its predicted cost fits.  0 disables escalation (greedy +
+        cache only, fully deterministic).
+    use_greedy : bool
+        Run the water-filling heuristic first (default True).
+    use_node_milp : bool
+        Allow escalation to the node-level MILP (default False; the
+        aggregate MILP reaches the same optimum).
+    cache_size : int
+        Max memoized signatures (LRU eviction).
+    """
 
     def __init__(self, *, time_budget: float = 0.050,
                  use_greedy: bool = True, use_node_milp: bool = False,

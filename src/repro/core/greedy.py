@@ -1,35 +1,44 @@
-"""Greedy count-based heuristic allocator (DESIGN.md §3.2).
+"""Greedy count-based heuristic allocator (DESIGN.md §3.2, §10).
 
 Solves the aggregate allocation problem of ``milp_fast`` —
 
-    max  Σ_j v_j(N_j)    s.t.  Σ_j N_j ≤ |N|,   N_j ∈ {0} ∪ [N^min_j, N^max_j]
+    max  combine(v_1(N_1), ..., v_J(N_J))
+    s.t.  Σ_j N_j ≤ |N|,   N_j ∈ {0} ∪ [N^min_j, min(N^max_j, cap_j)]
 
-    v_j(N) = T_fwd·O_j(N) − rescale_penalty_j(N)
-    rescale_penalty_j(N) = O_j(C_j)·R^up_j  if N > C_j
-                           O_j(C_j)·R^dw_j  if N < C_j,  else 0
+where the per-Trainer value ``v_j`` and the aggregation ``combine`` come
+from the problem's policy (``repro.core.objectives``; the default
+``Throughput`` policy has ``v_j(N) = T_fwd·O_j(N) − rescale_penalty_j(N)``
+and ``combine = sum``, i.e. the paper's Eqn 16) — by marginal-gain
+water-filling over each Trainer's SOS2 breakpoints.
 
-— by marginal-gain water-filling over each Trainer's SOS2 breakpoints.
-Starting from the all-zero count vector, the solver repeatedly applies the
-single-Trainer grow move with the best *average gain per node*, where the
-candidate targets for a Trainer at count c are: the activation jump
-(0 → N^min), c+1, every breakpoint above c, the current count C_j (the
-penalty-free point, so the rescale kink can be jumped over in one move) and
-the free-capacity cap.  Average-gain jump selection walks the concave
-envelope of each v_j, which makes plain water-filling exact for concave
-curves and near-exact around the activation/rescale kinks; a bounded
-single-Trainer polish pass plus a pairwise shrink-to-grow repair pass
-(small instances only) cleans up the remaining local optima.
+Starting from the all-zero count vector, the solver repeatedly applies
+the single-Trainer grow move with the best *average objective gain per
+node*, where the candidate targets for a Trainer at count c are: the
+activation jump (0 → N^min), c+1, every breakpoint above c, the current
+count C_j (the penalty-free point, so the rescale kink can be jumped over
+in one move) and the free-capacity/policy cap.  Move gains come from the
+policy's ``move_evaluator`` as *exact deltas* in any totally ordered
+type: for separable policies (``combine = sum``) a move's gain is the
+per-Trainer value delta — bit-for-bit the historical single-objective
+algorithm; for max-min fairness it is a lexicographic
+``(d_min, d_tiebreak)`` pair, so the search becomes water-filling on the
+minimum (any true lift of the lagging Trainer dominates) while
+arbitrarily deep leximin tiebreak gains stay ordered correctly instead
+of vanishing into float cancellation — the greedy climbs the same
+epigraph the MILP linearizes (DESIGN.md §10 consistency argument).
+A bounded single-Trainer polish pass plus a pairwise shrink-to-grow
+repair pass (small instances only) cleans up the remaining local optima.
 
 No LP/MILP machinery is involved: a solve is a few hundred Python-level
 arithmetic ops (tens of microseconds), versus milliseconds for the
 aggregate MILP and seconds for the node-level model.  Objective parity
-against ``solve_fast_milp`` on randomized instances is asserted in
-tests/test_engine.py.
+against ``solve_fast_milp`` per policy is asserted in
+tests/test_engine.py and tests/test_objectives.py.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.milp import (
     AllocationProblem,
@@ -42,20 +51,13 @@ from repro.core.milp_fast import reconstruct_map
 _EPS = 1e-9
 
 
-def _value(t: TrainerSpec, n: int, cj: int, t_fwd: float) -> float:
-    """v_j(n): forward-looking gain minus the rescale penalty (Eqn 16)."""
-    if n > cj:
-        pen = t.value_at(cj) * t.r_up
-    elif n < cj:
-        pen = t.value_at(cj) * t.r_dw
-    else:
-        pen = 0.0
-    return t_fwd * t.value_at(n) - pen
-
-
-def _grow_targets(t: TrainerSpec, c: int, free: int, cj: int) -> List[int]:
-    """Candidate counts strictly above ``c`` reachable with ``free`` nodes."""
+def _grow_targets(t: TrainerSpec, c: int, free: int, cj: int,
+                  cap: Optional[int]) -> List[int]:
+    """Candidate counts strictly above ``c`` reachable with ``free``
+    nodes, respecting the policy cap."""
     hi = min(t.n_max, c + free)
+    if cap is not None:
+        hi = min(hi, cap)
     lo = t.n_min if c == 0 else c + 1
     if lo > hi:
         return []
@@ -81,7 +83,26 @@ def _shrink_targets(t: TrainerSpec, c: int, cj: int) -> List[int]:
 
 def solve_greedy(prob: AllocationProblem, *, polish_rounds: int = 4,
                  pair_repair_limit: int = 12) -> AllocationResult:
+    """Objective-aware greedy solve of ``prob`` (see module docstring).
+
+    Parameters
+    ----------
+    polish_rounds : int
+        Max rounds of the single-Trainer polish / pairwise repair loops.
+    pair_repair_limit : int
+        Pairwise repair runs only when ``len(trainers)`` is at most this
+        (it is O(J^2 · breakpoints^2) per round).
+
+    Returns
+    -------
+    AllocationResult
+        ``objective`` is the policy's ``combine`` over per-Trainer
+        values, directly comparable with the MILP solvers' objectives.
+    """
+    from repro.core.objectives import resolve_objective
+
     t0 = time.perf_counter()
+    objective = resolve_objective(prob.objective)
     nodes = list(prob.nodes)
     n = len(nodes)
     trainers = prob.trainers
@@ -89,33 +110,63 @@ def solve_greedy(prob: AllocationProblem, *, polish_rounds: int = 4,
     current = project_current(prob)
     cj = {t.id: len(current[t.id]) for t in trainers}
     counts: Dict[int, int] = {t.id: 0 for t in trainers}
+    caps = {t.id: objective.count_cap(t, prob.t_fwd) for t in trainers}
     free = n
+    separable = objective.separable
 
     # value tables v_j(0..n_max): O(Σ n_max) interpolations up front, O(1)
     # lookups in the search loops below
-    val_tab = {t.id: [_value(t, m, cj[t.id], prob.t_fwd)
+    val_tab = {t.id: [objective.job_value(t, m, cj[t.id], prob.t_fwd)
                       for m in range(t.n_max + 1)] for t in trainers}
 
     def val(t: TrainerSpec, m: int) -> float:
         return val_tab[t.id][m]
 
+    # per-Trainer value vector, maintained so the policy's move
+    # evaluator can score candidate moves as exact deltas
+    idx = {t.id: i for i, t in enumerate(trainers)}
+    vals = [val(t, 0) for t in trainers]
+
+    # Move gains come from the policy (exact deltas — never
+    # combine(new) - combine(old), whose cancellation would round away
+    # gain components below one ulp of the aggregate, e.g. deep-rank
+    # leximin tiebreaks).  Gains are any totally ordered type: floats
+    # for separable policies, (d_min, d_tiebreak) tuples for max-min.
+    gain_of = objective.move_evaluator(trainers)
+    zero = gain_of(vals, [])
+
+    def better(g, ref) -> bool:
+        """g strictly better than ref (+noise epsilon when the gains
+        are raw-unit floats; exact deltas need no epsilon)."""
+        if separable:
+            return g > ref + _EPS
+        return g > ref
+
+    def scale(g, s: float):
+        return g * s if separable else tuple(x * s for x in g)
+
+    def apply(t: TrainerSpec, m: int) -> None:
+        nonlocal free
+        free -= m - counts[t.id]
+        counts[t.id] = m
+        vals[idx[t.id]] = val(t, m)
+
     # --- water-filling: best average-gain grow move until none improves ---
     while free > 0:
-        best = None                      # (per_node_gain, gain, trainer, target)
+        best = None                      # (per_node_gain, trainer, target)
         for t in trainers:
             c = counts[t.id]
-            for tgt in _grow_targets(t, c, free, cj[t.id]):
-                gain = val(t, tgt) - val(t, c)
-                if gain <= _EPS:
+            for tgt in _grow_targets(t, c, free, cj[t.id], caps[t.id]):
+                gain = gain_of(vals, [(idx[t.id], val(t, tgt))])
+                if not better(gain, zero):
                     continue
-                per = gain / (tgt - c)
-                if best is None or per > best[0] + _EPS:
-                    best = (per, gain, t, tgt)
+                per = scale(gain, 1.0 / (tgt - c))
+                if best is None or better(per, best[0]):
+                    best = (per, t, tgt)
         if best is None:
             break
-        _, _, t, tgt = best
-        free -= tgt - counts[t.id]
-        counts[t.id] = tgt
+        _, t, tgt = best
+        apply(t, tgt)
 
     # --- single-Trainer polish: any feasible retarget that improves ---
     for _ in range(polish_rounds):
@@ -123,15 +174,16 @@ def solve_greedy(prob: AllocationProblem, *, polish_rounds: int = 4,
         for t in trainers:
             c = counts[t.id]
             cap = min(t.n_max, c + free)
+            if caps[t.id] is not None:
+                cap = min(cap, caps[t.id])
             cand = [0] + [m for m in range(t.n_min, cap + 1)]
-            best_m, best_v = c, val(t, c)
+            best_m, best_g = c, zero
             for m in cand:
-                v = val(t, m)
-                if v > best_v + _EPS:
-                    best_m, best_v = m, v
+                g = gain_of(vals, [(idx[t.id], val(t, m))])
+                if better(g, best_g):
+                    best_m, best_g = m, g
             if best_m != c:
-                free -= best_m - c
-                counts[t.id] = best_m
+                apply(t, best_m)
                 improved = True
         if not improved:
             break
@@ -149,18 +201,17 @@ def solve_greedy(prob: AllocationProblem, *, polish_rounds: int = 4,
                     continue
                 for down in _shrink_targets(td, cd, cj[td.id]):
                     released = cd - down
-                    d_loss = val(td, down) - val(td, cd)
                     for tu in trainers:
                         if tu.id == td.id:
                             continue
                         cu = counts[tu.id]
                         for up in _grow_targets(tu, cu, free + released,
-                                                cj[tu.id]):
-                            gain = val(tu, up) - val(tu, cu) + d_loss
-                            if gain > _EPS:
-                                free += released - (up - cu)
-                                counts[td.id] = down
-                                counts[tu.id] = up
+                                                cj[tu.id], caps[tu.id]):
+                            g = gain_of(vals, [(idx[td.id], val(td, down)),
+                                               (idx[tu.id], val(tu, up))])
+                            if better(g, zero):
+                                apply(td, down)
+                                apply(tu, up)
                                 improved = True
                                 break
                         if improved:
@@ -170,9 +221,8 @@ def solve_greedy(prob: AllocationProblem, *, polish_rounds: int = 4,
                 if improved:
                     break
 
-    objective = sum(val(t, counts[t.id]) for t in trainers)
     allocation = reconstruct_map(nodes, trainers, current, counts)
     return AllocationResult(allocation=allocation, counts=dict(counts),
-                            objective=objective,
+                            objective=objective.combiner(trainers)(vals),
                             wall_time=time.perf_counter() - t0,
                             solver_status="greedy")

@@ -22,6 +22,7 @@ Cost semantics (paper §2.1/§3.4), identical for both backends:
 from __future__ import annotations
 
 import bisect
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -37,7 +38,14 @@ class TrainerJob:
     """One Trainer (a DNN training job) submitted to BFTrainer.
 
     ``work``/``done`` are in the backend's progress unit: samples for the
-    analytic backend, train steps for the live backend.
+    analytic backend, train steps for the live backend.  Times
+    (``arrival``, ``deadline``, ``r_up``/``r_dw``) are in trace-clock
+    seconds; ``budget`` is in node-seconds.
+
+    The optional policy fields (``weight``, ``deadline``, ``budget``)
+    are read by the matching objectives in ``repro.core.objectives``
+    (WeightedPriority / DeadlineAware / CostCap) and are inert under the
+    default Throughput policy.
     """
 
     id: int
@@ -49,6 +57,10 @@ class TrainerJob:
     r_dw: float = 5.0
     arrival: float = 0.0
     metric: str = "throughput"      # objective metric for the MILP
+    # --- per-job policy fields (repro.core.objectives) ---
+    weight: float = 1.0             # admin priority weight (dimensionless)
+    deadline: Optional[float] = None  # absolute trace-clock soft deadline (s)
+    budget: Optional[float] = None    # node-seconds the job may consume
 
     # --- runtime state ---
     done: float = 0.0
@@ -61,14 +73,29 @@ class TrainerJob:
     preempt_cost_s: float = 0.0
     n_rescales: int = 0
     n_preemptions: int = 0
+    node_seconds: float = 0.0       # node-seconds consumed so far
 
-    def spec(self, max_points: int = 8) -> TrainerSpec:
+    def spec(self, max_points: int = 8, now: float = 0.0) -> TrainerSpec:
+        """Project this job into the allocator's ``TrainerSpec`` as seen
+        at trace time ``now``: the deadline becomes relative
+        (seconds-from-now), the budget becomes the unspent remainder
+        (node-seconds), and progress the completed work fraction."""
         pts, vals = self.curve.breakpoints(self.n_min, self.n_max,
                                            metric=self.metric,
                                            max_points=max_points)
-        return TrainerSpec(id=self.id, n_min=self.n_min, n_max=self.n_max,
-                           r_up=self.r_up, r_dw=self.r_dw,
-                           points=tuple(pts), values=tuple(vals))
+        finite_work = self.work if math.isfinite(self.work) else None
+        progress = (min(self.done / self.work, 1.0)
+                    if finite_work and self.work > 0 else 0.0)
+        return TrainerSpec(
+            id=self.id, n_min=self.n_min, n_max=self.n_max,
+            r_up=self.r_up, r_dw=self.r_dw,
+            points=tuple(pts), values=tuple(vals),
+            weight=self.weight,
+            deadline=(max(self.deadline - now, 0.0)
+                      if self.deadline is not None else None),
+            budget=(max(self.budget - self.node_seconds, 0.0)
+                    if self.budget is not None else None),
+            work=finite_work, progress=progress)
 
     @property
     def finished(self) -> bool:
@@ -108,13 +135,40 @@ class LoopStats:
 
 class ControlLoop:
     """The single policy engine behind ``Simulator`` and
-    ``BFTrainerRuntime``.  ``backend`` is any ``ExecutionBackend``."""
+    ``BFTrainerRuntime``.
+
+    Parameters
+    ----------
+    events : sequence of PoolEvent
+        Idle-pool join/leave timeline (trace-clock seconds).
+    jobs : sequence of TrainerJob
+        Trainers, admitted FCFS by ``arrival``.
+    allocator : Allocator
+        Per-event allocation solver (engine, MILP, heuristic, ...).
+    backend : ExecutionBackend
+        Where progress happens between decisions (core/backend.py).
+    t_fwd : float or "adaptive"
+        Forward-looking window (seconds) or the online estimator.
+    pj_max : int
+        Max concurrently admitted Trainers (paper §5.3).
+    horizon : float, optional
+        Stop time (trace-clock seconds); default = last timeline point.
+    sos2_points : int
+        Max SOS2 breakpoints per Trainer curve.
+    coalesce_window : float
+        Defer re-allocation while further pool events land within this
+        window (seconds); 0 disables (DESIGN.md §3.4).
+    objective : Objective | str, optional
+        Allocation policy passed to every solve (repro.core.objectives);
+        ``None`` = the paper's Eqn-16 throughput (DESIGN.md §10).
+    """
 
     def __init__(self, events: Sequence[PoolEvent],
                  jobs: Sequence[TrainerJob], allocator: Allocator,
                  backend, *, t_fwd: Union[float, str] = 120.0,
                  pj_max: int = 10, horizon: Optional[float] = None,
-                 sos2_points: int = 8, coalesce_window: float = 0.0):
+                 sos2_points: int = 8, coalesce_window: float = 0.0,
+                 objective=None):
         self.events = sorted(events, key=lambda e: e.time)
         self.jobs = sorted(jobs, key=lambda j: (j.arrival, j.id))
         self.allocator = allocator
@@ -122,6 +176,9 @@ class ControlLoop:
         # t_fwd: a constant (paper) or "adaptive" (beyond-paper online
         # quantile estimator over leave-event gaps, core/tfwd.py)
         self.t_fwd_estimator, self.t_fwd = resolve_tfwd(t_fwd)
+        # allocation policy (repro.core.objectives): an Objective, a
+        # registry name, or None for the paper's Eqn-16 throughput
+        self.objective = objective
         self.pj_max = pj_max
         self.horizon = horizon
         self.sos2_points = sos2_points
@@ -225,9 +282,11 @@ class ControlLoop:
                     backend.refresh(j, now)
                 prob = AllocationProblem(
                     nodes=sorted(pool),
-                    trainers=[j.spec(self.sos2_points) for j in active],
+                    trainers=[j.spec(self.sos2_points, now=now)
+                              for j in active],
                     current={j.id: list(j.nodes) for j in active},
                     t_fwd=t_fwd,
+                    objective=self.objective,
                 )
                 res = self.allocator.allocate(prob)
                 solver_wall += res.wall_time
@@ -268,6 +327,9 @@ class ControlLoop:
             for j in active:
                 if j.nodes and not j.finished:
                     outcome += backend.advance(j, now, nxt)
+                if j.nodes:
+                    # node-seconds consumed (budget accounting, CostCap)
+                    j.node_seconds += len(j.nodes) * (nxt - now)
             total_outcome += outcome
             records.append(EventRecord(
                 time=now, pool_size=len(pool),

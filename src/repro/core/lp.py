@@ -91,6 +91,36 @@ class MILPResult:
     message: str = ""
 
 
+def epigraph_min(b: MILPBuilder, name: str,
+                 exprs: List[Tuple[float, Dict[int, float]]]) -> int:
+    """Append an epigraph variable ``f = min_i (const_i + coeffs_i · x)``.
+
+    The standard linearization of maximizing a minimum: a free continuous
+    variable ``f`` with one row ``f <= const_i + coeffs_i · x`` per
+    expression.  ``f`` equals the min only at optimality of a maximize
+    objective that rewards ``f`` — callers must put a positive objective
+    coefficient on the returned variable.
+
+    Parameters
+    ----------
+    exprs : list of (const, coeffs)
+        Each expression is a constant plus a sparse linear form
+        (variable index -> coefficient).
+
+    Returns
+    -------
+    int
+        The index of the epigraph variable ``f``.
+    """
+    f = b.add_var(name, lb=-np.inf, ub=np.inf)
+    for const, coeffs in exprs:
+        row = {f: 1.0}
+        for v, cf in coeffs.items():
+            row[v] = row.get(v, 0.0) - cf
+        b.add_row(row, ub=const)
+    return f
+
+
 def sos2_block(b: MILPBuilder, prefix: str, points: List[int],
                values: List[float], n_var_coeffs: Dict[int, float]):
     """Append an SOS2 piecewise-linear block.

@@ -2,10 +2,13 @@
 
 Decision variable ``x_jn ∈ {0,1}``: node n allocated to Trainer j.  On each
 event the solver transfers the current map ``c_jn`` into ``x_jn`` to
-maximize  Σ_j T_fwd·O_j(N_j) − Σ_j O_j(C_j)·R_j   (Eqn 16)
-subject to job-size (Eqn 4), node-exclusivity (Eqn 5) and no-migration
-(Eqns 6–10) constraints, with O_j piecewise-linearized via SOS2 (Eqn 11–12)
-and rescale costs via indicator binaries (Eqn 13–15).
+maximize the problem's policy objective — by default the paper's
+Σ_j T_fwd·O_j(N_j) − Σ_j O_j(C_j)·R_j   (Eqn 16), or any
+administrator-/user-defined metric from ``repro.core.objectives`` (§3.5's
+promised adaptation point) — subject to job-size (Eqn 4),
+node-exclusivity (Eqn 5) and no-migration (Eqns 6–10) constraints, with
+O_j piecewise-linearized via SOS2 (Eqn 11–12) and rescale costs via
+indicator binaries (Eqn 13–15).
 """
 from __future__ import annotations
 
@@ -19,7 +22,37 @@ from repro.core.lp import MILPBuilder, sos2_block
 
 @dataclass(frozen=True)
 class TrainerSpec:
-    """Static description of one Trainer as seen by the allocator."""
+    """Static description of one Trainer as seen by the allocator.
+
+    Attributes
+    ----------
+    id : int
+        Trainer id (stable across events).
+    n_min, n_max : int
+        Feasible node-count range (nodes); outside it only ``N_j = 0``
+        (the waiting state) is allowed (Eqn 4).
+    r_up, r_dw : float
+        Scale-up / scale-down stall costs ``R_j^up`` / ``R_j^dw``
+        (seconds).
+    points, values : tuple
+        SOS2 breakpoints (nodes, must include 0) and the objective
+        metric ``O_j`` at each (progress units / second).
+    weight : float
+        Admin priority weight (dimensionless, default 1.0); read by
+        :class:`repro.core.objectives.WeightedPriority`.
+    deadline : float, optional
+        Seconds from *now* until the job's soft deadline; read by
+        :class:`repro.core.objectives.DeadlineAware`.
+    budget : float, optional
+        Node-seconds the job may still consume; read by
+        :class:`repro.core.objectives.CostCap`.
+    work : float, optional
+        Total work in progress units (samples/steps), ``None`` when
+        open-ended; normalizes progress-based policies.
+    progress : float
+        Completed fraction of ``work`` in [0, 1] (0.0 when unknown);
+        read by progress-aware policies (max-min fairness, deadlines).
+    """
 
     id: int
     n_min: int
@@ -28,9 +61,16 @@ class TrainerSpec:
     r_dw: float                 # scale-down cost, seconds (R_j^dw)
     points: Tuple[int, ...]     # SOS2 breakpoints (must include 0)
     values: Tuple[float, ...]   # objective metric at each breakpoint
+    # per-job policy fields (see repro.core.objectives)
+    weight: float = 1.0
+    deadline: Optional[float] = None
+    budget: Optional[float] = None
+    work: Optional[float] = None
+    progress: float = 0.0
 
     def value_at(self, n: int) -> float:
-        """Interpolated objective metric at integer n."""
+        """Interpolated objective metric ``O_j(n)`` (progress units / s)
+        at integer node count ``n``."""
         pts, vals = self.points, self.values
         if n <= pts[0]:
             return vals[0]
@@ -45,12 +85,34 @@ class TrainerSpec:
 
 @dataclass
 class AllocationProblem:
+    """One allocation instance: the idle pool, the Trainers, the current
+    map, and the policy to optimize.
+
+    Attributes
+    ----------
+    nodes : list[int]
+        Idle node ids (set N).
+    trainers : list[TrainerSpec]
+        The Trainers competing for nodes (set J).
+    current : dict[int, list[int]]
+        Current map ``c``: Trainer id -> node ids it holds now.
+    t_fwd : float
+        Forward-looking time window (seconds, paper §3.4.3).
+    racks : dict[int, int], optional
+        Topology (paper §7 future work): node id -> rack/switch id.
+    objective : Objective | str, optional
+        The policy to maximize (repro.core.objectives); ``None`` means
+        the paper's Eqn-16 throughput objective.
+    """
+
     nodes: List[int]                       # idle node ids (set N)
     trainers: List[TrainerSpec]            # set J
     current: Dict[int, List[int]]          # c: trainer id -> node ids
     t_fwd: float = 120.0                   # forward-looking time (seconds)
     # optional topology (paper §7 future work): node id -> rack/switch id
     racks: Optional[Dict[int, int]] = None
+    # allocation policy (repro.core.objectives); None = Throughput (Eqn 16)
+    objective: Optional[object] = None
 
 
 def project_current(prob: "AllocationProblem") -> Dict[int, List[int]]:
@@ -63,6 +125,27 @@ def project_current(prob: "AllocationProblem") -> Dict[int, List[int]]:
 
 @dataclass
 class AllocationResult:
+    """One solver's answer to an :class:`AllocationProblem`.
+
+    Attributes
+    ----------
+    allocation : dict[int, list[int]]
+        Trainer id -> concrete node ids assigned.
+    counts : dict[int, int]
+        Trainer id -> node count (``len`` of the above).
+    objective : float, optional
+        Achieved objective value in the *policy's* units (progress units
+        for throughput-style policies, dimensionless for fairness);
+        ``None`` for heuristics that do not score, and on fallback.
+    wall_time : float
+        Solver wall-clock time (seconds).
+    solver_status : str
+        Human-readable solver outcome.
+    fell_back : bool
+        True when the §3.6 fallback kept the current map
+        (timeout/infeasible).
+    """
+
     allocation: Dict[int, List[int]]       # trainer id -> node ids
     counts: Dict[int, int]
     objective: Optional[float]
@@ -75,13 +158,27 @@ def solve_node_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
                     topo_coef: float = 0.0) -> AllocationResult:
     """Paper-faithful node-level MILP.
 
+    The feasible set is the paper's §3 model (Eqns 4–15); the objective
+    is built by the problem's policy (``prob.objective``, default Eqn 16
+    throughput — see repro.core.objectives), which may also impose
+    per-Trainer count caps.
+
     With ``topo_coef > 0`` and ``prob.racks`` set, implements the paper's
     §7 future-work item: rack-locality-aware allocation.  Auxiliary
     binaries ``y_jr`` (Trainer j touches rack r) are constrained by
     ``x_jn <= y_j,rack(n)`` and penalized in the objective by
     ``topo_coef · T_fwd · (per-node gain)`` per rack touched — so spreading
     a Trainer across racks must buy at least that much throughput.
+
+    Parameters
+    ----------
+    time_limit : float
+        Solver wall-clock limit (seconds); on timeout the §3.6 fallback
+        keeps the current map (``fell_back=True``).
     """
+    from repro.core.objectives import JobTerms, resolve_objective
+
+    objective = resolve_objective(prob.objective)
     nodes = list(prob.nodes)
     n = len(nodes)
     node_pos = {nid: i for i, nid in enumerate(nodes)}
@@ -113,13 +210,23 @@ def solve_node_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
     for ni in range(n):
         b.add_row({x[ji][ni]: 1.0 for ji in range(j_cnt)}, ub=1.0)
 
+    job_terms = []
     for ji, t in enumerate(trainers):
         xr = {v: 1.0 for v in x[ji]}
         cj = float(c_count[ji])
 
-        # Eqn 4: N_j = 0 or N_min <= N_j <= N_max
-        b.add_row({**xr, y_l[ji]: big_m}, lb=float(t.n_min))
-        b.add_row({**xr, y_l[ji]: big_m}, ub=float(big_m))
+        # policy-imposed hard cap on N_j (e.g. CostCap budgets)
+        cap = objective.count_cap(t, prob.t_fwd)
+        if cap is not None and cap < t.n_max:
+            b.add_row(dict(xr), ub=float(max(cap, 0)))
+
+        # Eqn 4: N_j = 0 or N_min <= N_j <= N_max.  The relaxation
+        # constant must cover n_min even when n_min > |N| (a Trainer
+        # whose minimum exceeds the current pool — a normal transient
+        # in hole harvesting must force N_j = 0, not infeasibility).
+        m4 = float(max(big_m, t.n_min))
+        b.add_row({**xr, y_l[ji]: m4}, lb=float(t.n_min))
+        b.add_row({**xr, y_l[ji]: m4}, ub=m4)
         b.add_row({**xr, y_u[ji]: -big_m}, ub=float(t.n_max))
         b.add_row({**xr, y_u[ji]: big_m}, ub=float(big_m))
 
@@ -151,13 +258,10 @@ def solve_node_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
         # Eqn 11/12: SOS2 piecewise objective metric
         _, value_coeffs = sos2_block(
             b, f"t{t.id}", list(t.points), list(t.values), dict(xr))
-
-        # Eqn 16 objective
-        for var, coef in value_coeffs.items():
-            b.set_obj(var, prob.t_fwd * coef)
-        o_cj = t.value_at(int(c_count[ji]))
-        b.set_obj(z_up[ji], -o_cj * t.r_up)
-        b.set_obj(z_dw[ji], -o_cj * t.r_dw)
+        job_terms.append(JobTerms(spec=t, cj=int(c_count[ji]),
+                                  count_expr=dict(xr),
+                                  value_expr=value_coeffs,
+                                  z_up=z_up[ji], z_dw=z_dw[ji]))
 
         # topology extension (paper §7): rack-spread penalty
         if topo_coef > 0.0 and prob.racks is not None:
@@ -172,6 +276,8 @@ def solve_node_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
                 b.set_obj(y_rack[r],
                           -topo_coef * prob.t_fwd * per_node_gain)
 
+    # policy objective (Eqn 16 by default; see repro.core.objectives)
+    obj_offset = objective.build(b, job_terms, prob.t_fwd)
     res = b.solve(maximize=True, time_limit=time_limit)
 
     if not res.success or res.x is None:
@@ -191,5 +297,7 @@ def solve_node_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
     return AllocationResult(
         allocation=alloc,
         counts={t.id: len(v) for t, v in zip(trainers, alloc.values())},
-        objective=res.objective, wall_time=res.wall_time,
+        objective=(res.objective + obj_offset
+                   if res.objective is not None else None),
+        wall_time=res.wall_time,
         solver_status=res.message)

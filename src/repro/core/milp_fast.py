@@ -34,6 +34,23 @@ from repro.core.milp import (
 
 def solve_fast_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
                     ) -> AllocationResult:
+    """Aggregate (count-based) MILP over the problem's policy objective.
+
+    Identical optimum to ``solve_node_milp`` (see module docstring) at a
+    fraction of the variable count.  The objective — Eqn 16 throughput by
+    default, or any policy from ``repro.core.objectives`` carried on
+    ``prob.objective`` — is built from the same ``JobTerms`` handles as
+    the node-level model, so the two stay consistent by construction.
+
+    Parameters
+    ----------
+    time_limit : float
+        Solver wall-clock limit (seconds); on timeout the §3.6 fallback
+        keeps the current map (``fell_back=True``).
+    """
+    from repro.core.objectives import JobTerms, resolve_objective
+
+    objective = resolve_objective(prob.objective)
     nodes = list(prob.nodes)
     n = len(nodes)
     trainers = prob.trainers
@@ -53,11 +70,20 @@ def solve_fast_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
     # capacity: sum_j N_j <= |N|
     b.add_row({v: 1.0 for v in n_j}, ub=float(n))
 
+    job_terms = []
     for ji, t in enumerate(trainers):
         cj = float(c_count[t.id])
-        # N_j = 0 or N_min <= N_j (upper bound via var bound)
-        b.add_row({n_j[ji]: 1.0, y_l[ji]: big_m}, lb=float(t.n_min))
-        b.add_row({n_j[ji]: 1.0, y_l[ji]: big_m}, ub=float(big_m))
+        # N_j = 0 or N_min <= N_j (upper bound via var bound).  The
+        # relaxation constant must cover n_min even when n_min > |N|
+        # (pool transiently smaller than a Trainer's minimum: force
+        # N_j = 0, not infeasibility).
+        m4 = float(max(big_m, t.n_min))
+        b.add_row({n_j[ji]: 1.0, y_l[ji]: m4}, lb=float(t.n_min))
+        b.add_row({n_j[ji]: 1.0, y_l[ji]: m4}, ub=m4)
+        # policy-imposed hard cap on N_j (e.g. CostCap budgets)
+        cap = objective.count_cap(t, prob.t_fwd)
+        if cap is not None and cap < t.n_max:
+            b.add_row({n_j[ji]: 1.0}, ub=float(max(cap, 0)))
         # rescale indicators (Eqn 15)
         b.add_row({n_j[ji]: 1.0, z_up[ji]: -(big_m - cj)}, ub=cj)
         b.add_row({n_j[ji]: 1.0, z_up[ji]: -(cj + 1.0)}, lb=0.0)
@@ -66,12 +92,13 @@ def solve_fast_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
         # SOS2 objective metric
         _, value_coeffs = sos2_block(
             b, f"t{t.id}", list(t.points), list(t.values), {n_j[ji]: 1.0})
-        for var, coef in value_coeffs.items():
-            b.set_obj(var, prob.t_fwd * coef)
-        o_cj = t.value_at(c_count[t.id])
-        b.set_obj(z_up[ji], -o_cj * t.r_up)
-        b.set_obj(z_dw[ji], -o_cj * t.r_dw)
+        job_terms.append(JobTerms(spec=t, cj=c_count[t.id],
+                                  count_expr={n_j[ji]: 1.0},
+                                  value_expr=value_coeffs,
+                                  z_up=z_up[ji], z_dw=z_dw[ji]))
 
+    # policy objective (Eqn 16 by default; see repro.core.objectives)
+    obj_offset = objective.build(b, job_terms, prob.t_fwd)
     res = b.solve(maximize=True, time_limit=time_limit)
 
     if not res.success or res.x is None:
@@ -86,7 +113,9 @@ def solve_fast_milp(prob: AllocationProblem, *, time_limit: float = 30.0,
               for ji, t in enumerate(trainers)}
     allocation = reconstruct_map(nodes, trainers, current, counts)
     return AllocationResult(allocation=allocation, counts=counts,
-                            objective=res.objective,
+                            objective=(res.objective + obj_offset
+                                       if res.objective is not None
+                                       else None),
                             wall_time=res.wall_time,
                             solver_status=res.message)
 

@@ -33,14 +33,23 @@ class SimReport(LoopStats):
 
 
 class Simulator:
+    """Trace-driven simulation facade: ``ControlLoop`` + ``AnalyticBackend``.
+
+    Accepts the same knobs as ``ControlLoop`` (including ``objective=``,
+    the allocation policy from ``repro.core.objectives``); see its
+    docstring for parameter units and semantics.
+    """
+
     def __init__(self, events: Sequence[PoolEvent], jobs: Sequence[TrainerJob],
                  allocator: Allocator, *, t_fwd: Union[float, str] = 120.0,
                  pj_max: int = 10, horizon: Optional[float] = None,
-                 sos2_points: int = 8, coalesce_window: float = 0.0):
+                 sos2_points: int = 8, coalesce_window: float = 0.0,
+                 objective=None):
         self.loop = ControlLoop(events, jobs, allocator, AnalyticBackend(),
                                 t_fwd=t_fwd, pj_max=pj_max, horizon=horizon,
                                 sos2_points=sos2_points,
-                                coalesce_window=coalesce_window)
+                                coalesce_window=coalesce_window,
+                                objective=objective)
     def run(self) -> SimReport:
         return SimReport.from_stats(self.loop.run())
 
@@ -54,7 +63,8 @@ def _delegate(attr):
 
 
 for _attr in ("events", "jobs", "allocator", "t_fwd", "t_fwd_estimator",
-              "pj_max", "horizon", "sos2_points", "coalesce_window"):
+              "pj_max", "horizon", "sos2_points", "coalesce_window",
+              "objective"):
     setattr(Simulator, _attr, _delegate(_attr))
 
 
@@ -72,7 +82,10 @@ def static_outcome(jobs: Sequence[TrainerJob], n_static: int,
 
     Runs through the same ``ControlLoop`` as the elastic paths, so the
     baseline and elastic policies cannot drift apart.  Arrivals before the
-    static pool opens at t=0 are clamped to 0.
+    static pool opens at t=0 are clamped to 0.  The baseline always uses
+    the default throughput objective (policy-independent denominator, so
+    U values stay comparable across policies); per-job policy fields are
+    deliberately not copied.
     """
     ev = [PoolEvent(time=0.0, joined=tuple(range(n_static)))]
     jobs2 = [TrainerJob(id=j.id, curve=j.curve, work=j.work, n_min=j.n_min,

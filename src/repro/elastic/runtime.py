@@ -26,6 +26,14 @@ from repro.elastic.trainer import ElasticTrainer
 
 @dataclass
 class ManagedTrainer:
+    """One live Trainer under BFTrainer management.
+
+    ``weight`` (dimensionless), ``deadline`` (absolute trace-clock
+    seconds) and ``budget`` (node-seconds) are per-job policy fields
+    read by the matching objectives (``repro.core.objectives``); they are
+    inert under the default throughput policy.
+    """
+
     id: int
     trainer: ElasticTrainer
     curve: ScalingCurve
@@ -34,6 +42,9 @@ class ManagedTrainer:
     steps_done: int = 0
     samples_done: int = 0
     target_steps: Optional[int] = None
+    weight: float = 1.0
+    deadline: Optional[float] = None
+    budget: Optional[float] = None
 
     @property
     def finished(self) -> bool:
@@ -60,7 +71,8 @@ class BFTrainerRuntime:
                  t_fwd: Union[float, str] = 120.0,
                  steps_per_second: float = 1.0,
                  metric: str = "throughput", pj_max: int = 10,
-                 coalesce_window: float = 0.0, sos2_points: int = 8):
+                 coalesce_window: float = 0.0, sos2_points: int = 8,
+                 objective=None):
         self.managed = list(managed)
         self.allocator = allocator or MILPAllocator("fast")
         self.t_fwd = t_fwd
@@ -69,6 +81,8 @@ class BFTrainerRuntime:
         self.pj_max = pj_max
         self.coalesce_window = coalesce_window
         self.sos2_points = sos2_points
+        # allocation policy (repro.core.objectives); None = throughput
+        self.objective = objective
 
     def run(self, events: Sequence[PoolEvent], *, time_scale: float = 1.0,
             max_steps_per_interval: int = 4,
@@ -84,7 +98,8 @@ class BFTrainerRuntime:
         loop = ControlLoop(events, backend.jobs(), self.allocator, backend,
                            t_fwd=self.t_fwd, pj_max=self.pj_max,
                            horizon=horizon, sos2_points=self.sos2_points,
-                           coalesce_window=self.coalesce_window)
+                           coalesce_window=self.coalesce_window,
+                           objective=self.objective)
         stats = loop.run()
         return RuntimeReport(
             steps={m.id: m.steps_done for m in self.managed},

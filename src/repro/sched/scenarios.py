@@ -221,7 +221,7 @@ def run_scenario(scenario, trainers, *, allocator=None, run_live: bool = False,
                  t_fwd=120.0, pj_max: int = 10, coalesce_window: float = 0.0,
                  horizon: float = None, scale: float = 1.0, seed: int = 0,
                  time_scale: float = 1.0, max_steps_per_interval: int = 4,
-                 steps_per_second: float = 1.0):
+                 steps_per_second: float = 1.0, objective=None):
     """Run a scenario's unfillable-hole trace through the shared
     ``ControlLoop`` — simulated or live, same policy (DESIGN.md §9).
 
@@ -233,6 +233,13 @@ def run_scenario(scenario, trainers, *, allocator=None, run_live: bool = False,
     wrapping real ``ElasticTrainer``s; the same decisions drive actual
     rescales and train steps (LiveBackend, trace time compressed by
     ``time_scale``), returning a ``RuntimeReport``.
+
+    ``objective`` selects the allocation policy (an
+    ``repro.core.objectives.Objective``, a registry name such as
+    ``"maxmin"``, or ``None`` for the paper's throughput objective) —
+    e.g. ``run_scenario("bursty", jobs, objective=MaxMinFairness())``
+    replays any scenario under any policy, simulated or live
+    (DESIGN.md §10).
     """
     from repro.core import AllocationEngine
     from repro.core.events import fragments_to_events
@@ -248,10 +255,12 @@ def run_scenario(scenario, trainers, *, allocator=None, run_live: bool = False,
         from repro.elastic import BFTrainerRuntime
         rt = BFTrainerRuntime(trainers, allocator, t_fwd=t_fwd,
                               pj_max=pj_max, coalesce_window=coalesce_window,
-                              steps_per_second=steps_per_second)
+                              steps_per_second=steps_per_second,
+                              objective=objective)
         return rt.run(events, time_scale=time_scale,
                       max_steps_per_interval=max_steps_per_interval,
                       horizon=horizon)
     from repro.core import Simulator
     return Simulator(events, trainers, allocator, t_fwd=t_fwd, pj_max=pj_max,
-                     horizon=horizon, coalesce_window=coalesce_window).run()
+                     horizon=horizon, coalesce_window=coalesce_window,
+                     objective=objective).run()

@@ -1,0 +1,579 @@
+"""Pluggable objective/policy subsystem tests (DESIGN.md §10).
+
+Covers: registry/resolution, Throughput regression parity (manual Eqn 16
++ default-vs-explicit scenario replay), weighted dominance, max-min
+anti-starvation, deadline-penalty monotonicity, CostCap budget caps,
+greedy-vs-MILP parity per policy, node-vs-fast MILP agreement per
+policy, engine cache keying per (signature, policy), budget accounting
+in the ControlLoop, and the fairness >= equal-share hypothesis property.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AllocationEngine,
+    AllocationProblem,
+    CostCap,
+    DeadlineAware,
+    EqualShareAllocator,
+    MaxMinFairness,
+    Objective,
+    OBJECTIVES,
+    Throughput,
+    TrainerSpec,
+    WeightedPriority,
+    resolve_objective,
+    solve_fast_milp,
+    solve_greedy,
+    solve_node_milp,
+)
+from repro.core.engine import problem_signature
+from repro.core.events import PoolEvent
+from repro.core.loop import TrainerJob as LoopTrainerJob
+from repro.core.scaling import TAB2, tab2_curve
+from repro.core.simulator import Simulator, TrainerJob
+
+from tests.test_engine import check_allocation_invariants, manual_objective
+
+
+def mkspec(i, name="ShuffleNet", n_min=1, n_max=8, r_up=20.0, r_dw=5.0,
+           **extra):
+    curve = tab2_curve(name)
+    pts, vals = curve.breakpoints(n_min, n_max)
+    return TrainerSpec(id=i, n_min=n_min, n_max=n_max, r_up=r_up, r_dw=r_dw,
+                       points=tuple(pts), values=tuple(vals), **extra)
+
+
+def random_policy_instance(seed, objective, n_lo=6, n_hi=20, j_lo=2, j_hi=5):
+    """Random instance with the per-job policy fields populated."""
+    rng = np.random.RandomState(seed)
+    n_nodes = rng.randint(n_lo, n_hi)
+    nodes = list(range(n_nodes))
+    trainers, current, used = [], {}, set()
+    for j in range(rng.randint(j_lo, j_hi)):
+        name = list(TAB2)[(seed + j) % len(TAB2)]
+        n_min = rng.randint(1, 3)
+        n_max = rng.randint(n_min + 1, 12)
+        work = float(rng.uniform(1e7, 1e9))
+        trainers.append(mkspec(
+            j, name, n_min=n_min, n_max=n_max,
+            r_up=float(rng.uniform(5, 40)), r_dw=float(rng.uniform(1, 10)),
+            weight=float(rng.choice([0.5, 1.0, 2.0, 4.0])),
+            deadline=float(rng.uniform(100, 5000)),
+            budget=float(rng.uniform(50, 5000)),
+            work=work, progress=float(rng.uniform(0.0, 0.9))))
+        k = rng.randint(0, min(n_max, n_nodes - len(used)) + 1)
+        if 0 < k < n_min:
+            k = 0
+        avail = [x for x in nodes if x not in used]
+        cur = [int(c) for c in
+               rng.choice(avail, size=min(k, len(avail)), replace=False)]
+        current[j] = cur
+        used.update(cur)
+    t_fwd = float(rng.choice([30.0, 60.0, 120.0, 300.0]))
+    return AllocationProblem(nodes=nodes, trainers=trainers, current=current,
+                             t_fwd=t_fwd, objective=objective)
+
+
+def policy_objective_of(prob, counts):
+    """Evaluate a count vector under the problem's policy (reference)."""
+    obj = resolve_objective(prob.objective)
+    node_set = set(prob.nodes)
+    vals = []
+    for t in prob.trainers:
+        cj = len([n for n in prob.current.get(t.id, []) if n in node_set])
+        vals.append(obj.job_value(t, counts[t.id], cj, prob.t_fwd))
+    return obj.combine(vals, prob.trainers)
+
+
+# ---------------------------------------------------------------------------
+# Registry / resolution
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_objective():
+    assert isinstance(resolve_objective(None), Throughput)
+    for name, cls in OBJECTIVES.items():
+        o = resolve_objective(name)
+        assert isinstance(o, cls) and o.name == name
+    mm = MaxMinFairness(tiebreak=0.01)
+    assert resolve_objective(mm) is mm
+    with pytest.raises(KeyError):
+        resolve_objective("nope")
+    with pytest.raises(TypeError):
+        resolve_objective(42)
+
+
+def test_cache_keys_distinguish_params():
+    assert MaxMinFairness().cache_key() != MaxMinFairness(0.05).cache_key()
+    assert WeightedPriority().cache_key() != \
+        WeightedPriority({0: 2.0}).cache_key()
+    assert Throughput().cache_key() != DeadlineAware().cache_key()
+
+
+# ---------------------------------------------------------------------------
+# Throughput: regression parity with the pre-policy allocator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_throughput_matches_manual_eqn16(seed):
+    from tests.test_engine import random_instance
+    prob = random_instance(seed)
+    for explicit in (None, Throughput(), "throughput"):
+        prob.objective = explicit
+        r = solve_fast_milp(prob, time_limit=60)
+        assert r.objective == pytest.approx(
+            manual_objective(prob, r.counts), rel=1e-6)
+        g = solve_greedy(prob)
+        assert g.objective == pytest.approx(
+            manual_objective(prob, g.counts), rel=1e-6)
+
+
+def _scenario_jobs():
+    return [TrainerJob(id=i, curve=tab2_curve(list(TAB2)[i % len(TAB2)]),
+                       work=1e12, n_min=1, n_max=16, r_up=20.0, r_dw=5.0)
+            for i in range(4)]
+
+
+@pytest.mark.parametrize("name", ["capability", "capacity", "bursty",
+                                  "maintenance", "weekend", "overestimate"])
+def test_throughput_scenario_allocations_bit_for_bit(name):
+    """Acceptance: the default (objective=None) replay of every scenario is
+    bit-for-bit identical to an explicit Throughput() replay — i.e. the
+    policy refactor did not change the paper's allocator behavior."""
+    from repro.sched import build_scenario
+    from repro.core.events import fragments_to_events
+
+    sc = build_scenario(name, scale=0.1, seed=3)
+    events = fragments_to_events(sc.fragments)
+
+    def run(objective):
+        eng = AllocationEngine(time_budget=0.0)   # deterministic portfolio
+        sim = Simulator(events, _scenario_jobs(), eng, t_fwd=120.0,
+                        horizon=sc.duration, objective=objective)
+        return sim.run()
+
+    base, explicit = run(None), run(Throughput())
+    assert base.total_samples == explicit.total_samples
+    assert base.events_processed == explicit.events_processed
+    assert len(base.event_records) == len(explicit.event_records)
+    for a, b in zip(base.event_records, explicit.event_records):
+        assert a.time == b.time
+        assert a.allocated == b.allocated
+        assert a.outcome_until_next == b.outcome_until_next
+
+
+# ---------------------------------------------------------------------------
+# WeightedPriority
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_uniform_reduces_to_throughput():
+    from tests.test_engine import random_instance
+    for seed in range(5):
+        prob = random_instance(seed)
+        prob.objective = None
+        base = solve_fast_milp(prob, time_limit=60)
+        prob.objective = WeightedPriority()
+        w = solve_fast_milp(prob, time_limit=60)
+        assert w.counts == base.counts
+        assert w.objective == pytest.approx(base.objective, rel=1e-6)
+
+
+def test_weighted_dominance():
+    """Raising one job's weight never shrinks its allocation, and a large
+    enough weight flips a contended decision its way."""
+    # two identical jobs, 6 nodes, each wants up to 6: contention
+    t0 = mkspec(0, "ResNet18", n_min=2, n_max=6)
+    counts_at = {}
+    for w in (1.0, 2.0, 8.0, 64.0):
+        t1 = mkspec(1, "ResNet18", n_min=2, n_max=6, weight=w)
+        prob = AllocationProblem(nodes=list(range(6)), trainers=[t0, t1],
+                                 current={0: [], 1: []}, t_fwd=120.0,
+                                 objective=WeightedPriority())
+        r = solve_fast_milp(prob, time_limit=60)
+        counts_at[w] = r.counts
+        check_allocation_invariants(prob, r)
+    ws = sorted(counts_at)
+    for lo, hi in zip(ws, ws[1:]):
+        assert counts_at[hi][1] >= counts_at[lo][1]
+    assert counts_at[64.0][1] > counts_at[64.0][0]
+
+
+def test_weighted_mapping_overrides_spec():
+    t0 = mkspec(0, "ResNet18", n_min=2, n_max=6, weight=1.0)
+    t1 = mkspec(1, "ResNet18", n_min=2, n_max=6, weight=1.0)
+    prob = AllocationProblem(nodes=list(range(6)), trainers=[t0, t1],
+                             current={0: [], 1: []}, t_fwd=120.0,
+                             objective=WeightedPriority({0: 100.0}))
+    r = solve_fast_milp(prob, time_limit=60)
+    assert r.counts[0] > r.counts[1]
+
+
+# ---------------------------------------------------------------------------
+# MaxMinFairness
+# ---------------------------------------------------------------------------
+
+
+def test_maxmin_unstarves_job_the_throughput_policy_starves():
+    """Only one of two jobs can run (n_min = pool size).  Throughput
+    always picks the faster DNN; max-min picks the one that is behind."""
+    ahead = mkspec(0, "AlexNet", n_min=4, n_max=4, work=1e9, progress=0.5)
+    behind = mkspec(1, "DenseNet", n_min=4, n_max=4, work=1e9, progress=0.0)
+    nodes = list(range(4))
+    thr = AllocationProblem(nodes=nodes, trainers=[ahead, behind],
+                            current={0: [], 1: []}, t_fwd=120.0)
+    r_thr = solve_fast_milp(thr, time_limit=60)
+    assert r_thr.counts == {0: 4, 1: 0}      # throughput starves DenseNet
+
+    fair = AllocationProblem(nodes=nodes, trainers=[ahead, behind],
+                             current={0: [], 1: []}, t_fwd=120.0,
+                             objective=MaxMinFairness())
+    for solve in (solve_fast_milp, solve_node_milp, solve_greedy):
+        r = solve(fair)
+        assert r.counts == {0: 0, 1: 4}, solve.__name__
+
+
+def test_maxmin_equalizes_over_a_trace():
+    """Acceptance-criterion shape: replaying a contended trace, max-min
+    must raise the minimum normalized progress vs throughput."""
+    events = [PoolEvent(time=float(k * 200), joined=(k % 4,))
+              if k % 2 == 0 else
+              PoolEvent(time=float(k * 200), left=((k - 1) % 4,))
+              for k in range(24)]
+
+    def jobs():
+        return [TrainerJob(id=i, curve=tab2_curve(n), work=2e7,
+                           n_min=1, n_max=4, r_up=2.0, r_dw=1.0)
+                for i, n in enumerate(["AlexNet", "VGG-16", "DenseNet"])]
+
+    def min_prog(objective):
+        js = jobs()
+        Simulator(events, js, AllocationEngine(time_budget=0.0),
+                  t_fwd=120.0, horizon=5000.0, objective=objective).run()
+        return min(min(j.done / j.work, 1.0) for j in js)
+
+    assert min_prog(MaxMinFairness()) > min_prog(None) + 0.01
+
+
+def test_maxmin_hypothesis_fairness_vs_equal_share():
+    """Property: the fairness objective's min projected normalized
+    progress is never below the equal-share heuristic's minus epsilon."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    obj = MaxMinFairness()
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 10_000))
+    def prop(seed):
+        rng = np.random.RandomState(seed)
+        n_nodes = int(rng.randint(4, 12))
+        trainers = []
+        for j in range(int(rng.randint(2, 4))):
+            trainers.append(mkspec(
+                j, list(TAB2)[j % len(TAB2)], n_min=1,
+                n_max=int(rng.randint(2, 8)),
+                work=float(rng.uniform(1e6, 1e8)),
+                progress=float(rng.uniform(0, 0.9))))
+        prob = AllocationProblem(
+            nodes=list(range(n_nodes)), trainers=trainers,
+            current={t.id: [] for t in trainers}, t_fwd=120.0, objective=obj)
+
+        def min_p(counts):
+            return min(obj.job_value(t, counts[t.id], 0, prob.t_fwd)
+                       for t in trainers)
+
+        fair = solve_fast_milp(prob, time_limit=60)
+        eq = EqualShareAllocator().allocate(prob)
+        assert fair.objective is not None
+        # epsilon: the leximin tiebreak may trade up to its own total
+        # weight of min-progress for higher-ranked gains
+        eps = 2.0 * obj.tiebreak + 1e-9
+        assert min_p(fair.counts) >= min_p(eq.counts) - eps
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# DeadlineAware
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_penalty_monotone_in_deadline():
+    """Looser deadline => lower required rate => value non-decreasing,
+    at every node count."""
+    obj = DeadlineAware()
+    prev = None
+    for dl in (50.0, 200.0, 1000.0, 10_000.0):
+        t = mkspec(0, "DenseNet", n_max=8, work=1e8, progress=0.2,
+                   deadline=dl)
+        vals = [obj.job_value(t, n, 0, 120.0) for n in range(9)]
+        if prev is not None:
+            assert all(v >= p - 1e-9 for v, p in zip(vals, prev))
+        prev = vals
+    # no deadline == plain throughput
+    t_free = mkspec(0, "DenseNet", n_max=8, work=1e8, progress=0.2)
+    thr = Throughput()
+    for n in range(9):
+        assert obj.job_value(t_free, n, 0, 120.0) == \
+            pytest.approx(thr.job_value(t_free, n, 0, 120.0))
+
+
+def test_deadline_flips_a_contended_allocation():
+    """An urgent slow job beats a fast job once the penalty weight is
+    high enough — and loses without a deadline."""
+    slow_urgent = mkspec(0, "DenseNet", n_min=4, n_max=4, work=5e6,
+                         progress=0.0, deadline=700.0)
+    fast = mkspec(1, "AlexNet", n_min=4, n_max=4)
+    nodes = list(range(4))
+    base = AllocationProblem(nodes=nodes, trainers=[slow_urgent, fast],
+                             current={0: [], 1: []}, t_fwd=120.0)
+    assert solve_fast_milp(base, time_limit=60).counts == {0: 0, 1: 4}
+    dl = AllocationProblem(nodes=nodes, trainers=[slow_urgent, fast],
+                           current={0: [], 1: []}, t_fwd=120.0,
+                           objective=DeadlineAware(penalty_weight=50.0))
+    for solve in (solve_fast_milp, solve_greedy):
+        assert solve(dl).counts == {0: 4, 1: 0}, solve.__name__
+
+
+# ---------------------------------------------------------------------------
+# CostCap
+# ---------------------------------------------------------------------------
+
+
+def test_costcap_caps_counts_all_solvers():
+    t = mkspec(0, "AlexNet", n_min=1, n_max=8, budget=360.0)
+    prob = AllocationProblem(nodes=list(range(8)), trainers=[t],
+                             current={0: []}, t_fwd=120.0,
+                             objective=CostCap())
+    for solve in (solve_fast_milp, solve_node_milp, solve_greedy):
+        r = solve(prob)
+        assert r.counts[0] == 3, solve.__name__      # floor(360/120)
+
+
+def test_costcap_below_nmin_idles_job():
+    t = mkspec(0, "AlexNet", n_min=4, n_max=8, budget=360.0)  # cap 3 < n_min
+    prob = AllocationProblem(nodes=list(range(8)), trainers=[t],
+                             current={0: []}, t_fwd=120.0,
+                             objective=CostCap())
+    for solve in (solve_fast_milp, solve_greedy):
+        assert solve(prob).counts[0] == 0, solve.__name__
+
+
+def test_costcap_default_budget_and_no_budget():
+    t = mkspec(0, "AlexNet", n_min=1, n_max=8)
+    uncapped = AllocationProblem(nodes=list(range(8)), trainers=[t],
+                                 current={0: []}, t_fwd=120.0,
+                                 objective=CostCap())
+    assert solve_fast_milp(uncapped, time_limit=60).counts[0] == 8
+    defaulted = AllocationProblem(nodes=list(range(8)), trainers=[t],
+                                  current={0: []}, t_fwd=120.0,
+                                  objective=CostCap(default_budget=240.0))
+    assert solve_fast_milp(defaulted, time_limit=60).counts[0] == 2
+
+
+def test_costcap_budget_accounting_in_loop():
+    """The ControlLoop charges node-seconds and the spec projects the
+    unspent remainder, so allocations shrink as the budget drains."""
+    events = [PoolEvent(time=float(k * 50), joined=(100 + k,))
+              for k in range(10)]
+    job = LoopTrainerJob(id=0, curve=tab2_curve("AlexNet"), work=1e14,
+                         n_min=1, n_max=8, r_up=0.0, r_dw=0.0,
+                         budget=900.0)
+    sim = Simulator(events, [job], AllocationEngine(time_budget=0.0),
+                    t_fwd=100.0, horizon=500.0, objective=CostCap())
+    sim.run()
+    # 500 s x up to 8 nodes = 4000 node-s unbudgeted; the cap must bite
+    assert job.node_seconds < 2000.0
+    # decisions happen every 50 s with t_fwd=100: overshoot past the
+    # budget is bounded by one window's spend (cap * inter-event gap)
+    assert job.node_seconds <= 900.0 + 8 * 50.0
+
+
+def test_maxmin_greedy_does_not_strand_free_nodes():
+    """When one job pins the epigraph minimum (n_min > pool), the
+    rank-decayed tiebreak gains are tiny but must still place every
+    usable node on the remaining jobs."""
+    trainers = [mkspec(j, list(TAB2)[j % len(TAB2)], n_min=1, n_max=8,
+                       work=1e8, progress=0.0) for j in range(7)]
+    trainers.append(mkspec(7, "AlexNet", n_min=64, n_max=64,
+                           work=1e8, progress=0.0))   # pins the min
+    prob = AllocationProblem(nodes=list(range(20)), trainers=trainers,
+                             current={t.id: [] for t in trainers},
+                             t_fwd=120.0, objective=MaxMinFairness())
+    rg = solve_greedy(prob)
+    assert sum(rg.counts.values()) == 20      # all placeable nodes used
+    assert rg.counts[7] == 0
+
+
+def test_maxmin_greedy_fills_deep_ranked_jobs():
+    """Leximin weights underflow float64 past rank ~8; exact-delta move
+    gains must still allocate to every deep-ranked job instead of
+    rounding their tiebreak gains to zero."""
+    trainers = [mkspec(j, "ResNet18", n_min=1, n_max=4, work=1e8,
+                       progress=0.0) for j in range(12)]
+    prob = AllocationProblem(nodes=list(range(60)), trainers=trainers,
+                             current={t.id: [] for t in trainers},
+                             t_fwd=120.0, objective=MaxMinFairness())
+    r = solve_greedy(prob)
+    assert all(r.counts[t.id] == 4 for t in trainers)   # 48 of 60 nodes
+
+
+def test_weighted_zero_weight_job_gets_nothing_every_solver():
+    """Weight 0 must pin the job to zero nodes in the MILPs too — an
+    all-zero objective column alone leaves the solver indifferent."""
+    t0 = mkspec(0, "ResNet18", n_min=1, n_max=2, weight=1.0)
+    t1 = mkspec(1, "ResNet18", n_min=1, n_max=4, weight=0.0)
+    prob = AllocationProblem(nodes=list(range(6)), trainers=[t0, t1],
+                             current={0: [], 1: []}, t_fwd=120.0,
+                             objective=WeightedPriority())
+    for solve in (solve_fast_milp, solve_node_milp, solve_greedy):
+        r = solve(prob)
+        assert r.counts == {0: 2, 1: 0}, solve.__name__
+
+
+def test_maxmin_combine_requires_trainers():
+    with pytest.raises(ValueError):
+        MaxMinFairness().combine([0.1, 0.2])
+
+
+def test_nmin_above_pool_stays_feasible():
+    """A Trainer whose n_min exceeds the pool must be forced to 0 nodes,
+    not render the MILP infeasible (which would trigger the keep-current
+    fallback and block every other job's re-allocation)."""
+    big = mkspec(0, "AlexNet", n_min=20, n_max=32)
+    small = mkspec(1, "DenseNet", n_min=1, n_max=8)
+    prob = AllocationProblem(nodes=list(range(4)), trainers=[big, small],
+                             current={0: [], 1: []}, t_fwd=120.0)
+    for solve in (solve_fast_milp, solve_node_milp, solve_greedy):
+        r = solve(prob)
+        assert not r.fell_back, solve.__name__
+        assert r.counts == {0: 0, 1: 4}, solve.__name__
+
+
+# ---------------------------------------------------------------------------
+# Greedy vs MILP parity, per policy
+# ---------------------------------------------------------------------------
+
+
+POLICIES = [Throughput(), WeightedPriority(), MaxMinFairness(),
+            DeadlineAware(), CostCap()]
+
+
+@pytest.mark.parametrize("objective", POLICIES, ids=lambda o: o.name)
+@pytest.mark.parametrize("seed", range(8))
+def test_greedy_vs_milp_parity_per_policy(seed, objective):
+    prob = random_policy_instance(seed, objective)
+    rg = solve_greedy(prob)
+    rm = solve_fast_milp(prob, time_limit=60)
+    assert rm.objective is not None
+    check_allocation_invariants(prob, rg)
+    check_allocation_invariants(prob, rm)
+    # both report the objective the policy defines
+    assert rg.objective == pytest.approx(
+        policy_objective_of(prob, rg.counts), rel=1e-6, abs=1e-9)
+    assert rm.objective == pytest.approx(
+        policy_objective_of(prob, rm.counts), rel=1e-6, abs=1e-6)
+    scale = max(1.0, abs(rm.objective))
+    # greedy can never beat the exact optimum...
+    assert rg.objective <= rm.objective + 1e-6 * scale
+    # ...and stays within 5% of it on these instances
+    assert rg.objective >= rm.objective - 0.05 * scale
+
+
+@pytest.mark.parametrize("objective", POLICIES, ids=lambda o: o.name)
+def test_node_vs_fast_milp_agree_per_policy(objective):
+    for seed in (1, 4):
+        prob = random_policy_instance(seed, objective, n_hi=12, j_hi=4)
+        rf = solve_fast_milp(prob, time_limit=60)
+        rn = solve_node_milp(prob, time_limit=60)
+        assert rf.objective is not None and rn.objective is not None
+        scale = max(1.0, abs(rf.objective))
+        assert rn.objective == pytest.approx(rf.objective,
+                                             abs=1e-5 * scale)
+        check_allocation_invariants(prob, rn)
+
+
+# ---------------------------------------------------------------------------
+# Engine memoization per (signature, policy)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_cache_keyed_by_policy():
+    from tests.test_engine import random_instance
+    base = random_instance(3)
+
+    def with_obj(o):
+        return AllocationProblem(nodes=base.nodes, trainers=base.trainers,
+                                 current=base.current, t_fwd=base.t_fwd,
+                                 objective=o)
+
+    eng = AllocationEngine(time_budget=0.0)
+    eng.allocate(with_obj(None))
+    eng.allocate(with_obj(Throughput()))       # same policy -> hit
+    assert eng.stats.cache_hits == 1
+    eng.allocate(with_obj(MaxMinFairness()))   # other policy -> miss
+    assert eng.stats.cache_hits == 1
+    eng.allocate(with_obj(MaxMinFairness()))   # same params -> hit
+    assert eng.stats.cache_hits == 2
+    eng.allocate(with_obj(MaxMinFairness(tiebreak=0.05)))  # params differ
+    assert eng.stats.cache_hits == 2
+
+
+def test_maxmin_cache_consistent_under_id_permutation():
+    """The engine signature is id-free, so the leximin rank assignment
+    must be too: id-permuted but structurally identical problems must
+    cache-hit onto the same canonical decision (same DNN wins)."""
+    def mk(i, name):
+        return mkspec(i, name, n_min=1, n_max=4, work=1e9, progress=0.0)
+
+    eng = AllocationEngine(time_budget=0.0)
+    p1 = AllocationProblem(nodes=[0],
+                           trainers=[mk(0, "AlexNet"), mk(1, "DenseNet")],
+                           current={0: [], 1: []}, t_fwd=120.0,
+                           objective=MaxMinFairness())
+    r1 = eng.allocate(p1)
+    p2 = AllocationProblem(nodes=[0],
+                           trainers=[mk(1, "AlexNet"), mk(0, "DenseNet")],
+                           current={0: [], 1: []}, t_fwd=120.0,
+                           objective=MaxMinFairness())
+    r2 = eng.allocate(p2)
+    assert eng.stats.cache_hits == 1
+    # the same *DNN* wins in both labelings
+    assert r1.counts[0] == r2.counts[1]
+    assert r1.counts[1] == r2.counts[0]
+
+
+def test_signature_ignores_fields_policy_does_not_read():
+    """Throughput must keep its cache-hit rate while progress drifts."""
+    t_a = mkspec(0, "ResNet18", work=1e9, progress=0.1)
+    t_b = mkspec(0, "ResNet18", work=1e9, progress=0.7)
+    pa = AllocationProblem(nodes=list(range(6)), trainers=[t_a],
+                           current={0: []}, t_fwd=120.0)
+    pb = AllocationProblem(nodes=list(range(6)), trainers=[t_b],
+                           current={0: []}, t_fwd=120.0)
+    assert problem_signature(pa)[0] == problem_signature(pb)[0]
+    # ...but a progress-aware policy must see the difference
+    pa.objective = pb.objective = MaxMinFairness()
+    assert problem_signature(pa)[0] != problem_signature(pb)[0]
+
+
+# ---------------------------------------------------------------------------
+# run_scenario integration
+# ---------------------------------------------------------------------------
+
+
+def test_run_scenario_accepts_objective():
+    from repro.sched import run_scenario
+
+    jobs = [TrainerJob(id=i, curve=tab2_curve("ShuffleNet"), work=1e8,
+                       n_min=1, n_max=8, r_up=5.0, r_dw=2.0)
+            for i in range(3)]
+    rep = run_scenario("bursty", jobs, scale=0.1, seed=1,
+                       objective=MaxMinFairness(),
+                       allocator=AllocationEngine(time_budget=0.0))
+    assert rep.total_samples > 0
