@@ -1,0 +1,171 @@
+"""Supercomputer-scale allocation sweep (ISSUE 5 / EXPERIMENTS.md §Scale).
+
+Measures per-event solver wall on synthetic event-delta sequences at
+Theta-class scales (up to 4,096 nodes × 64 Trainers), comparing
+
+* **baseline** — the pre-PR-5 per-event solve: a fresh scalar-greedy
+  solve (``solve_greedy(vectorize=False)``) plus the aggregate MILP
+  whenever the engine's cost predictor admits it into the 50 ms budget
+  (it does at the small tiers, and rules it out at 1024+ nodes) — no
+  memoization, no repair: exactly what the PR-4 engine did per cache
+  miss;
+* **engine**   — ``AllocationEngine`` with the incremental warm-start
+  repair and the vectorized value-table greedy (DESIGN.md §11).
+
+Each sequence starts from a mid-size pool and applies random small
+join/leave deltas, feeding every solver's own allocation back in as the
+next event's current map — the steady-state replay access pattern.
+Solution parity (relative objective gap between the two arms) is
+reported alongside the speedup.
+
+``--smoke`` runs the two small tiers only (CI); the full sweep includes
+the 4,096 × 64 tier.  With ``--json`` / ``benchmarks.run --json`` the
+sweep persists ``BENCH_allocator.json`` (schema
+``bftrainer-bench-allocator/1``).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import SMOKE, emit, maybe_write_json
+from benchmarks.schema import ALLOCATOR_SCHEMA, bench_payload
+from repro.core import AllocationEngine
+from repro.core.engine import _est_fast_milp
+from repro.core.greedy import solve_greedy
+from repro.core.milp import AllocationProblem, TrainerSpec
+from repro.core.milp_fast import solve_fast_milp
+from repro.core.scaling import amdahl_curve
+
+SWEEP = [(256, 16), (1024, 32), (4096, 64)]
+SWEEP_SMOKE = [(128, 8), (256, 16)]
+
+
+def _trainers(n_nodes: int, n_jobs: int, rng) -> List[TrainerSpec]:
+    out = []
+    for j in range(n_jobs):
+        curve = amdahl_curve(f"m{j}", 1000.0 * rng.uniform(0.5, 2.0),
+                             rng.uniform(0.1, 0.4), max_nodes=256)
+        n_min = int(rng.randint(1, 4))
+        n_max = int(rng.randint(16, max(17, min(256, n_nodes // 4))))
+        pts, vals = curve.breakpoints(n_min, n_max)
+        out.append(TrainerSpec(id=j, n_min=n_min, n_max=n_max,
+                               r_up=float(rng.uniform(5, 40)),
+                               r_dw=float(rng.uniform(1, 10)),
+                               points=tuple(pts), values=tuple(vals)))
+    return out
+
+
+def _event_sequence(n_nodes: int, n_jobs: int, n_events: int, seed: int):
+    """Yield (nodes, trainers) per event: a pool starting at ~0.75·|N|
+    with small random join/leave deltas — the unfillable-hole churn."""
+    rng = np.random.RandomState(seed)
+    trainers = _trainers(n_nodes, n_jobs, rng)
+    pool = set(range(int(0.75 * n_nodes)))
+    seqs = []
+    for _ in range(n_events):
+        joins = int(rng.randint(0, max(2, n_nodes // 64)))
+        leaves = int(rng.randint(0, max(2, len(pool) // 64)))
+        for nid in rng.choice(sorted(set(range(n_nodes)) - pool),
+                              size=min(joins, n_nodes - len(pool)),
+                              replace=False):
+            pool.add(int(nid))
+        for nid in rng.choice(sorted(pool), size=min(leaves, len(pool)),
+                              replace=False):
+            pool.discard(int(nid))
+        seqs.append(sorted(pool))
+    return trainers, seqs
+
+
+def _run_arm(trainers, seqs, solve, currents=None) -> Dict:
+    """Replay the sequence; returns per-event walls + objectives.
+
+    Without ``currents`` each allocation feeds back as the next event's
+    current map (self-consistent trajectory) and the maps used are
+    recorded; with ``currents`` the recorded maps are replayed instead,
+    so a second arm solves the *identical* problem instances and the
+    objective gap is true per-event solution parity.
+    """
+    current: Dict[int, List[int]] = {}
+    walls, objs, used = [], [], []
+    for i, nodes in enumerate(seqs):
+        if currents is not None:
+            current = currents[i]
+        used.append({j: list(ns) for j, ns in current.items()})
+        prob = AllocationProblem(nodes=list(nodes), trainers=trainers,
+                                 current=current, t_fwd=120.0)
+        t0 = time.perf_counter()
+        res = solve(prob)
+        walls.append(time.perf_counter() - t0)
+        objs.append(res.objective)
+        current = {j: list(ns) for j, ns in res.allocation.items()}
+    return dict(walls=np.array(walls) * 1e3, objs=objs, currents=used)
+
+
+def main() -> None:
+    smoke = SMOKE or "--smoke" in sys.argv[1:]
+    tiers = SWEEP_SMOKE if smoke else SWEEP
+    payload = bench_payload(ALLOCATOR_SCHEMA)
+    payload["sweep"] = []
+    for n_nodes, n_jobs in tiers:
+        # enough events to exercise cache/repair, few enough that the
+        # scalar baseline stays affordable at the 4,096 tier
+        n_events = 12 if smoke else (20 if n_nodes >= 4096 else 40)
+        trainers, seqs = _event_sequence(n_nodes, n_jobs, n_events, seed=7)
+
+        def pr4_solve(p):
+            """PR-4 per-cache-miss portfolio: scalar greedy, then the
+            aggregate MILP when the cost predictor fits the budget."""
+            r = solve_greedy(p, vectorize=False)
+            if _est_fast_milp(len(p.nodes), len(p.trainers)) <= 0.050:
+                rm = solve_fast_milp(p, time_limit=2.0)
+                if rm.objective is not None and (
+                        r.objective is None or rm.objective > r.objective):
+                    r = rm
+            return r
+
+        base = _run_arm(trainers, seqs, pr4_solve)
+        engine = AllocationEngine()
+        eng = _run_arm(trainers, seqs, engine.allocate,
+                       currents=base["currents"])
+
+        # parity: relative objective gap wherever both arms scored
+        gaps = [abs(a - b) / max(1.0, abs(b))
+                for a, b in zip(eng["objs"], base["objs"])
+                if a is not None and b is not None]
+        row = dict(
+            nodes=n_nodes, jobs=n_jobs, policy="throughput",
+            events=n_events,
+            baseline_per_event_ms_p50=float(np.percentile(base["walls"], 50)),
+            baseline_per_event_ms_p99=float(np.percentile(base["walls"], 99)),
+            engine_per_event_ms_p50=float(np.percentile(eng["walls"], 50)),
+            engine_per_event_ms_p99=float(np.percentile(eng["walls"], 99)),
+            speedup_p50=float(np.percentile(base["walls"], 50)
+                              / max(np.percentile(eng["walls"], 50), 1e-6)),
+            cache_hit_rate=engine.stats.cache_hits
+            / max(engine.stats.events, 1),
+            repair_rate=engine.stats.repairs / max(engine.stats.events, 1),
+            parity_max_rel_gap=float(max(gaps)) if gaps else 0.0,
+        )
+        payload["sweep"].append(row)
+        emit(f"scale/{n_nodes}x{n_jobs}/baseline_ms_p50",
+             f"{row['baseline_per_event_ms_p50']:.2f}", "scalar fresh solve")
+        emit(f"scale/{n_nodes}x{n_jobs}/engine_ms_p50",
+             f"{row['engine_per_event_ms_p50']:.2f}", "incremental engine")
+        emit(f"scale/{n_nodes}x{n_jobs}/speedup_p50",
+             f"{row['speedup_p50']:.1f}", "target >= 10x at 4096")
+        emit(f"scale/{n_nodes}x{n_jobs}/parity_max_rel_gap",
+             f"{row['parity_max_rel_gap']:.2e}", "")
+        emit(f"scale/{n_nodes}x{n_jobs}/repair_rate",
+             f"{row['repair_rate']:.2f}", "")
+    maybe_write_json("BENCH_allocator.json", payload)
+
+
+if __name__ == "__main__":
+    if "--json" in sys.argv[1:]:
+        import os
+        os.environ.setdefault("BENCH_JSON_DIR", ".")
+    main()

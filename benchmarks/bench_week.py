@@ -1,22 +1,65 @@
-"""Paper Figs. 10-11: efficiency over time windows, MILP vs equal-share
-heuristic, plus their rescale / preemption cost split."""
+"""Paper Figs. 10-11: efficiency over time windows, plus their rescale /
+preemption cost split — and the PR-5 perf trajectory.
+
+Three arms replay the same trace in one run:
+
+* ``engine``   — the production ``AllocationEngine`` (memoization +
+  incremental warm-start repair + vectorized greedy, DESIGN.md §11);
+* ``milp``     — the PR-4 baseline: a fresh aggregate MILP per event
+  (``MILPAllocator("fast")``), the paper's allocator;
+* ``heuristic`` — the equal-share comparison scheme (paper §5.1).
+
+With ``--json`` / ``benchmarks.run --json`` the run persists
+``BENCH_week.json`` (schema ``bftrainer-bench-week/1``) carrying both
+the baseline and engine walls measured in the same process — the
+CI-tracked end-to-end speedup (EXPERIMENTS.md §Scale).
+"""
 from __future__ import annotations
 
-from benchmarks.common import FULL, efficiency, emit, hpo_jobs, trace
-from repro.core import EqualShareAllocator, MILPAllocator, Simulator, \
-    eq_nodes, static_outcome
+import sys
+
+import numpy as np
+
+from benchmarks.common import (
+    FULL,
+    SMOKE,
+    efficiency_timed,
+    emit,
+    hpo_jobs,
+    maybe_write_json,
+    trace,
+)
+from benchmarks.schema import WEEK_SCHEMA, bench_payload
+from repro.core import AllocationEngine, EqualShareAllocator, MILPAllocator
+
+
+def _solver_wall_ms(rep):
+    walls = np.array([r.solver_wall for r in rep.event_records
+                      if r.solver_wall > 0.0]) * 1e3
+    if not len(walls):
+        return 0.0, 0.0
+    return float(np.percentile(walls, 50)), float(np.percentile(walls, 99))
 
 
 def main() -> None:
-    hours = 48.0 if FULL else 24.0
-    ev = trace(n_nodes=160, hours=hours, seed=33)
+    smoke = SMOKE or "--smoke" in sys.argv[1:]
+    hours = 48.0 if FULL else (6.0 if smoke else 24.0)
+    seed, n_nodes = 33, 160
+    ev = trace(n_nodes=n_nodes, hours=hours, seed=seed)
     horizon = hours * 3600.0
+
+    engine = AllocationEngine()
+    arms = (("engine", engine),
+            ("milp", MILPAllocator("fast")),
+            ("heuristic", EqualShareAllocator()))
     results = {}
-    for name, alloc in (("milp", MILPAllocator("fast")),
-                        ("heuristic", EqualShareAllocator())):
-        rep, u = efficiency(ev, lambda: hpo_jobs(8), horizon, alloc)
-        results[name] = (rep, u)
+    for name, alloc in arms:
+        rep, u, wall = efficiency_timed(ev, lambda: hpo_jobs(8), horizon,
+                                        alloc)
+        results[name] = (rep, u, wall)
         emit(f"week/{name}/efficiency_u", f"{u:.3f}", "fig10")
+        emit(f"week/{name}/wall_s", f"{wall:.2f}", "replay wall")
+        emit(f"week/{name}/solver_wall_s", f"{rep.solver_wall_total:.2f}", "")
         emit(f"week/{name}/rescale_cost_samples",
              f"{rep.rescale_cost_samples:.3e}", "fig11b")
         emit(f"week/{name}/preempt_cost_s", f"{rep.preempt_cost_s:.0f}",
@@ -32,12 +75,43 @@ def main() -> None:
             emit(f"week/{name}/window{k}/samples", f"{out:.3e}", "fig10")
             k += 1
     m, h = results["milp"], results["heuristic"]
+    e = results["engine"]
     emit("week/milp_over_heuristic_u", f"{m[1]/max(h[1],1e-9):.3f}",
          "paper: up to 1.32x")
     emit("week/heuristic_over_milp_rescale_cost",
          f"{h[0].rescale_cost_samples/max(m[0].rescale_cost_samples,1e-9):.1f}",
          "paper: ~76x at tfwd=10")
+    speedup = m[2] / max(e[2], 1e-9)
+    solver_speedup = (m[0].solver_wall_total
+                      / max(e[0].solver_wall_total, 1e-9))
+    emit("week/engine_over_milp_speedup", f"{speedup:.1f}",
+         "end-to-end, target >= 3x")
+    emit("week/engine_cache_hit_rate",
+         f"{engine.stats.cache_hits/max(engine.stats.events,1):.3f}", "")
+    emit("week/engine_repair_rate",
+         f"{engine.stats.repairs/max(engine.stats.events,1):.3f}", "")
+
+    payload = bench_payload(WEEK_SCHEMA)
+    payload["trace"] = dict(n_nodes=n_nodes, hours=hours, seed=seed,
+                            n_events=len(ev))
+    payload["arms"] = {}
+    for name, alloc in arms:
+        rep, u, wall = results[name]
+        p50, p99 = _solver_wall_ms(rep)
+        payload["arms"][name] = dict(
+            allocator=alloc.name, wall_s=wall,
+            solver_wall_s=rep.solver_wall_total,
+            solver_wall_p50_ms=p50, solver_wall_p99_ms=p99,
+            efficiency_u=u, samples=rep.total_samples,
+            events_processed=rep.events_processed)
+    payload["arms"]["engine"]["engine_stats"] = engine.stats.as_dict()
+    payload["speedup_end_to_end"] = speedup
+    payload["speedup_solver_wall"] = solver_speedup
+    maybe_write_json("BENCH_week.json", payload)
 
 
 if __name__ == "__main__":
+    if "--json" in sys.argv[1:]:
+        import os
+        os.environ.setdefault("BENCH_JSON_DIR", ".")
     main()

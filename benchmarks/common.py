@@ -25,10 +25,33 @@ from repro.core import (
 from repro.core.scaling import TAB2
 
 FULL = bool(int(os.environ.get("BENCH_FULL", "0")))
+# BENCH_SMOKE=1 (or --smoke on the individual benchmarks): CI-scale runs
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
 
 
 def emit(name: str, value, derived: str = "") -> None:
     print(f"{name},{value},{derived}", flush=True)
+
+
+def json_dir():
+    """Directory for persistent BENCH_*.json payloads, or ``None``.
+
+    Set by ``benchmarks.run --json [dir]`` (via BENCH_JSON_DIR) — when
+    unset the benchmarks print CSV only and persist nothing.
+    """
+    return os.environ.get("BENCH_JSON_DIR") or None
+
+
+def maybe_write_json(filename: str, payload) -> None:
+    """Write a schema-validated bench JSON into ``json_dir()`` (no-op
+    when JSON output is not requested)."""
+    d = json_dir()
+    if d is None:
+        return
+    from benchmarks.schema import write_bench_json
+    path = os.path.join(d, filename)
+    write_bench_json(path, payload)
+    emit(f"json/{filename}", path, "persistent perf trajectory")
 
 
 @lru_cache(maxsize=8)
@@ -66,10 +89,22 @@ def diverse_jobs(n: int = 21, work: float = 2e8, metric: str = "throughput",
 
 def efficiency(events, jobs_fn, horizon: float, allocator=None,
                t_fwd: float = 120.0, pj_max: int = 10):
+    rep, u, _ = efficiency_timed(events, jobs_fn, horizon, allocator,
+                                 t_fwd=t_fwd, pj_max=pj_max)
+    return rep, u
+
+
+def efficiency_timed(events, jobs_fn, horizon: float, allocator=None,
+                     t_fwd: float = 120.0, pj_max: int = 10):
+    """Like :func:`efficiency` but also returns the *replay* wall time
+    (the elastic Simulator run only — the static-baseline denominator is
+    excluded so arm timings compare allocators, not the shared A_s)."""
     allocator = allocator or MILPAllocator("fast")
+    t0 = time.perf_counter()
     rep = Simulator(list(events), jobs_fn(), allocator, t_fwd=t_fwd,
                     pj_max=pj_max, horizon=horizon).run()
+    wall = time.perf_counter() - t0
     n_eq = max(1, round(eq_nodes(list(events), 0.0, horizon)))
     a_s = static_outcome(jobs_fn(), n_eq, horizon, MILPAllocator("fast"),
                          pj_max=pj_max)
-    return rep, (rep.total_samples / a_s if a_s > 0 else 0.0)
+    return rep, (rep.total_samples / a_s if a_s > 0 else 0.0), wall

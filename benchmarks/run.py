@@ -1,11 +1,17 @@
 """Benchmark dispatcher: one section per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [section ...]``
+``PYTHONPATH=src python -m benchmarks.run [section ...] [--json [DIR]]``
 prints ``name,value,derived`` CSV rows.  Set BENCH_FULL=1 for the
-paper-scale variants.
+paper-scale variants, BENCH_SMOKE=1 (or ``--smoke``) for CI-scale runs.
+
+``--json [DIR]`` additionally persists the perf-trajectory payloads
+(``BENCH_week.json`` from the ``week`` section, ``BENCH_allocator.json``
+from ``scale``) into DIR (default: the current directory), validated
+against ``benchmarks.schema`` — the artifacts CI uploads per commit.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
@@ -13,8 +19,10 @@ SECTIONS = [
     ("milp", "Fig 5: MILP solve time", "benchmarks.bench_milp"),
     ("engine", "Allocation engine portfolio vs per-event MILP (week trace)",
      "benchmarks.bench_engine"),
+    ("scale", "Scale sweep: incremental engine vs fresh solve, to 4096 nodes",
+     "benchmarks.bench_scale"),
     ("tfwd", "Figs 7-9: forward-looking time", "benchmarks.bench_tfwd"),
-    ("week", "Figs 10-11: weekly efficiency MILP vs heuristic",
+    ("week", "Figs 10-11: weekly efficiency engine/MILP vs heuristic",
      "benchmarks.bench_week"),
     ("objective", "Figs 12-13 + Tabs 3-4: objective metrics",
      "benchmarks.bench_objective"),
@@ -32,8 +40,28 @@ SECTIONS = [
 ]
 
 
+def _parse_args(argv):
+    want, i = set(), 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--json":
+            nxt = argv[i + 1] if i + 1 < len(argv) else None
+            if nxt is not None and not nxt.startswith("-") and \
+                    nxt not in {k for k, _, _ in SECTIONS}:
+                os.environ["BENCH_JSON_DIR"] = nxt
+                i += 1
+            else:
+                os.environ.setdefault("BENCH_JSON_DIR", ".")
+        elif a == "--smoke":
+            os.environ["BENCH_SMOKE"] = "1"
+        else:
+            want.add(a)
+        i += 1
+    return want
+
+
 def main() -> None:
-    want = set(sys.argv[1:])
+    want = _parse_args(sys.argv[1:])
     t_start = time.time()
     for key, desc, mod_name in SECTIONS:
         if want and key not in want:

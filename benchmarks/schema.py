@@ -1,0 +1,95 @@
+"""Stable schemas for the persistent perf-trajectory JSONs.
+
+``benchmarks.run --json`` (and the individual benchmarks) write
+``BENCH_week.json`` / ``BENCH_allocator.json`` with the keys declared
+here; CI uploads them as artifacts so per-commit perf trajectories are
+comparable across PRs.  EXPERIMENTS.md §Scale documents the same keys,
+and ``scripts/check_docs.py`` cross-validates docs ↔ this module ↔ any
+JSON present on disk — a key can only be added or renamed by touching
+all three, which is what keeps the trajectory machine-readable over
+time.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+WEEK_SCHEMA = "bftrainer-bench-week/1"
+ALLOCATOR_SCHEMA = "bftrainer-bench-allocator/1"
+
+#: BENCH_week.json — one week-trace replay, engine vs the PR-4 baseline
+#: (per-event aggregate MILP), both measured in the same run.
+WEEK_KEYS = ["schema", "generated_unix", "trace", "arms",
+             "speedup_end_to_end", "speedup_solver_wall"]
+WEEK_TRACE_KEYS = ["n_nodes", "hours", "seed", "n_events"]
+WEEK_ARM_KEYS = ["allocator", "wall_s", "solver_wall_s",
+                 "solver_wall_p50_ms", "solver_wall_p99_ms",
+                 "efficiency_u", "samples", "events_processed"]
+
+#: BENCH_allocator.json — the nodes × jobs scale sweep: per-event solve
+#: wall of the incremental/vectorized engine vs the pre-PR-5 scalar
+#: fresh-solve baseline, plus hit rates and solution parity.
+ALLOCATOR_KEYS = ["schema", "generated_unix", "sweep"]
+ALLOCATOR_ROW_KEYS = ["nodes", "jobs", "policy", "events",
+                      "baseline_per_event_ms_p50",
+                      "baseline_per_event_ms_p99",
+                      "engine_per_event_ms_p50", "engine_per_event_ms_p99",
+                      "speedup_p50", "cache_hit_rate", "repair_rate",
+                      "parity_max_rel_gap"]
+
+
+def bench_payload(schema: str) -> Dict:
+    return {"schema": schema, "generated_unix": time.time()}
+
+
+def write_bench_json(path: str, payload: Dict) -> None:
+    errors = validate_bench_payload(payload)
+    if errors:
+        raise ValueError(f"refusing to write non-conforming {path}: {errors}")
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def validate_bench_payload(payload: Dict) -> List[str]:
+    """Schema check for a bench JSON payload; returns human-readable
+    failures (empty list = conforming)."""
+    errors: List[str] = []
+
+    def need(obj: Dict, keys: List[str], where: str) -> None:
+        for k in keys:
+            if k not in obj:
+                errors.append(f"{where}: missing key {k!r}")
+
+    schema = payload.get("schema")
+    if schema == WEEK_SCHEMA:
+        need(payload, WEEK_KEYS, "week")
+        need(payload.get("trace", {}), WEEK_TRACE_KEYS, "week.trace")
+        arms = payload.get("arms", {})
+        if not isinstance(arms, dict) or not arms:
+            errors.append("week.arms: expected a non-empty mapping")
+        else:
+            for name, arm in arms.items():
+                need(arm, WEEK_ARM_KEYS, f"week.arms[{name}]")
+    elif schema == ALLOCATOR_SCHEMA:
+        need(payload, ALLOCATOR_KEYS, "allocator")
+        rows = payload.get("sweep", [])
+        if not isinstance(rows, list) or not rows:
+            errors.append("allocator.sweep: expected a non-empty list")
+        else:
+            for i, row in enumerate(rows):
+                need(row, ALLOCATOR_ROW_KEYS, f"allocator.sweep[{i}]")
+    else:
+        errors.append(f"unknown schema {schema!r} (expected {WEEK_SCHEMA!r} "
+                      f"or {ALLOCATOR_SCHEMA!r})")
+    return errors
+
+
+def validate_bench_file(path: str) -> List[str]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"{path}: unreadable: {exc}"]
+    return [f"{path}: {e}" for e in validate_bench_payload(payload)]

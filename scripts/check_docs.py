@@ -1,6 +1,8 @@
 #!/usr/bin/env python
 """Docs-consistency check: every ``repro`` import shown in a Markdown
-python code fence must actually work against ``src/``.
+python code fence must actually work against ``src/``, and the bench
+JSON schema documented in EXPERIMENTS.md must match
+``benchmarks/schema.py`` (and any BENCH_*.json present on disk).
 
 Scans the given Markdown files (default: README.md DESIGN.md
 EXPERIMENTS.md), extracts fenced ```python blocks, parses each with
@@ -10,17 +12,26 @@ verifies the module imports and the names exist.  Exits non-zero with a
 per-failure report — wired into CI so documented examples cannot rot
 when the API moves (as happened after the PR-3 facade refactor).
 
+The bench-schema pass parses ```json fences whose top-level keys name
+the perf-trajectory artifacts (``BENCH_week.json`` /
+``BENCH_allocator.json``) and requires the documented key lists to
+equal the declared schema constants — so a key cannot be added, renamed
+or dropped without updating docs, schema, and emitters together
+(EXPERIMENTS.md §Scale).
+
 Usage:  PYTHONPATH=src python scripts/check_docs.py [files...]
 """
 from __future__ import annotations
 
 import ast
 import importlib
+import json
 import re
 import sys
 from pathlib import Path
 
 FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+JSON_FENCE = re.compile(r"```json\n(.*?)```", re.DOTALL)
 
 
 def iter_repro_imports(code: str):
@@ -61,6 +72,50 @@ def check_file(path: Path) -> list:
     return failures
 
 
+def check_bench_schema(root: Path) -> list:
+    """EXPERIMENTS.md's documented bench-JSON keys must equal
+    ``benchmarks.schema``'s declared constants; on-disk BENCH_*.json
+    artifacts (if any — CI emits them first) must validate too."""
+    sys.path.insert(0, str(root))
+    try:
+        from benchmarks import schema
+    except Exception as exc:
+        return [f"benchmarks.schema unimportable: {exc!r}"]
+    declared = {
+        "BENCH_week.json": schema.WEEK_KEYS,
+        "BENCH_week.json arms.*": schema.WEEK_ARM_KEYS,
+        "BENCH_allocator.json": schema.ALLOCATOR_KEYS,
+        "BENCH_allocator.json sweep[]": schema.ALLOCATOR_ROW_KEYS,
+    }
+    failures = []
+    exp = root / "EXPERIMENTS.md"
+    text = exp.read_text(encoding="utf-8")
+    documented = {}
+    for m in JSON_FENCE.finditer(text):
+        try:
+            obj = json.loads(m.group(1))
+        except json.JSONDecodeError:
+            continue
+        if isinstance(obj, dict):
+            for k, v in obj.items():
+                if k in declared and isinstance(v, list):
+                    documented[k] = v
+    for name, keys in declared.items():
+        if name not in documented:
+            failures.append(
+                f"{exp}: bench schema for {name!r} not documented "
+                f"(EXPERIMENTS.md §Scale json fence)")
+        elif sorted(documented[name]) != sorted(keys):
+            failures.append(
+                f"{exp}: {name!r} keys {sorted(documented[name])} != "
+                f"benchmarks.schema {sorted(keys)}")
+    for artifact in ("BENCH_week.json", "BENCH_allocator.json"):
+        p = root / artifact
+        if p.exists():
+            failures.extend(schema.validate_bench_file(str(p)))
+    return failures
+
+
 def main(argv) -> int:
     root = Path(__file__).resolve().parent.parent
     files = ([Path(a) for a in argv] if argv else
@@ -72,6 +127,7 @@ def main(argv) -> int:
             continue
         checked += 1
         failures.extend(check_file(f))
+    failures.extend(check_bench_schema(root))
     if failures:
         print(f"docs-consistency: {len(failures)} failure(s):")
         for fail in failures:

@@ -13,7 +13,7 @@ from repro.core.events import (
     pool_sizes,
     validate_fragments,
 )
-from repro.core.greedy import solve_greedy
+from repro.core.greedy import PAIR_REPAIR_MAX_TRAINERS, solve_greedy
 from repro.core.loop import ControlLoop, EventRecord, LoopStats
 from repro.core.metrics import Efficiency, ROI, eq_nodes, resource_integral
 from repro.core.milp import (
@@ -32,6 +32,7 @@ from repro.core.objectives import (
     Objective,
     Throughput,
     WeightedPriority,
+    cached_value_table,
     resolve_objective,
 )
 from repro.core.scaling import ScalingCurve, all_tab2_curves, amdahl_curve, model_zoo_curves, tab2_curve
@@ -44,6 +45,7 @@ __all__ = [
     "AnalyticBackend", "ExecutionBackend", "LiveBackend",
     "ControlLoop", "EventRecord", "LoopStats",
     "AllocationEngine", "EngineStats", "problem_signature", "solve_greedy",
+    "PAIR_REPAIR_MAX_TRAINERS", "cached_value_table",
     "Fragment", "PoolEvent", "fragments_to_events", "merge_events",
     "merge_fragments", "pool_sizes", "validate_fragments",
     "Efficiency", "ROI", "eq_nodes", "resource_integral",

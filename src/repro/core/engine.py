@@ -85,6 +85,8 @@ def problem_signature(prob: AllocationProblem) -> Tuple[Signature, List[int]]:
 class EngineStats:
     events: int = 0
     cache_hits: int = 0
+    repairs: int = 0              # incremental warm-start repairs accepted
+    repair_escalations: int = 0   # repairs whose bound gap forced a fresh solve
     greedy_solves: int = 0
     fast_milp_solves: int = 0
     node_milp_solves: int = 0
@@ -93,6 +95,8 @@ class EngineStats:
 
     def as_dict(self) -> Dict[str, float]:
         return dict(events=self.events, cache_hits=self.cache_hits,
+                    repairs=self.repairs,
+                    repair_escalations=self.repair_escalations,
                     greedy_solves=self.greedy_solves,
                     fast_milp_solves=self.fast_milp_solves,
                     node_milp_solves=self.node_milp_solves,
@@ -111,11 +115,37 @@ def _est_node_milp(n_nodes: int, n_jobs: int) -> float:
 
 
 class AllocationEngine(Allocator):
-    """Portfolio allocator: cache → greedy → fast MILP → node MILP.
+    """Portfolio allocator: cache → incremental repair → greedy → fast
+    MILP → node MILP.
 
     Memoization is keyed per ``(problem signature, policy)`` — see
     :func:`problem_signature` — so one engine instance can safely serve
     problems carrying different ``objective`` policies.
+
+    On a cache miss the engine first tries an **incremental warm-start
+    repair** (DESIGN.md §11): the previous allocation is embedded in the
+    problem as the current map ``C``, so the repair is the greedy search
+    warm-started from ``C`` — bounded grow moves absorb joined nodes,
+    bounded evict moves release capacity — instead of water-filling the
+    whole pool from zero.  Acceptance is two-tier, against the policy's
+    cheap upper bound (``Objective.upper_bound``, a concave-envelope
+    relaxation):
+
+    * gap ≤ ``repair_exact_gap`` (≈ solver tolerance): the repair has
+      *reached the bound*, so no solver can improve on it — accept
+      without any further work.  This is the incremental fast path, and
+      it is parity-exact by construction: repair ≥ bound − ε ≥ optimum
+      − ε, so a fresh solve could do no better than ε;
+    * gap ≤ ``repair_gap``: plausibly optimal but not provably — run
+      the fresh greedy as well (cheap, vectorized) and keep the better
+      of the two, still skipping the MILPs;
+    * otherwise (or when the policy has no bound): escalate to the full
+      fresh portfolio including the MILPs and keep the best result.
+
+    Enabling ``incremental`` therefore never degrades solution quality
+    beyond ``repair_gap``, and in practice matches the fresh portfolio
+    to solver tolerance (the 6-scenario × 5-policy parity sweep in
+    tests/test_engine.py).
 
     Parameters
     ----------
@@ -130,15 +160,30 @@ class AllocationEngine(Allocator):
         aggregate MILP reaches the same optimum).
     cache_size : int
         Max memoized signatures (LRU eviction).
+    incremental : bool
+        Enable the warm-start repair fast path (default True).
+    repair_gap : float
+        Max relative bound gap for a (greedy-best) solution to skip the
+        MILP escalation (dimensionless, default 1e-3 — tight
+        enough that the 6-scenario × 5-policy sweep stays within 1e-6
+        of the fresh portfolio, see tests/test_engine.py).
+    repair_exact_gap : float
+        Relative bound gap at or below which a repair counts as having
+        *reached* the upper bound and is accepted outright
+        (dimensionless, default 1e-9 — solver-tolerance scale).
     """
 
     def __init__(self, *, time_budget: float = 0.050,
                  use_greedy: bool = True, use_node_milp: bool = False,
-                 cache_size: int = 4096):
+                 cache_size: int = 4096, incremental: bool = True,
+                 repair_gap: float = 1e-3, repair_exact_gap: float = 1e-9):
         self.time_budget = time_budget
         self.use_greedy = use_greedy
         self.use_node_milp = use_node_milp
         self.cache_size = cache_size
+        self.incremental = incremental
+        self.repair_gap = repair_gap
+        self.repair_exact_gap = repair_exact_gap
         self.name = "engine"
         self.stats = EngineStats()
         self._cache: "OrderedDict[Signature, Tuple[Tuple[int, ...], Optional[float], str]]" = OrderedDict()
@@ -192,9 +237,47 @@ class AllocationEngine(Allocator):
         budget = self.time_budget
         best: Optional[AllocationResult] = None
 
+        # incremental warm-start repair (DESIGN.md §11): the previous
+        # allocation *is* the problem's current map, so repair = greedy
+        # warm-started from it.  Two-tier acceptance against the
+        # policy's cheap upper bound (see class docstring).
+        repair: Optional[AllocationResult] = None
+        skip_milp = False
+        if self.incremental and self.use_greedy and prob.trainers:
+            from repro.core.objectives import resolve_objective
+
+            current = project_current(prob)
+            start = {t.id: len(current[t.id]) for t in prob.trainers}
+            if any(start.values()):
+                repair = solve_greedy(prob, start_counts=start)
+                objective = resolve_objective(prob.objective)
+                ub = objective.upper_bound(
+                    prob.trainers, [start[t.id] for t in prob.trainers],
+                    n, prob.t_fwd)
+                if ub is not None and repair.objective is not None:
+                    scale = max(1.0, abs(ub))
+                    gap = ub - repair.objective
+                    if gap <= self.repair_exact_gap * scale:
+                        # repair reached the bound: provably optimal
+                        self.stats.repairs += 1
+                        repair.solver_status = "greedy-repair"
+                        return repair
+                    if gap <= self.repair_gap * scale:
+                        # plausibly optimal: add the fresh greedy, skip
+                        # the MILPs
+                        skip_milp = True
+                if not skip_milp:
+                    self.stats.repair_escalations += 1
+
         if self.use_greedy:
             best = solve_greedy(prob)
             self.stats.greedy_solves += 1
+            if repair is not None:
+                best = _better(best, repair)
+            if skip_milp:
+                self.stats.repairs += 1
+                if best is not None and not best.fell_back:
+                    return best
 
         # Escalation gates and solver time limits use only the static cost
         # estimators and the configured budget — never measured wall-clock —

@@ -1,4 +1,4 @@
-"""Greedy count-based heuristic allocator (DESIGN.md §3.2, §10).
+"""Greedy count-based heuristic allocator (DESIGN.md §3.2, §10, §11).
 
 Solves the aggregate allocation problem of ``milp_fast`` —
 
@@ -11,34 +11,46 @@ from the problem's policy (``repro.core.objectives``; the default
 and ``combine = sum``, i.e. the paper's Eqn 16) — by marginal-gain
 water-filling over each Trainer's SOS2 breakpoints.
 
-Starting from the all-zero count vector, the solver repeatedly applies
-the single-Trainer grow move with the best *average objective gain per
-node*, where the candidate targets for a Trainer at count c are: the
-activation jump (0 → N^min), c+1, every breakpoint above c, the current
-count C_j (the penalty-free point, so the rescale kink can be jumped over
-in one move) and the free-capacity/policy cap.  Move gains come from the
-policy's ``move_evaluator`` as *exact deltas* in any totally ordered
-type: for separable policies (``combine = sum``) a move's gain is the
-per-Trainer value delta — bit-for-bit the historical single-objective
-algorithm; for max-min fairness it is a lexicographic
-``(d_min, d_tiebreak)`` pair, so the search becomes water-filling on the
-minimum (any true lift of the lagging Trainer dominates) while
-arbitrarily deep leximin tiebreak gains stay ordered correctly instead
-of vanishing into float cancellation — the greedy climbs the same
-epigraph the MILP linearizes (DESIGN.md §10 consistency argument).
-A bounded single-Trainer polish pass plus a pairwise shrink-to-grow
-repair pass (small instances only) cleans up the remaining local optima.
+Starting from the all-zero count vector (or, for the engine's
+incremental re-solve, from a warm-start count vector — ``start_counts``),
+the solver repeatedly applies the single-Trainer grow move with the best
+*average objective gain per node*, where the candidate targets for a
+Trainer at count c are: the activation jump (0 → N^min), c+1, every
+breakpoint above c, the current count C_j (the penalty-free point, so
+the rescale kink can be jumped over in one move) and the
+free-capacity/policy cap.  A bounded single-Trainer polish pass plus a
+pairwise shrink-to-grow repair pass (small instances only, see
+``PAIR_REPAIR_MAX_TRAINERS``) cleans up the remaining local optima.
 
-No LP/MILP machinery is involved: a solve is a few hundred Python-level
-arithmetic ops (tens of microseconds), versus milliseconds for the
-aggregate MILP and seconds for the node-level model.  Objective parity
-against ``solve_fast_milp`` per policy is asserted in
-tests/test_engine.py and tests/test_objectives.py.
+Two implementations of the same search share this module:
+
+* **vectorized** (separable policies, i.e. ``combine = sum``) — the
+  per-Trainer value tables ``v_j(0..n_max)`` are materialized once per
+  engine signature as dense numpy rows
+  (``objectives.cached_value_table``), and each water-filling step is a
+  single argmax over a (J × K) candidate-move gain matrix instead of
+  nested Python loops.  At supercomputer scale (4,096 nodes × 64 jobs) a
+  solve drops from ~1.2 s of Python loops to a few milliseconds
+  (EXPERIMENTS.md §Scale);
+* **scalar** (non-separable policies, e.g. max-min fairness) — move
+  gains come from the policy's ``move_evaluator`` as *exact deltas* in
+  any totally ordered type (lexicographic ``(d_min, d_tiebreak)`` pairs
+  for max-min), so the search water-fills the minimum while arbitrarily
+  deep leximin tiebreak gains stay ordered correctly instead of
+  vanishing into float cancellation — the greedy climbs the same
+  epigraph the MILP linearizes (DESIGN.md §10 consistency argument).
+
+No LP/MILP machinery is involved.  Objective parity against
+``solve_fast_milp`` per policy is asserted in tests/test_engine.py and
+tests/test_objectives.py; vectorized-vs-scalar parity in
+tests/test_engine.py as well.
 """
 from __future__ import annotations
 
 import time
 from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.core.milp import (
     AllocationProblem,
@@ -47,8 +59,18 @@ from repro.core.milp import (
     project_current,
 )
 from repro.core.milp_fast import reconstruct_map
+from repro.core.objectives import cached_value_table, resolve_objective
 
 _EPS = 1e-9
+
+#: Pairwise shrink-to-grow repair is O(J² · breakpoints²) per round, so
+#: it runs only when the Trainer count is at most this.  Beyond it the
+#: water-filling + single-Trainer polish result stands unrepaired — the
+#: pass exists to fix rare two-Trainer local optima on small instances,
+#: and its cost at J = 64 (≈ 40k move evaluations per round) would
+#: dominate the whole solve; termination within the polish budget on
+#: large instances is asserted in tests/test_engine.py.
+PAIR_REPAIR_MAX_TRAINERS = 12
 
 
 def _grow_targets(t: TrainerSpec, c: int, free: int, cj: int,
@@ -81,51 +103,215 @@ def _shrink_targets(t: TrainerSpec, c: int, cj: int) -> List[int]:
     return sorted(targets)
 
 
-def solve_greedy(prob: AllocationProblem, *, polish_rounds: int = 4,
-                 pair_repair_limit: int = 12) -> AllocationResult:
-    """Objective-aware greedy solve of ``prob`` (see module docstring).
+def _clamp_start(trainers: List[TrainerSpec], start: Dict[int, int],
+                 caps: Dict[int, Optional[int]], n: int) -> Dict[int, int]:
+    """Snap a warm-start count vector onto the feasible lattice: counts
+    above the policy/size cap shrink to it, counts stranded below
+    ``n_min`` (e.g. after a preemption) evict to 0, and — if the vector
+    still oversubscribes the pool (a caller passing a stale allocation
+    without projecting it first) — the largest holders shrink/evict
+    until Σ counts ≤ |N|, so the search never starts infeasible."""
+    out = {}
+    for t in trainers:
+        c = int(start.get(t.id, 0))
+        hi = t.n_max if caps[t.id] is None else min(t.n_max, caps[t.id])
+        c = min(c, hi)
+        if c < t.n_min:
+            c = 0
+        out[t.id] = c
+    total = sum(out.values())
+    n_min_of = {t.id: t.n_min for t in trainers}
+    order = sorted(out, key=lambda tid: (-out[tid], tid))
+    for tid in order:                 # largest holder first, deterministic
+        if total <= n:
+            break
+        fit = out[tid] - (total - n)
+        new = fit if fit >= n_min_of[tid] else 0
+        total -= out[tid] - new
+        out[tid] = new
+    return out
 
-    Parameters
-    ----------
-    polish_rounds : int
-        Max rounds of the single-Trainer polish / pairwise repair loops.
-    pair_repair_limit : int
-        Pairwise repair runs only when ``len(trainers)`` is at most this
-        (it is O(J^2 · breakpoints^2) per round).
 
-    Returns
-    -------
-    AllocationResult
-        ``objective`` is the policy's ``combine`` over per-Trainer
-        values, directly comparable with the MILP solvers' objectives.
+def _pair_repair(trainers, cj, caps, polish_rounds, *, count_of, free_of,
+                 gain2, better, zero, apply2) -> None:
+    """Pairwise shrink-to-grow repair, shared by the vectorized and
+    scalar paths (they differ only in how a two-Trainer move is scored
+    and applied): shrink one Trainer to one of its shrink targets to
+    fund a grow move on another; first improving move wins, restart the
+    scan, bounded by ``polish_rounds`` rounds.
+
+    ``gain2(td, down, tu, up)`` scores the combined move, ``better``
+    compares it against ``zero``, ``apply2(t, m)`` commits one leg;
+    ``count_of``/``free_of`` read current state.
     """
-    from repro.core.objectives import resolve_objective
+    improved = True
+    rounds = 0
+    while improved and rounds < polish_rounds:
+        improved = False
+        rounds += 1
+        for td in trainers:
+            cd = count_of(td.id)
+            if cd == 0:
+                continue
+            for down in _shrink_targets(td, cd, cj[td.id]):
+                released = cd - down
+                for tu in trainers:
+                    if tu.id == td.id:
+                        continue
+                    cu = count_of(tu.id)
+                    for up in _grow_targets(tu, cu, free_of() + released,
+                                            cj[tu.id], caps[tu.id]):
+                        if better(gain2(td, down, tu, up), zero):
+                            apply2(td, down)
+                            apply2(tu, up)
+                            improved = True
+                            break
+                    if improved:
+                        break
+                if improved:
+                    break
+            if improved:
+                break
 
-    t0 = time.perf_counter()
-    objective = resolve_objective(prob.objective)
-    nodes = list(prob.nodes)
+
+# ---------------------------------------------------------------------------
+# Vectorized path (separable policies)
+# ---------------------------------------------------------------------------
+
+
+def _solve_separable_vec(prob: AllocationProblem, objective, nodes, trainers,
+                         cj: Dict[int, int], caps, start: Dict[int, int],
+                         polish_rounds: int, pair_repair_limit: int):
+    """Water-filling / polish / pairwise repair over dense numpy value
+    tables.  Returns the final ``counts`` dict and objective value."""
+    j_cnt = len(trainers)
+    if j_cnt == 0:
+        return {}, 0.0
     n = len(nodes)
-    trainers = prob.trainers
+    hi = np.empty(j_cnt, dtype=np.int64)
+    n_min = np.empty(j_cnt, dtype=np.int64)
+    for i, t in enumerate(trainers):
+        h = t.n_max if caps[t.id] is None else min(t.n_max, caps[t.id])
+        hi[i] = max(h, 0)
+        n_min[i] = t.n_min
+    m_max = int(hi.max(initial=0))
 
-    current = project_current(prob)
-    cj = {t.id: len(current[t.id]) for t in trainers}
-    counts: Dict[int, int] = {t.id: 0 for t in trainers}
-    caps = {t.id: objective.count_cap(t, prob.t_fwd) for t in trainers}
-    free = n
+    # dense value matrix; infeasible counts (1..n_min-1, > hi) at -inf so
+    # they can never win an argmax
+    v = np.full((j_cnt, m_max + 1), -np.inf)
+    for i, t in enumerate(trainers):
+        tab = cached_value_table(objective, t, cj[t.id], prob.t_fwd)
+        v[i, :hi[i] + 1] = tab[:hi[i] + 1]
+        if t.n_min > 1:
+            v[i, 1:min(t.n_min, hi[i] + 1)] = -np.inf
+
+    # static candidate targets per Trainer: breakpoints, n_min, C_j, hi.
+    # 0 is a safe pad value — a grow target must exceed the current count.
+    cand_sets = []
+    for i, t in enumerate(trainers):
+        s = {int(p) for p in t.points if t.n_min <= p <= hi[i]}
+        if t.n_min <= hi[i]:
+            s.add(int(t.n_min))
+        s.add(int(hi[i]))
+        if t.n_min <= cj[t.id] <= hi[i]:
+            s.add(cj[t.id])
+        cand_sets.append(sorted(s))
+    k = max((len(s) for s in cand_sets), default=1)
+    cand = np.zeros((j_cnt, k + 2), dtype=np.int64)
+    for i, s in enumerate(cand_sets):
+        cand[i, :len(s)] = s
+
+    rows = np.arange(j_cnt)
+    counts = np.array([start[t.id] for t in trainers], dtype=np.int64)
+    free = n - int(counts.sum())
+    curval = v[rows, counts]
+
+    def grow_until_stuck():
+        nonlocal free
+        while free > 0:
+            reach = np.minimum(hi, counts + free)
+            cand[:, k] = np.minimum(counts + 1, m_max)
+            cand[:, k + 1] = reach
+            d = cand - counts[:, None]
+            valid = (d > 0) & (cand <= reach[:, None])
+            gains = np.where(valid, v[rows[:, None], cand] - curval[:, None],
+                             -np.inf)
+            per = np.where(gains > _EPS, gains / np.maximum(d, 1), -np.inf)
+            flat = int(np.argmax(per))
+            i, c = divmod(flat, per.shape[1])
+            if not np.isfinite(per[i, c]):
+                break
+            tgt = int(cand[i, c])
+            free -= tgt - int(counts[i])
+            counts[i] = tgt
+            curval[i] = v[i, tgt]
+
+    # --- water-filling: best average-gain grow move until none improves ---
+    grow_until_stuck()
+
+    # --- single-Trainer polish: any feasible retarget that improves ---
+    for _ in range(polish_rounds):
+        improved = False
+        for i in range(j_cnt):
+            reach = int(min(hi[i], counts[i] + free))
+            g = v[i, :reach + 1] - curval[i]
+            m = int(np.argmax(g))
+            if g[m] > _EPS and m != counts[i]:
+                free -= m - int(counts[i])
+                counts[i] = m
+                curval[i] = v[i, m]
+                improved = True
+        if not improved:
+            break
+        grow_until_stuck()      # a polish evict may free nodes others can use
+
+    # --- pairwise repair (small J only): shrink one Trainer to fund another
+    if j_cnt <= pair_repair_limit:
+        idx = {t.id: i for i, t in enumerate(trainers)}
+
+        def apply2(t, m):
+            nonlocal free
+            i = idx[t.id]
+            free -= m - int(counts[i])
+            counts[i] = m
+            curval[i] = v[i, m]
+
+        _pair_repair(
+            trainers, cj, caps, polish_rounds,
+            count_of=lambda tid: int(counts[idx[tid]]),
+            free_of=lambda: free,
+            gain2=lambda td, down, tu, up:
+                (v[idx[td.id], down] - curval[idx[td.id]])
+                + (v[idx[tu.id], up] - curval[idx[tu.id]]),
+            better=lambda g, z: g > z + _EPS, zero=0.0, apply2=apply2)
+
+    out = {t.id: int(counts[i]) for i, t in enumerate(trainers)}
+    return out, float(curval.sum()) if j_cnt else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Scalar path (non-separable policies: exact move-gain deltas)
+# ---------------------------------------------------------------------------
+
+
+def _solve_scalar(prob: AllocationProblem, objective, nodes, trainers,
+                  cj: Dict[int, int], caps, start: Dict[int, int],
+                  polish_rounds: int, pair_repair_limit: int):
+    n = len(nodes)
+    counts: Dict[int, int] = dict(start)
+    free = n - sum(counts.values())
     separable = objective.separable
 
-    # value tables v_j(0..n_max): O(Σ n_max) interpolations up front, O(1)
-    # lookups in the search loops below
-    val_tab = {t.id: [objective.job_value(t, m, cj[t.id], prob.t_fwd)
-                      for m in range(t.n_max + 1)] for t in trainers}
+    val_tab = {t.id: cached_value_table(objective, t, cj[t.id], prob.t_fwd)
+               for t in trainers}
 
     def val(t: TrainerSpec, m: int) -> float:
-        return val_tab[t.id][m]
+        return float(val_tab[t.id][m])
 
     # per-Trainer value vector, maintained so the policy's move
     # evaluator can score candidate moves as exact deltas
     idx = {t.id: i for i, t in enumerate(trainers)}
-    vals = [val(t, 0) for t in trainers]
+    vals = [val(t, counts[t.id]) for t in trainers]
 
     # Move gains come from the policy (exact deltas — never
     # combine(new) - combine(old), whose cancellation would round away
@@ -188,41 +374,75 @@ def solve_greedy(prob: AllocationProblem, *, polish_rounds: int = 4,
         if not improved:
             break
 
-    # --- pairwise repair (small J only): shrink one Trainer to fund another ---
+    # --- pairwise repair (small J only): shrink one Trainer to fund another
     if len(trainers) <= pair_repair_limit:
-        improved = True
-        rounds = 0
-        while improved and rounds < polish_rounds:
-            improved = False
-            rounds += 1
-            for td in trainers:
-                cd = counts[td.id]
-                if cd == 0:
-                    continue
-                for down in _shrink_targets(td, cd, cj[td.id]):
-                    released = cd - down
-                    for tu in trainers:
-                        if tu.id == td.id:
-                            continue
-                        cu = counts[tu.id]
-                        for up in _grow_targets(tu, cu, free + released,
-                                                cj[tu.id], caps[tu.id]):
-                            g = gain_of(vals, [(idx[td.id], val(td, down)),
-                                               (idx[tu.id], val(tu, up))])
-                            if better(g, zero):
-                                apply(td, down)
-                                apply(tu, up)
-                                improved = True
-                                break
-                        if improved:
-                            break
-                    if improved:
-                        break
-                if improved:
-                    break
+        _pair_repair(
+            trainers, cj, caps, polish_rounds,
+            count_of=lambda tid: counts[tid],
+            free_of=lambda: free,
+            gain2=lambda td, down, tu, up:
+                gain_of(vals, [(idx[td.id], val(td, down)),
+                               (idx[tu.id], val(tu, up))]),
+            better=better, zero=zero, apply2=apply)
+
+    return dict(counts), objective.combiner(trainers)(vals)
+
+
+# ---------------------------------------------------------------------------
+
+
+def solve_greedy(prob: AllocationProblem, *, polish_rounds: int = 4,
+                 pair_repair_limit: int = PAIR_REPAIR_MAX_TRAINERS,
+                 start_counts: Optional[Dict[int, int]] = None,
+                 vectorize: bool = True) -> AllocationResult:
+    """Objective-aware greedy solve of ``prob`` (see module docstring).
+
+    Parameters
+    ----------
+    polish_rounds : int
+        Max rounds of the single-Trainer polish / pairwise repair loops.
+    pair_repair_limit : int
+        Pairwise repair runs only when ``len(trainers)`` is at most this
+        (default ``PAIR_REPAIR_MAX_TRAINERS``; it is
+        O(J² · breakpoints²) per round).
+    start_counts : dict[int, int], optional
+        Warm-start count vector (Trainer id -> count), e.g. the previous
+        allocation for the engine's incremental re-solve.  Counts are
+        snapped onto the feasible lattice (above-cap shrinks, stranded
+        below-``n_min`` evicts to 0) and the search then applies bounded
+        grow/evict moves from there instead of filling from zero.
+    vectorize : bool
+        Use the numpy matrix path for separable policies (default).
+        ``False`` forces the scalar reference path — the two are
+        parity-tested against each other.
+
+    Returns
+    -------
+    AllocationResult
+        ``objective`` is the policy's ``combine`` over per-Trainer
+        values, directly comparable with the MILP solvers' objectives.
+    """
+    t0 = time.perf_counter()
+    objective = resolve_objective(prob.objective)
+    nodes = list(prob.nodes)
+    trainers = prob.trainers
+
+    current = project_current(prob)
+    cj = {t.id: len(current[t.id]) for t in trainers}
+    caps = {t.id: objective.count_cap(t, prob.t_fwd) for t in trainers}
+    start = _clamp_start(trainers, start_counts or {}, caps, len(nodes))
+
+    if objective.separable and vectorize:
+        counts, obj = _solve_separable_vec(
+            prob, objective, nodes, trainers, cj, caps, start,
+            polish_rounds, pair_repair_limit)
+    else:
+        counts, obj = _solve_scalar(
+            prob, objective, nodes, trainers, cj, caps, start,
+            polish_rounds, pair_repair_limit)
 
     allocation = reconstruct_map(nodes, trainers, current, counts)
     return AllocationResult(allocation=allocation, counts=dict(counts),
-                            objective=objective.combiner(trainers)(vals),
+                            objective=obj,
                             wall_time=time.perf_counter() - t0,
                             solver_status="greedy")

@@ -74,15 +74,25 @@ class TrainerJob:
     n_rescales: int = 0
     n_preemptions: int = 0
     node_seconds: float = 0.0       # node-seconds consumed so far
+    _bp_cache: Optional[tuple] = field(default=None, repr=False)
 
     def spec(self, max_points: int = 8, now: float = 0.0) -> TrainerSpec:
         """Project this job into the allocator's ``TrainerSpec`` as seen
         at trace time ``now``: the deadline becomes relative
         (seconds-from-now), the budget becomes the unspent remainder
-        (node-seconds), and progress the completed work fraction."""
-        pts, vals = self.curve.breakpoints(self.n_min, self.n_max,
-                                           metric=self.metric,
-                                           max_points=max_points)
+        (node-seconds), and progress the completed work fraction.
+
+        The SOS2 breakpoints are a pure function of the (frozen) curve
+        and the size bounds, so they are computed once and memoized —
+        ``spec()`` is called once per active Trainer per re-allocation,
+        which makes it hot on month-scale replays.
+        """
+        key = (max_points, self.metric, self.n_min, self.n_max)
+        if self._bp_cache is None or self._bp_cache[0] != key:
+            self._bp_cache = (key, self.curve.breakpoints(
+                self.n_min, self.n_max, metric=self.metric,
+                max_points=max_points))
+        pts, vals = self._bp_cache[1]
         finite_work = self.work if math.isfinite(self.work) else None
         progress = (min(self.done / self.work, 1.0)
                     if finite_work and self.work > 0 else 0.0)

@@ -2,6 +2,12 @@
 
 The paper solves its model with Gurobi; HiGHS is an exact branch-and-cut
 MILP solver, so optimal objective values are solver-independent.
+
+Constraint storage is COO-direct: ``add_row`` appends straight onto flat
+``(data, row, col)`` triplet lists, so ``solve`` assembles the sparse
+matrix without re-walking per-row dicts — and ``clone()`` is a handful
+of C-speed list copies, which is what makes the per-signature constraint
+skeleton cache in ``milp_fast`` cheap (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -22,9 +28,13 @@ class MILPBuilder:
     lb: List[float] = field(default_factory=list)
     ub: List[float] = field(default_factory=list)
     obj: Dict[int, float] = field(default_factory=dict)
-    rows: List[Dict[int, float]] = field(default_factory=list)
+    n_rows: int = 0
     row_lb: List[float] = field(default_factory=list)
     row_ub: List[float] = field(default_factory=list)
+    # constraint matrix as flat COO triplets (parallel lists)
+    coo_data: List[float] = field(default_factory=list)
+    coo_row: List[int] = field(default_factory=list)
+    coo_col: List[int] = field(default_factory=list)
 
     def add_var(self, name: str, *, binary: bool = False, integer: bool = False,
                 lb: float = 0.0, ub: float = 1.0) -> int:
@@ -44,9 +54,24 @@ class MILPBuilder:
 
     def add_row(self, coeffs: Dict[int, float], lb: float = -np.inf,
                 ub: float = np.inf) -> None:
-        self.rows.append(coeffs)
+        r = self.n_rows
+        self.n_rows += 1
+        self.coo_row.extend([r] * len(coeffs))
+        self.coo_col.extend(coeffs.keys())
+        self.coo_data.extend(coeffs.values())
         self.row_lb.append(lb)
         self.row_ub.append(ub)
+
+    def clone(self) -> "MILPBuilder":
+        """Independent copy — the skeleton-cache restore path: flat list
+        copies only, no per-row dict rebuilding."""
+        return MILPBuilder(
+            n_vars=self.n_vars, names=list(self.names),
+            integrality=list(self.integrality),
+            lb=list(self.lb), ub=list(self.ub), obj=dict(self.obj),
+            n_rows=self.n_rows, row_lb=list(self.row_lb),
+            row_ub=list(self.row_ub), coo_data=list(self.coo_data),
+            coo_row=list(self.coo_row), coo_col=list(self.coo_col))
 
     # ------------------------------------------------------------------
 
@@ -56,14 +81,8 @@ class MILPBuilder:
         for i, v in self.obj.items():
             c[i] = -v if maximize else v
 
-        data, ri, ci = [], [], []
-        for r, row in enumerate(self.rows):
-            for i, v in row.items():
-                ri.append(r)
-                ci.append(i)
-                data.append(v)
-        a = sp.csr_matrix((data, (ri, ci)),
-                          shape=(len(self.rows), self.n_vars))
+        a = sp.csr_matrix((self.coo_data, (self.coo_row, self.coo_col)),
+                          shape=(self.n_rows, self.n_vars))
         cons = LinearConstraint(a, np.array(self.row_lb), np.array(self.row_ub))
         t0 = time.perf_counter()
         res = milp(

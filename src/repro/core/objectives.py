@@ -35,8 +35,11 @@ Adding a sixth policy is documented in DESIGN.md §10.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, TYPE_CHECKING
+
+import numpy as np
 
 from repro.core.lp import MILPBuilder, epigraph_min
 
@@ -102,6 +105,92 @@ def _eqn16_terms(b: MILPBuilder, jt: JobTerms, t_fwd: float,
     b.set_obj(jt.z_dw, -weight * o_cj * jt.spec.r_dw)
 
 
+# ---------------------------------------------------------------------------
+# Vectorized value tables (the greedy/repair hot path, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def _interp_table(t: "TrainerSpec", n_hi: int) -> np.ndarray:
+    """``O_j(m)`` for m = 0..n_hi as a dense vector (progress units/s),
+    linearly interpolated over the SOS2 breakpoints — the vectorized
+    counterpart of ``TrainerSpec.value_at``."""
+    ns = np.arange(n_hi + 1, dtype=float)
+    return np.interp(ns, np.asarray(t.points, dtype=float),
+                     np.asarray(t.values, dtype=float))
+
+
+def _penalty_table(t: "TrainerSpec", cj: int, n_hi: int) -> np.ndarray:
+    """``rescale_penalty(t, m, cj)`` for m = 0..n_hi as a dense vector."""
+    o_cj = t.value_at(cj)
+    pen = np.zeros(n_hi + 1)
+    if cj < n_hi:
+        pen[cj + 1:] = o_cj * t.r_up
+    if cj > 0:
+        pen[:min(cj, n_hi + 1)] = o_cj * t.r_dw
+    return pen
+
+
+#: module-level LRU of materialized value tables.  Keys are id-free (the
+#: policy's own cache_key/spec_key plus the Trainer's curve/cost fields),
+#: so tables are shared across events exactly when the engine's
+#: memoization signature would match that Trainer — one materialization
+#: per engine signature (ISSUE: vectorized greedy).
+_VT_CACHE: "OrderedDict[Tuple, np.ndarray]" = OrderedDict()
+_VT_CACHE_SIZE = 4096
+
+
+def cached_value_table(objective: "Objective", t: "TrainerSpec", cj: int,
+                       t_fwd: float) -> np.ndarray:
+    """Memoized ``objective.value_table(t, cj, t_fwd)`` (read-only array)."""
+    key = (objective.cache_key(), objective.spec_key(t), t.n_min, t.n_max,
+           t.r_up, t.r_dw, t.points, t.values, cj, t_fwd)
+    tab = _VT_CACHE.get(key)
+    if tab is not None:
+        _VT_CACHE.move_to_end(key)
+        return tab
+    tab = np.asarray(objective.value_table(t, cj, t_fwd), dtype=float)
+    tab.setflags(write=False)
+    _VT_CACHE[key] = tab
+    if len(_VT_CACHE) > _VT_CACHE_SIZE:
+        _VT_CACHE.popitem(last=False)
+    return tab
+
+
+def clear_value_table_cache() -> None:
+    _VT_CACHE.clear()
+
+
+def _feasible_hull(tab: np.ndarray, n_min: int, hi: int):
+    """Upper concave hull of ``tab`` over the feasible counts
+    ``{0} ∪ [n_min, hi]``.
+
+    Returns ``(base, slopes, widths)``: the hull value at 0 plus the
+    hull's segments left-to-right (slopes strictly decreasing).  Any
+    feasible ``v(m)`` satisfies ``v(m) <= base + Σ`` of the first ``m``
+    node-widths of segments, which is what makes the water-filling
+    relaxation below a true upper bound.
+    """
+    if hi < n_min:
+        return float(tab[0]), np.empty(0), np.empty(0)
+    idx = np.concatenate(([0], np.arange(n_min, hi + 1)))
+    ys = tab[idx]
+    hull: List[Tuple[int, float]] = []
+    for x, y in zip(idx.tolist(), ys.tolist()):
+        while len(hull) >= 2:
+            (x1, y1), (x2, y2) = hull[-2], hull[-1]
+            if (y2 - y1) * (x - x2) <= (y - y2) * (x2 - x1):
+                hull.pop()          # middle vertex under the chord
+            else:
+                break
+        hull.append((x, y))
+    xs = np.array([p[0] for p in hull], dtype=float)
+    vs = np.array([p[1] for p in hull], dtype=float)
+    slopes = np.diff(vs) / np.diff(xs)
+    widths = np.diff(xs)
+    keep = slopes > 0.0             # a maximizer never takes a downhill segment
+    return float(vs[0]), slopes[keep], widths[keep]
+
+
 class Objective:
     """Base policy: what the allocation portfolio maximizes.
 
@@ -148,6 +237,58 @@ class Objective:
         """Per-Trainer scalar value of holding ``n`` nodes for the next
         ``t_fwd`` seconds, in the policy's objective units."""
         raise NotImplementedError
+
+    def value_table(self, t: "TrainerSpec", cj: int,
+                    t_fwd: float) -> np.ndarray:
+        """Dense per-Trainer value vector ``[job_value(t, m, cj, t_fwd)
+        for m in 0..n_max]``.
+
+        The base implementation loops ``job_value`` (always correct);
+        the built-in policies override it with closed-form numpy so the
+        vectorized greedy/repair path materializes tables in O(n_max)
+        numpy time.  Overrides must agree with ``job_value`` to float
+        interpolation accuracy (parity-tested in tests/test_engine.py).
+        """
+        return np.array([self.job_value(t, m, cj, t_fwd)
+                         for m in range(t.n_max + 1)], dtype=float)
+
+    def upper_bound(self, trainers: Sequence["TrainerSpec"],
+                    cjs: Sequence[int], n_nodes: int,
+                    t_fwd: float) -> Optional[float]:
+        """Cheap upper bound on the optimal objective, or ``None``.
+
+        Used by the engine's incremental re-solve to decide whether a
+        warm-start repair is good enough or must escalate (DESIGN.md
+        §11).  The separable default relaxes the problem to its upper
+        concave envelope and water-fills ``n_nodes`` fractionally over
+        the merged hull segments — a classic LP-style bound, exact when
+        every value curve is concave.  Returns ``None`` when no cheap
+        bound exists (non-separable policies without an override), which
+        makes the engine always escalate — conservative, never wrong.
+        """
+        if not self.separable:
+            return None
+        base = 0.0
+        seg_s: List[np.ndarray] = []
+        seg_w: List[np.ndarray] = []
+        for t, cj in zip(trainers, cjs):
+            cap = self.count_cap(t, t_fwd)
+            hi = t.n_max if cap is None else min(t.n_max, cap)
+            b, s, w = _feasible_hull(cached_value_table(self, t, cj, t_fwd),
+                                     t.n_min, hi)
+            base += b
+            seg_s.append(s)
+            seg_w.append(w)
+        slopes = np.concatenate(seg_s) if seg_s else np.empty(0)
+        widths = np.concatenate(seg_w) if seg_w else np.empty(0)
+        if not len(slopes):
+            return base
+        order = np.argsort(-slopes)
+        slopes, widths = slopes[order], widths[order]
+        take = np.minimum(widths,
+                          np.maximum(0.0, n_nodes - (np.cumsum(widths)
+                                                     - widths)))
+        return base + float(np.dot(slopes, take))
 
     def combine(self, values: Sequence[float],
                 trainers: Optional[Sequence["TrainerSpec"]] = None) -> float:
@@ -212,6 +353,10 @@ class Throughput(Objective):
     def job_value(self, t, n, cj, t_fwd):
         return t_fwd * t.value_at(n) - _rescale_penalty(t, n, cj)
 
+    def value_table(self, t, cj, t_fwd):
+        return (t_fwd * _interp_table(t, t.n_max)
+                - _penalty_table(t, cj, t.n_max))
+
     def build(self, b, jobs, t_fwd):
         for jt in jobs:
             _eqn16_terms(b, jt, t_fwd)
@@ -262,6 +407,10 @@ class WeightedPriority(Objective):
     def job_value(self, t, n, cj, t_fwd):
         return self._weight(t) * (
             t_fwd * t.value_at(n) - _rescale_penalty(t, n, cj))
+
+    def value_table(self, t, cj, t_fwd):
+        return self._weight(t) * (t_fwd * _interp_table(t, t.n_max)
+                                  - _penalty_table(t, cj, t.n_max))
 
     def build(self, b, jobs, t_fwd):
         for jt in jobs:
@@ -355,6 +504,25 @@ class MaxMinFairness(Objective):
         d = _norm_denom(t, t_fwd)
         return t.progress + (t_fwd * t.value_at(n)
                              - _rescale_penalty(t, n, cj)) / d
+
+    def value_table(self, t, cj, t_fwd):
+        d = _norm_denom(t, t_fwd)
+        return t.progress + (t_fwd * _interp_table(t, t.n_max)
+                             - _penalty_table(t, cj, t.n_max)) / d
+
+    def upper_bound(self, trainers, cjs, n_nodes, t_fwd):
+        """``max min_j p_j <= min_j max_m p_j(m)`` plus the maximal
+        tiebreak term — loose (it ignores the shared-pool coupling), so
+        maxmin repairs usually escalate; correctness over speed here."""
+        if not trainers:
+            return 0.0
+        kap = self._kappas(trainers)
+        maxes = []
+        for t, cj in zip(trainers, cjs):
+            tab = cached_value_table(self, t, cj, t_fwd)
+            feas = np.concatenate(([tab[0]], tab[t.n_min:]))
+            maxes.append(float(feas.max()))
+        return float(min(maxes)) + sum(k * m for k, m in zip(kap, maxes))
 
     def combine(self, values, trainers=None):
         if not values:
@@ -482,6 +650,14 @@ class DeadlineAware(Objective):
         req = self._req_rate(t)
         if req is not None:
             v -= self.penalty_weight * t_fwd * max(0.0, req - t.value_at(n))
+        return v
+
+    def value_table(self, t, cj, t_fwd):
+        o = _interp_table(t, t.n_max)
+        v = t_fwd * o - _penalty_table(t, cj, t.n_max)
+        req = self._req_rate(t)
+        if req is not None:
+            v = v - self.penalty_weight * t_fwd * np.maximum(0.0, req - o)
         return v
 
     def build(self, b, jobs, t_fwd):

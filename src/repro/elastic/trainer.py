@@ -158,9 +158,16 @@ class ElasticTrainer:
     # ------------------------------------------------------------------
 
     def measured_rescale_costs(self) -> tuple[float, float]:
-        """(r_up, r_dw) estimates from observed rescales."""
-        ups = [dt for a, b, dt in self.rescale_history if b > a]
-        dws = [dt for a, b, dt in self.rescale_history if 0 <= b < a]
+        """(r_up, r_dw) estimates from observed rescales.
+
+        A transition to 0 nodes is a *kill/park* (state snapshots to
+        host and the device mesh is released), not a scale-down of a
+        running mesh — its wall time is dominated by the host transfer
+        and would contaminate the ``r_dw`` fed back into the MILP's
+        Eqn-16 cost term, so it is excluded from the estimate.
+        """
+        ups = [dt for a, b, dt in self.rescale_history if b > a > 0]
+        dws = [dt for a, b, dt in self.rescale_history if 0 < b < a]
         r_up = float(np.mean(ups)) if ups else 0.5
         r_dw = float(np.mean(dws)) if dws else 0.1
         return r_up, r_dw

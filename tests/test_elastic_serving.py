@@ -60,6 +60,30 @@ def test_elastic_trainer_measures_rescale_costs():
     assert len(tr.rescale_history) == 3
 
 
+def test_measured_rescale_costs_exclude_kills():
+    """Regression: transitions to/from 0 nodes (kill/park and unpark)
+    are host-transfer events, not mesh rescales — they must not
+    contaminate the r_dw/r_up estimates fed back into the MILP.  The old
+    filter ``0 <= b < a`` averaged kill walls into r_dw."""
+    tr = object.__new__(ElasticTrainer)   # only rescale_history is read
+    tr.rescale_history = [
+        (4, 2, 0.2), (2, 1, 0.4),   # true downscales
+        (3, 0, 50.0),               # kill: must be excluded from r_dw
+        (1, 2, 0.6), (2, 4, 1.0),   # true upscales
+        (0, 2, 40.0),               # unpark: must be excluded from r_up
+    ]
+    r_up, r_dw = tr.measured_rescale_costs()
+    assert r_dw == pytest.approx(0.3)     # mean(0.2, 0.4), no 50.0
+    assert r_up == pytest.approx(0.8)     # mean(0.6, 1.0), no 40.0
+
+
+def test_measured_rescale_costs_defaults_without_history():
+    tr = object.__new__(ElasticTrainer)
+    tr.rescale_history = [(0, 1, 12.0), (1, 0, 9.0)]   # only park/unpark
+    r_up, r_dw = tr.measured_rescale_costs()
+    assert (r_up, r_dw) == (0.5, 0.1)     # pre-measurement defaults
+
+
 def test_elastic_rescale_rejects_oversubscription():
     tr = small_trainer(seed=2)
     with pytest.raises(ValueError):

@@ -1,15 +1,19 @@
 """AllocationEngine subsystem tests: greedy-vs-MILP objective parity,
-feasibility invariants, reconstruct_map properties, memoization behaviour,
+vectorized-vs-scalar greedy parity, feasibility invariants,
+reconstruct_map properties, memoization behaviour, the incremental
+warm-start repair (including the 6-scenario × 5-policy parity sweep),
 the §3.6 keep-current fallback, and simulator event coalescing."""
+import time
+
 import numpy as np
 import pytest
 
 from repro.core.engine import AllocationEngine, problem_signature
-from repro.core.events import PoolEvent
-from repro.core.greedy import solve_greedy
-from repro.core.milp import AllocationProblem, TrainerSpec
+from repro.core.events import PoolEvent, fragments_to_events
+from repro.core.greedy import PAIR_REPAIR_MAX_TRAINERS, solve_greedy
+from repro.core.milp import AllocationProblem, TrainerSpec, project_current
 from repro.core.milp_fast import reconstruct_map, solve_fast_milp
-from repro.core.scaling import TAB2, tab2_curve
+from repro.core.scaling import TAB2, amdahl_curve, tab2_curve
 from repro.core.simulator import Simulator, TrainerJob
 
 
@@ -109,6 +113,87 @@ def test_greedy_prefers_keep_current_over_churn():
     r = solve_greedy(prob)
     assert r.counts[0] == 4          # any rescale costs 1e9x more than it buys
     assert r.allocation[0] == [0, 1, 2, 3]
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_vectorized_matches_scalar_greedy(seed):
+    """The numpy matrix path and the scalar reference path climb the
+    same search space; their objectives must agree to float tolerance
+    (counts may differ only between exactly-tied optima)."""
+    prob = random_instance(seed)
+    rv = solve_greedy(prob, vectorize=True)
+    rs = solve_greedy(prob, vectorize=False)
+    scale = max(1.0, abs(rs.objective))
+    assert rv.objective >= rs.objective - 1e-9 * scale
+    check_allocation_invariants(prob, rv)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_warm_start_greedy_is_feasible(seed):
+    """Warm-starting from the (projected) current map — the engine's
+    repair move set — keeps every feasibility invariant, including after
+    snapping stranded/over-cap counts onto the lattice."""
+    prob = random_instance(seed)
+    start = {t.id: len(v) for t, v in
+             zip(prob.trainers, project_current(prob).values())}
+    r = solve_greedy(prob, start_counts=start)
+    check_allocation_invariants(prob, r)
+    # and never beats the exact optimum
+    rm = solve_fast_milp(prob, time_limit=60)
+    assert r.objective <= rm.objective + 1e-6 * max(1.0, abs(rm.objective))
+
+
+@pytest.mark.parametrize("vectorize", [True, False])
+def test_warm_start_oversubscribed_pool_is_made_feasible(vectorize):
+    """Regression: a stale start vector summing beyond the pool (caller
+    skipped projection after a shrink) must be clamped to capacity, not
+    returned as an infeasible allocation."""
+    t = lambda i: TrainerSpec(id=i, n_min=2, n_max=12, r_up=5, r_dw=1,
+                              points=(0, 2, 12), values=(0.0, 100.0, 500.0))
+    prob = AllocationProblem(nodes=[0, 1, 2, 3], trainers=[t(0), t(1)],
+                             current={0: [0, 1], 1: [2, 3]}, t_fwd=60.0)
+    r = solve_greedy(prob, start_counts={0: 12, 1: 12}, vectorize=vectorize)
+    assert sum(r.counts.values()) <= len(prob.nodes)
+    check_allocation_invariants(prob, r)
+
+
+def _scale_instance(n_nodes, n_jobs, seed=0):
+    rng = np.random.RandomState(seed)
+    trainers, current, used = [], {}, 0
+    for j in range(n_jobs):
+        curve = amdahl_curve(f"m{j}", 1000.0 * rng.uniform(0.5, 2.0),
+                             rng.uniform(0.1, 0.4), max_nodes=128)
+        n_min = int(rng.randint(1, 4))
+        n_max = int(rng.randint(16, 128))
+        pts, vals = curve.breakpoints(n_min, n_max)
+        trainers.append(TrainerSpec(
+            id=j, n_min=n_min, n_max=n_max,
+            r_up=float(rng.uniform(5, 40)), r_dw=float(rng.uniform(1, 10)),
+            points=tuple(pts), values=tuple(vals)))
+        k = int(rng.randint(0, 40))
+        current[j] = list(range(used, min(used + k, n_nodes)))
+        used = min(used + k, n_nodes)
+    return AllocationProblem(nodes=list(range(n_nodes)), trainers=trainers,
+                             current=current, t_fwd=120.0)
+
+
+def test_pair_repair_guard_is_explicit_and_large_instances_terminate():
+    """The pairwise shrink-to-grow pass is gated by an explicit module
+    constant, and instances far above it (here 40 Trainers × 512 nodes)
+    must still finish within the polish budget — i.e. the guard actually
+    skips the O(J²·breakpoints²) pass instead of grinding through it."""
+    assert PAIR_REPAIR_MAX_TRAINERS == 12
+    prob = _scale_instance(512, 40, seed=3)
+    assert len(prob.trainers) > PAIR_REPAIR_MAX_TRAINERS
+    t0 = time.perf_counter()
+    r = solve_greedy(prob)
+    wall = time.perf_counter() - t0
+    check_allocation_invariants(prob, r)
+    assert wall < 2.0, f"greedy at 512x40 took {wall:.2f}s"
+    # above the guard the default result is identical to explicitly
+    # disabling the pass — i.e. it really did not run
+    r2 = solve_greedy(prob, pair_repair_limit=0)
+    assert r2.objective == pytest.approx(r.objective, rel=1e-9)
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +310,103 @@ def test_engine_fallback_keeps_current_map():
             set(prob.current.get(t.id, [])) & node_set
     # fallbacks must not be cached
     assert len(eng._cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# Incremental warm-start repair (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+class _TwinAllocator:
+    """Solves every problem with an incremental and a fresh engine,
+    driving the replay with the incremental decision and recording the
+    per-event objective gap."""
+
+    name = "twin"
+
+    def __init__(self):
+        # generous budget: the MILP always solves to optimality, so the
+        # comparison is deterministic (a tight wall-clock limit would
+        # make HiGHS results load-dependent)
+        self.inc = AllocationEngine(incremental=True, time_budget=2.0)
+        self.fresh = AllocationEngine(incremental=False, time_budget=2.0)
+        self.gaps = []
+
+    def allocate(self, prob):
+        ri = self.inc.allocate(prob)
+        rf = self.fresh.allocate(prob)
+        assert ri.fell_back == rf.fell_back          # identical feasibility
+        if ri.objective is not None and rf.objective is not None:
+            self.gaps.append((ri.objective - rf.objective)
+                             / max(1.0, abs(rf.objective)))
+        return ri
+
+
+_SWEEP_POLICIES = ["throughput", "weighted", "maxmin", "deadline", "costcap"]
+
+
+def _policy_jobs(policy, n=6):
+    names = list(TAB2)
+    out = []
+    for i in range(n):
+        j = TrainerJob(id=i, curve=tab2_curve(names[i % len(names)]),
+                       work=2e8, n_min=1, n_max=16, r_up=20.0, r_dw=5.0)
+        if policy == "weighted":
+            j.weight = 1.0 + (i % 3)
+        if policy == "deadline":
+            j.deadline = 3600.0 * (4 + i)
+        if policy == "costcap":
+            j.budget = 3.0e5
+        out.append(j)
+    return out
+
+
+@pytest.mark.parametrize("scenario", ["capability", "capacity", "bursty",
+                                      "maintenance", "weekend",
+                                      "overestimate"])
+def test_incremental_matches_fresh_across_policy_sweep(scenario):
+    """Acceptance sweep (ISSUE 5): on every scenario × policy replay the
+    incremental engine's objective equals a fresh portfolio solve within
+    1e-6 relative, event by event."""
+    from repro.sched.scenarios import build_scenario
+
+    sc = build_scenario(scenario, scale=0.25)
+    events = fragments_to_events(sc.fragments)
+    for policy in _SWEEP_POLICIES:
+        twin = _TwinAllocator()
+        Simulator(events, _policy_jobs(policy), twin, t_fwd=120.0,
+                  pj_max=10, horizon=sc.duration, objective=policy).run()
+        assert twin.gaps, f"{scenario}/{policy}: no solved events"
+        worst = max(abs(g) for g in twin.gaps)
+        assert worst <= 1e-6, f"{scenario}/{policy}: parity gap {worst:.2e}"
+
+
+def test_incremental_repair_fast_path_engages():
+    """On a realistic replay the exact-bound tier must actually fire —
+    the incremental layer is pointless if every event escalates."""
+    from repro.core.trace import generate_summit_like
+
+    events = fragments_to_events(
+        generate_summit_like(n_nodes=64, duration=12 * 3600.0, seed=9))
+    eng = AllocationEngine()
+    Simulator(events, _policy_jobs("throughput"), eng, t_fwd=120.0,
+              pj_max=10, horizon=12 * 3600.0).run()
+    assert eng.stats.repairs > 0
+    # repairs + escalations never exceed non-cached events
+    assert (eng.stats.repairs + eng.stats.repair_escalations
+            <= eng.stats.events - eng.stats.cache_hits)
+
+
+def test_incremental_repair_is_deterministic_with_zero_budget():
+    """time_budget=0 + incremental is still fully deterministic: same
+    problem sequence, same decisions (the repair tiers use only the
+    bound, never wall-clock)."""
+    probs = [random_instance(s) for s in range(6)]
+    runs = []
+    for _ in range(2):
+        eng = AllocationEngine(time_budget=0.0)
+        runs.append([eng.allocate(p).counts for p in probs])
+    assert runs[0] == runs[1]
 
 
 # ---------------------------------------------------------------------------

@@ -201,6 +201,101 @@ def milp_instances(draw):
                              current=current, t_fwd=t_fwd)
 
 
+# ---------------------------------------------------------------------------
+# Incremental warm-start re-solve == fresh solve (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def event_delta_sequences(draw):
+    """A small allocation problem plus a sequence of pool/job deltas:
+    nodes join/leave, a job may arrive or finish, progress drifts —
+    the engine's steady-state replay access pattern."""
+    n_nodes = draw(st.integers(4, 14))
+    n_jobs = draw(st.integers(1, 3))
+    specs = []
+    for j in range(n_jobs):
+        n_min = draw(st.integers(1, 2))
+        n_max = draw(st.integers(n_min + 1, 8))
+        thr1 = draw(st.floats(0.5, 10.0))
+        pts = [0, n_min, n_max] if n_min != n_max else [0, n_min]
+        vals = [0.0] + [thr1 * p * (0.9 ** i) for i, p in enumerate(pts[1:])]
+        specs.append(dict(
+            id=j, n_min=n_min, n_max=n_max,
+            r_up=draw(st.floats(0.0, 50.0)), r_dw=draw(st.floats(0.0, 20.0)),
+            points=tuple(pts), values=tuple(vals),
+            weight=draw(st.floats(0.5, 3.0)),
+            deadline=draw(st.one_of(st.none(), st.floats(100.0, 5e4))),
+            budget=draw(st.one_of(st.none(), st.floats(1e3, 1e6))),
+            work=draw(st.floats(1e4, 1e8))))
+    deltas = draw(st.lists(
+        st.tuples(st.integers(-3, 3),                 # pool-size delta
+                  st.floats(0.0, 0.3),                # progress drift
+                  st.integers(0, 2)),                 # 0: keep jobs, 1: drop
+                                                      # one, 2: add one back
+        min_size=2, max_size=4))
+    policy = draw(st.sampled_from(
+        ["throughput", "weighted", "maxmin", "deadline", "costcap"]))
+    return n_nodes, specs, deltas, policy
+
+
+@given(event_delta_sequences())
+@settings(max_examples=20, deadline=None)
+def test_incremental_resolve_equals_fresh_solve(seq):
+    """Property (ISSUE 5 satellite): across random event-delta sequences
+    and all five policies, the incremental engine's per-event objective
+    equals a fresh portfolio solve within tolerance, and every
+    conservation invariant holds on the allocation it returns."""
+    from repro.core.engine import AllocationEngine
+
+    n_nodes, raw_specs, deltas, policy = seq
+    inc = AllocationEngine(incremental=True, time_budget=2.0)
+    fresh = AllocationEngine(incremental=False, time_budget=2.0)
+
+    pool = list(range(n_nodes))
+    progress = {s["id"]: 0.0 for s in raw_specs}
+    active = [s["id"] for s in raw_specs]
+    current = {}
+    for pool_delta, drift, job_op in deltas:
+        n = max(2, len(pool) + pool_delta)
+        pool = list(range(n))
+        if job_op == 1 and len(active) > 1:
+            active = active[1:]
+        elif job_op == 2:
+            active = [s["id"] for s in raw_specs if s["id"] in active
+                      or s["id"] == raw_specs[0]["id"]]
+        trainers = []
+        for s in raw_specs:
+            if s["id"] not in active:
+                continue
+            progress[s["id"]] = min(1.0, progress[s["id"]] + drift)
+            trainers.append(TrainerSpec(progress=progress[s["id"]], **s))
+        prob = AllocationProblem(nodes=pool, trainers=trainers,
+                                 current=current, t_fwd=120.0,
+                                 objective=policy)
+        ri = inc.allocate(prob)
+        rf = fresh.allocate(prob)
+        # conservation invariants on the incremental result
+        seen = set()
+        for t in trainers:
+            alloc = set(ri.allocation[t.id])
+            assert not (alloc & seen)                      # exclusivity
+            seen |= alloc
+            assert alloc <= set(pool)
+            assert len(alloc) == 0 or t.n_min <= len(alloc) <= t.n_max
+            cur = set(current.get(t.id, [])) & set(pool)
+            if len(alloc) >= len(cur):                     # no migration
+                assert cur <= alloc
+            else:
+                assert alloc <= cur
+        # objective parity vs the fresh portfolio
+        assert ri.fell_back == rf.fell_back
+        if ri.objective is not None and rf.objective is not None:
+            scale = max(1.0, abs(rf.objective))
+            assert abs(ri.objective - rf.objective) <= 1e-6 * scale
+        current = {j: list(ns) for j, ns in ri.allocation.items()}
+
+
 @given(milp_instances())
 @settings(max_examples=25, deadline=None)
 def test_fast_milp_invariants(prob):
