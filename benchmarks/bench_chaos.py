@@ -1,0 +1,117 @@
+"""Chaos resilience sweep: efficiency retention under injected faults.
+
+Replays the ``flaky`` chaos scenario (capacity trace + node kills,
+drains, corrupt checkpoint restores and allocator crash/restart from
+DESIGN.md §12) across a node-MTBF sweep and reports two efficiencies:
+
+- ``u_chaos`` — A_e against the *achievable* static baseline, i.e.
+  eq-nodes computed on the fault-reduced trace.  This measures
+  allocation quality on the capacity that actually survived; the
+  allocator is not billed for node-time destroyed by hardware.
+- ``u_raw`` — the same A_e against the clean trace's baseline, so the
+  gap ``u_clean - u_raw`` is the total cost of the faults (destroyed
+  capacity + rollbacks + restart penalties).
+
+The headline acceptance bar is ``u_chaos >= 0.80`` at MTBF = 4 h.
+
+``--smoke`` (or ``BENCH_SMOKE=1``) shrinks the trace for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+from typing import Sequence
+
+from benchmarks.common import FULL, diverse_jobs, emit, maybe_write_json
+from benchmarks.schema import CHAOS_SCHEMA, bench_payload
+from repro.chaos import run_chaos
+from repro.core import (
+    AllocationEngine,
+    MILPAllocator,
+    Simulator,
+    eq_nodes,
+    fragments_to_events,
+    static_outcome,
+)
+from repro.sched import build_scenario
+
+MTBF_HOURS = (1.0, 2.0, 4.0, 8.0)
+#: checkpoint lattice used for the sweep — coarse enough that rollbacks
+#: cost real progress, fine enough that a kill never erases a whole run
+CKPT_EVERY = 5e6
+
+
+def _static_baseline(events, jobs_fn, horizon: float) -> float:
+    n_eq = max(1, round(eq_nodes(list(events), 0.0, horizon)))
+    return static_outcome(jobs_fn(), n_eq, horizon, MILPAllocator("fast"),
+                          pj_max=10)
+
+
+def run_sweep(scale: float, seed: int = 7, scenario: str = "flaky") -> None:
+    sc = build_scenario(scenario, scale=scale, seed=seed)
+    events = fragments_to_events(sc.fragments)
+    n_jobs = max(4, int(round(sc.stats.eq_nodes / 3)))
+    jobs_fn = lambda: diverse_jobs(n=n_jobs, work=1e12, seed=seed)
+
+    a_s = _static_baseline(events, jobs_fn, sc.duration)
+    clean = Simulator(list(events), jobs_fn(), AllocationEngine(),
+                      t_fwd=120.0, pj_max=10, horizon=sc.duration).run()
+    u_clean = clean.total_samples / a_s if a_s > 0 else 0.0
+    emit(f"chaos/{scenario}/n_nodes", sc.n_nodes)
+    emit(f"chaos/{scenario}/hours", f"{sc.duration / 3600.0:.1f}")
+    emit(f"chaos/{scenario}/u_clean", f"{u_clean:.3f}",
+         "fault-free replay vs dedicated eq-nodes")
+
+    payload = bench_payload(CHAOS_SCHEMA)
+    payload.update(scenario=scenario, scale=scale, seed=seed,
+                   u_clean=u_clean, sweep=[])
+    for mtbf_h in MTBF_HOURS:
+        spec = dataclasses.replace(sc.chaos, mtbf=mtbf_h * 3600.0,
+                                   ckpt_every=CKPT_EVERY)
+        rep = run_chaos(list(events), jobs_fn(), spec, horizon=sc.duration)
+        a_s_chaos = _static_baseline(rep.events, jobs_fn, sc.duration)
+        samples = rep.stats.total_samples
+        u_chaos = samples / a_s_chaos if a_s_chaos > 0 else 0.0
+        u_raw = samples / a_s if a_s > 0 else 0.0
+        lost_frac = rep.stats.lost_progress / samples if samples > 0 else 0.0
+        row = {
+            "mtbf_h": mtbf_h,
+            "u_chaos": u_chaos,
+            "u_raw": u_raw,
+            "kills": rep.n_kills,
+            "drains": len(rep.schedule.drains),
+            "corrupt_restores": rep.corrupt_restores,
+            "allocator_restarts": rep.allocator_restarts,
+            "recovered_cache_entries": rep.recovered_cache_entries,
+            "lost_progress_frac": lost_frac,
+            "events": rep.stats.events_processed,
+        }
+        payload["sweep"].append(row)
+        tag = f"chaos/{scenario}/mtbf_{mtbf_h:g}h"
+        emit(f"{tag}/u_chaos", f"{u_chaos:.3f}",
+             "vs achievable (fault-reduced) baseline")
+        emit(f"{tag}/u_raw", f"{u_raw:.3f}", "vs clean-trace baseline")
+        emit(f"{tag}/kills", rep.n_kills)
+        emit(f"{tag}/corrupt_restores", rep.corrupt_restores)
+        emit(f"{tag}/allocator_restarts", rep.allocator_restarts)
+        emit(f"{tag}/recovered_cache_entries", rep.recovered_cache_entries)
+        emit(f"{tag}/lost_progress_frac", f"{lost_frac:.4f}")
+    maybe_write_json("BENCH_chaos.json", payload)
+
+
+def main(argv: Sequence[str] = ()) -> None:
+    # default () — benchmarks.run calls main() with section names still in
+    # sys.argv, so only the __main__ guard forwards the real CLI args
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace for CI smoke runs")
+    args = ap.parse_args(argv)
+    smoke = args.smoke or bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    scale = 0.15 if smoke else (1.0 if FULL else 0.5)
+    run_sweep(scale)
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

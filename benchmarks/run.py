@@ -6,7 +6,8 @@ paper-scale variants, BENCH_SMOKE=1 (or ``--smoke``) for CI-scale runs.
 
 ``--json [DIR]`` additionally persists the perf-trajectory payloads
 (``BENCH_week.json`` from the ``week`` section, ``BENCH_allocator.json``
-from ``scale``) into DIR (default: the current directory), validated
+from ``scale``, ``BENCH_chaos.json`` from ``chaos``) into DIR (default:
+the current directory), validated
 against ``benchmarks.schema`` — the artifacts CI uploads per commit.
 """
 from __future__ import annotations
@@ -32,6 +33,8 @@ SECTIONS = [
      "benchmarks.bench_objectives"),
     ("runtime", "Live ControlLoop: real elastic trainers on a replayed trace",
      "benchmarks.bench_runtime"),
+    ("chaos", "Chaos resilience: efficiency retention under injected faults",
+     "benchmarks.bench_chaos"),
     ("pjmax", "Fig 14: max parallel Trainers", "benchmarks.bench_pjmax"),
     ("scalability", "Fig 15: per-DNN scalability", "benchmarks.bench_scalability"),
     ("rescale_cost", "Fig 16: rescale-cost sweep", "benchmarks.bench_rescale_cost"),

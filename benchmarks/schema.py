@@ -17,6 +17,7 @@ from typing import Dict, List
 
 WEEK_SCHEMA = "bftrainer-bench-week/1"
 ALLOCATOR_SCHEMA = "bftrainer-bench-allocator/1"
+CHAOS_SCHEMA = "bftrainer-bench-chaos/1"
 
 #: BENCH_week.json — one week-trace replay, engine vs the PR-4 baseline
 #: (per-event aggregate MILP), both measured in the same run.
@@ -37,6 +38,16 @@ ALLOCATOR_ROW_KEYS = ["nodes", "jobs", "policy", "events",
                       "engine_per_event_ms_p50", "engine_per_event_ms_p99",
                       "speedup_p50", "cache_hit_rate", "repair_rate",
                       "parity_max_rel_gap"]
+
+#: BENCH_chaos.json — the fault-injection MTBF sweep on the ``flaky``
+#: chaos scenario: efficiency retention under node kills, drains,
+#: corrupt checkpoint restores and allocator crash/restart.
+CHAOS_KEYS = ["schema", "generated_unix", "scenario", "scale", "seed",
+              "u_clean", "sweep"]
+CHAOS_ROW_KEYS = ["mtbf_h", "u_chaos", "u_raw", "kills", "drains",
+                  "corrupt_restores", "allocator_restarts",
+                  "recovered_cache_entries", "lost_progress_frac",
+                  "events"]
 
 
 def bench_payload(schema: str) -> Dict:
@@ -80,9 +91,17 @@ def validate_bench_payload(payload: Dict) -> List[str]:
         else:
             for i, row in enumerate(rows):
                 need(row, ALLOCATOR_ROW_KEYS, f"allocator.sweep[{i}]")
+    elif schema == CHAOS_SCHEMA:
+        need(payload, CHAOS_KEYS, "chaos")
+        rows = payload.get("sweep", [])
+        if not isinstance(rows, list) or not rows:
+            errors.append("chaos.sweep: expected a non-empty list")
+        else:
+            for i, row in enumerate(rows):
+                need(row, CHAOS_ROW_KEYS, f"chaos.sweep[{i}]")
     else:
-        errors.append(f"unknown schema {schema!r} (expected {WEEK_SCHEMA!r} "
-                      f"or {ALLOCATOR_SCHEMA!r})")
+        errors.append(f"unknown schema {schema!r} (expected {WEEK_SCHEMA!r}, "
+                      f"{ALLOCATOR_SCHEMA!r} or {CHAOS_SCHEMA!r})")
     return errors
 
 

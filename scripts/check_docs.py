@@ -14,7 +14,8 @@ when the API moves (as happened after the PR-3 facade refactor).
 
 The bench-schema pass parses ```json fences whose top-level keys name
 the perf-trajectory artifacts (``BENCH_week.json`` /
-``BENCH_allocator.json``) and requires the documented key lists to
+``BENCH_allocator.json`` / ``BENCH_chaos.json``) and requires the
+documented key lists to
 equal the declared schema constants — so a key cannot be added, renamed
 or dropped without updating docs, schema, and emitters together
 (EXPERIMENTS.md §Scale).
@@ -86,6 +87,8 @@ def check_bench_schema(root: Path) -> list:
         "BENCH_week.json arms.*": schema.WEEK_ARM_KEYS,
         "BENCH_allocator.json": schema.ALLOCATOR_KEYS,
         "BENCH_allocator.json sweep[]": schema.ALLOCATOR_ROW_KEYS,
+        "BENCH_chaos.json": schema.CHAOS_KEYS,
+        "BENCH_chaos.json sweep[]": schema.CHAOS_ROW_KEYS,
     }
     failures = []
     exp = root / "EXPERIMENTS.md"
@@ -109,7 +112,8 @@ def check_bench_schema(root: Path) -> list:
             failures.append(
                 f"{exp}: {name!r} keys {sorted(documented[name])} != "
                 f"benchmarks.schema {sorted(keys)}")
-    for artifact in ("BENCH_week.json", "BENCH_allocator.json"):
+    for artifact in ("BENCH_week.json", "BENCH_allocator.json",
+                     "BENCH_chaos.json"):
         p = root / artifact
         if p.exists():
             failures.extend(schema.validate_bench_file(str(p)))

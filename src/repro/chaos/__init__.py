@@ -1,0 +1,41 @@
+"""Deterministic fault injection and warm-state recovery (DESIGN.md §12).
+
+Everything in this package is *replayable*: a ``ChaosSpec`` seed fully
+determines the fault schedule, so any chaos run can be reproduced
+bit-for-bit — which is what turns fault handling into a testable
+invariant rather than a flaky integration concern.
+
+Layers (each independently usable):
+
+* ``faults``   — ``ChaosSpec`` → ``FaultSchedule`` (kills, drains,
+  straggler episodes, blackouts) + ``inject_faults`` merging the
+  schedule into a ``PoolEvent`` stream with exact node-time accounting.
+* ``backend``  — ``ChaosBackend`` wrapping any ``ExecutionBackend``:
+  straggler rescale-cost multipliers and corrupt-checkpoint restores.
+* ``allocator``— ``RestartingAllocator`` wrapping any allocator factory:
+  scheduled crash/restart with engine warm-state snapshot recovery.
+* ``harness``  — ``run_chaos`` wiring all of the above into one
+  ``ControlLoop`` replay, returning a ``ChaosReport``.
+"""
+from repro.chaos.allocator import RestartingAllocator
+from repro.chaos.backend import ChaosBackend
+from repro.chaos.faults import (
+    ChaosSpec,
+    FaultEvent,
+    FaultSchedule,
+    generate_fault_schedule,
+    inject_faults,
+)
+from repro.chaos.harness import ChaosReport, run_chaos
+
+__all__ = [
+    "ChaosSpec",
+    "FaultEvent",
+    "FaultSchedule",
+    "generate_fault_schedule",
+    "inject_faults",
+    "ChaosBackend",
+    "RestartingAllocator",
+    "ChaosReport",
+    "run_chaos",
+]

@@ -1,0 +1,67 @@
+"""RestartingAllocator: allocator crash/restart with warm-state recovery.
+
+BFTrainer's allocator is a single point of failure on the login/service
+node; DESIGN.md §12 requires that losing it costs re-convergence time,
+not correctness.  ``RestartingAllocator`` wraps an ``AllocationEngine``
+factory and a schedule of crash times (trace clock, read from each
+problem's ``now``): when a crash time passes, the engine object is
+thrown away and rebuilt from the factory — cold, or warm-restored from
+the last periodic ``AllocationEngine.snapshot()`` (JSON-round-tripped,
+exactly as a real deployment would persist it).
+
+A warm restart makes every previously solved problem a cache hit again;
+a cold restart re-converges through the engine's own warm-start repair
+path (the current map survives inside the problems themselves).  Either
+way the decisions stay *deterministic* for deterministic engines — the
+recovery-invariant tests compare restarted vs uninterrupted runs.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+from repro.core.allocator import Allocator
+from repro.core.engine import (
+    AllocationEngine,
+    dumps_snapshot,
+    loads_snapshot,
+)
+from repro.core.milp import AllocationProblem, AllocationResult
+
+
+class RestartingAllocator(Allocator):
+    def __init__(self, factory: Callable[[], AllocationEngine] = None, *,
+                 crash_times: Sequence[float] = (),
+                 snapshot_every: float = 600.0,
+                 warm_restart: bool = True):
+        self.factory = factory or AllocationEngine
+        self.engine = self.factory()
+        self.name = f"restarting({self.engine.name})"
+        self.crash_times = sorted(crash_times)
+        self.snapshot_every = snapshot_every
+        self.warm_restart = warm_restart
+        self._snapshot_text: Optional[str] = None   # last durable snapshot
+        self._last_snapshot_t: Optional[float] = None
+        self.restarts = 0
+        self.recovered_entries = 0
+
+    def allocate(self, prob: AllocationProblem) -> AllocationResult:
+        now = prob.now
+        while self.crash_times and self.crash_times[0] <= now:
+            self.crash_times.pop(0)
+            self._restart()
+        res = self.engine.allocate(prob)
+        if self.snapshot_every > 0 and (
+                self._last_snapshot_t is None
+                or now - self._last_snapshot_t >= self.snapshot_every):
+            # persist warm state the way a deployment would: through the
+            # JSON wire format, so the round trip itself stays exercised
+            self._snapshot_text = dumps_snapshot(self.engine.snapshot())
+            self._last_snapshot_t = now
+        return res
+
+    def _restart(self) -> None:
+        self.restarts += 1
+        self.engine = self.factory()
+        if self.warm_restart and self._snapshot_text is not None:
+            self.recovered_entries += self.engine.restore(
+                loads_snapshot(self._snapshot_text))

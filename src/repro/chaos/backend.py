@@ -1,0 +1,99 @@
+"""ChaosBackend: fault-wrapping for any ExecutionBackend (DESIGN.md §12).
+
+Wraps an inner backend (Analytic or Live) and a ``FaultSchedule``; every
+hook delegates to the inner backend, with two fault behaviors layered on
+top:
+
+* **straggler rescale costs** — during an active straggler episode,
+  ``refresh`` multiplies the job's ``r_up``/``r_dw`` by the episode
+  factor, so the allocator sees (and the loop charges) slowed rescales.
+* **corrupt checkpoint restores** — when a kill is flagged corrupt in
+  the schedule, ``on_fail`` rejects the latest checkpoint and falls back
+  one ``ckpt_every`` interval further (the last *good* checkpoint),
+  mirroring what ``repro.checkpoint.CheckpointManager`` does on a real
+  checksum mismatch.
+
+With an empty schedule every hook is pure delegation, so a chaos-wrapped
+replay is bit-identical to the bare backend — the parity invariant
+``tests/test_chaos.py`` pins down.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.chaos.faults import FaultSchedule
+from repro.core.backend import ExecutionBackend
+from repro.core.loop import TrainerJob
+
+
+class ChaosBackend(ExecutionBackend):
+    """Decorator backend: ``inner`` executes, chaos perturbs."""
+
+    def __init__(self, inner: ExecutionBackend, schedule: FaultSchedule):
+        self.inner = inner
+        self.schedule = schedule
+        self.name = f"chaos({inner.name})"
+        self.corrupt_restores = 0
+        # straggler bookkeeping: the multiplied costs we last wrote per
+        # job, and the clean base they were derived from.  On refresh, if
+        # the job still carries exactly what we wrote, restore the clean
+        # base first — otherwise multipliers would compound across
+        # refreshes on backends whose own refresh is a no-op (Analytic).
+        self._written: Dict[int, Tuple[float, float]] = {}
+        self._clean: Dict[int, Tuple[float, float]] = {}
+
+    # -- pure delegation ------------------------------------------------
+
+    def bind(self, jobs) -> None:
+        self.inner.bind(jobs)
+
+    def apply_allocation(self, job: TrainerJob, old_n: int,
+                         now: float) -> None:
+        self.inner.apply_allocation(job, old_n, now)
+
+    def on_preempt(self, job: TrainerJob, taken: List[int],
+                   now: float) -> None:
+        self.inner.on_preempt(job, taken, now)
+
+    def eta(self, job: TrainerJob, now: float,
+            horizon: float) -> Optional[float]:
+        return self.inner.eta(job, now, horizon)
+
+    def advance(self, job: TrainerJob, start: float, end: float) -> float:
+        return self.inner.advance(job, start, end)
+
+    def on_finish(self, job: TrainerJob, now: float) -> None:
+        self.inner.on_finish(job, now)
+
+    # -- fault behaviors ------------------------------------------------
+
+    def refresh(self, job: TrainerJob, now: float) -> None:
+        if self._written.get(job.id) == (job.r_up, job.r_dw):
+            # our multiplied values are still in place: restore the clean
+            # base before the inner backend refreshes (live backends may
+            # overwrite with fresh measurements, which then win)
+            job.r_up, job.r_dw = self._clean[job.id]
+        self.inner.refresh(job, now)
+        self._clean[job.id] = (job.r_up, job.r_dw)
+        m = self.schedule.straggler_multiplier(now)
+        if m != 1.0:
+            job.r_up *= m
+            job.r_dw *= m
+            self._written[job.id] = (job.r_up, job.r_dw)
+        else:
+            self._written.pop(job.id, None)
+
+    def on_fail(self, job: TrainerJob, failed: List[int],
+                now: float) -> Optional[float]:
+        restored = self.inner.on_fail(job, failed, now)
+        if not any(self.schedule.is_corrupt(now, n) for n in failed):
+            return restored
+        # latest checkpoint unusable: fall back one lattice interval to
+        # the last good one (only meaningful on a finite lattice —
+        # continuous checkpointing has no discrete "previous" snapshot)
+        if math.isfinite(job.ckpt_every) and job.ckpt_every > 0:
+            base = job.last_checkpoint() if restored is None else restored
+            restored = max(0.0, base - job.ckpt_every)
+            self.corrupt_restores += 1
+        return restored

@@ -1,0 +1,264 @@
+"""Seedable fault schedules over idle-pool event streams (DESIGN.md §12).
+
+A ``ChaosSpec`` is a frozen description of the fault environment; feeding
+it plus an event stream to :func:`generate_fault_schedule` yields a
+``FaultSchedule`` that is a pure function of ``(events, spec)`` — same
+seed, same trace ⇒ bit-identical schedule.  :func:`inject_faults` then
+merges the schedule back into the stream, *consuming* each victim's
+original trace departure so pool node-time accounting stays exact: a
+node killed at ``t`` whose fragment would have ended at ``T`` contributes
+``t − start`` node-seconds, never double-counts the departure, and the
+``T − t`` tail is genuinely lost capacity.
+
+Fault kinds
+-----------
+``kill``      hard node failure: the node vanishes mid-interval without
+              drain grace; the holding Trainer rolls back to its last
+              checkpoint and pays ``restart_penalty`` (core/loop.py).
+``drain``     graceful removal: same capacity loss, but handled as an
+              ordinary leave (preemption cost only, no rollback).
+``blackout``  correlated mass kill: a fraction of the live pool fails at
+              one instant (rack/power-domain events).
+``straggler`` a time window during which rescale costs are multiplied —
+              modeling slow nodes dragging collective restarts
+              (``ChaosBackend`` applies the multiplier via ``refresh``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.events import PoolEvent, merge_events
+
+_HOUR = 3600.0
+
+
+@dataclass(frozen=True)
+class ChaosSpec:
+    """Declarative fault environment.  All rates are per trace clock.
+
+    ``mtbf`` is the per-node mean time between failures (seconds): over
+    an interval where ``p`` nodes are live, failures arrive Poisson with
+    rate ``p·dt/mtbf``.  ``None`` disables node failures entirely — the
+    generated schedule is empty and injection is the identity, which is
+    the zero-fault-parity guarantee the tests pin down.
+    """
+
+    seed: int = 0
+    # --- node failures ---
+    mtbf: Optional[float] = None        # per-node MTBF (s); None = no faults
+    drain_frac: float = 0.0             # fraction of failures that drain
+    corrupt_prob: float = 0.0           # P(latest checkpoint unusable | kill)
+    # --- straggler episodes (rescale-cost multipliers) ---
+    straggler_rate: float = 0.0         # episodes per hour
+    straggler_factor: float = 4.0       # r_up/r_dw multiplier while active
+    straggler_duration: float = 900.0   # episode length (s)
+    # --- correlated blackouts ---
+    blackout_every: Optional[float] = None  # period (s); None = never
+    blackout_frac: float = 0.5          # fraction of live pool killed
+    # --- allocator crash/restart ---
+    crash_every: Optional[float] = None  # allocator crash period (s)
+    warm_restart: bool = True           # restore engine snapshot on restart
+    snapshot_every: float = 600.0       # engine snapshot cadence (trace s)
+    # --- trainer-side fault handling (applied to jobs by the harness) ---
+    ckpt_every: Optional[float] = None  # checkpoint lattice (progress units)
+    restart_penalty: float = 0.0        # extra stall per kill (s)
+
+    @property
+    def fault_free(self) -> bool:
+        return (self.mtbf is None and self.straggler_rate <= 0.0
+                and self.blackout_every is None)
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    time: float
+    kind: str                   # "kill" | "drain" | "blackout" | "straggler"
+    node: int = -1              # victim (kill/drain/blackout); -1 otherwise
+    duration: float = 0.0       # straggler episode length
+    factor: float = 1.0         # straggler rescale-cost multiplier
+    corrupt: bool = False       # kill whose latest checkpoint is unusable
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """Time-sorted, immutable fault timeline (+ cheap lookup views)."""
+
+    events: Tuple[FaultEvent, ...] = ()
+
+    def _kind(self, *kinds: str) -> Tuple[FaultEvent, ...]:
+        return tuple(f for f in self.events if f.kind in kinds)
+
+    @property
+    def kills(self) -> Tuple[FaultEvent, ...]:
+        return self._kind("kill", "blackout")
+
+    @property
+    def drains(self) -> Tuple[FaultEvent, ...]:
+        return self._kind("drain")
+
+    @property
+    def stragglers(self) -> Tuple[FaultEvent, ...]:
+        return self._kind("straggler")
+
+    @property
+    def blackouts(self) -> Tuple[FaultEvent, ...]:
+        return self._kind("blackout")
+
+    def is_corrupt(self, time: float, node: int) -> bool:
+        """Was the kill of ``node`` at exactly ``time`` a corrupt-restore
+        kill?  Times compare exactly — both sides come from the same
+        schedule floats, so no tolerance is needed."""
+        return (time, node) in self._corrupt_set()
+
+    def _corrupt_set(self) -> Set[Tuple[float, int]]:
+        cached = getattr(self, "_corrupt_cache", None)
+        if cached is None:
+            cached = {(f.time, f.node) for f in self.events if f.corrupt}
+            object.__setattr__(self, "_corrupt_cache", cached)
+        return cached
+
+    def straggler_multiplier(self, now: float) -> float:
+        """Product of the factors of straggler episodes active at ``now``
+        (overlapping episodes compound — two slow racks are worse than
+        one); 1.0 outside every episode."""
+        m = 1.0
+        for f in self.events:
+            if f.kind != "straggler":
+                continue
+            if f.time > now:
+                break               # events are time-sorted
+            if now < f.time + f.duration:
+                m *= f.factor
+        return m
+
+
+def generate_fault_schedule(events: Sequence[PoolEvent],
+                            spec: ChaosSpec) -> FaultSchedule:
+    """Replay the pool occupancy through ``events`` and draw faults.
+
+    Deterministic: one ``np.random.default_rng(spec.seed)`` stream,
+    consumed in a fixed order (blackouts, kills, stragglers per
+    inter-event interval).  Victims are sampled from the *live* pool —
+    nodes present and not already killed — so a schedule never kills a
+    node twice within one fragment, and a node that rejoins (next
+    fragment) becomes a valid victim again.
+    """
+    rng = np.random.default_rng(spec.seed)
+    evs = merge_events(events)
+    if not evs or spec.fault_free:
+        return FaultSchedule()
+    faults: List[FaultEvent] = []
+    pool: Set[int] = set()
+    killed: Set[int] = set()
+    next_blackout = (evs[0].time + spec.blackout_every
+                     if spec.blackout_every else None)
+    for k, e in enumerate(evs):
+        for n in e.joined:
+            pool.add(n)
+            killed.discard(n)       # rejoined: eligible again
+        for n in e.left:
+            pool.discard(n)
+        for n in e.failed:
+            pool.discard(n)
+        t0 = e.time
+        t1 = evs[k + 1].time if k + 1 < len(evs) else e.time
+        dt = t1 - t0
+        if dt <= 0:
+            continue
+        live = sorted(pool - killed)
+        # correlated blackouts on their fixed grid
+        if next_blackout is not None:
+            while next_blackout < t1:
+                if next_blackout >= t0 and live:
+                    n_vict = min(len(live),
+                                 max(1, int(round(spec.blackout_frac
+                                                  * len(live)))))
+                    idx = rng.choice(len(live), size=n_vict, replace=False)
+                    for i in sorted(int(x) for x in idx):
+                        faults.append(FaultEvent(time=float(next_blackout),
+                                                 kind="blackout",
+                                                 node=live[i]))
+                        killed.add(live[i])
+                    live = sorted(pool - killed)
+                next_blackout += spec.blackout_every
+        # independent per-node failures: Poisson(p·dt/mtbf) over the
+        # interval, uniform times, victims without replacement
+        if spec.mtbf is not None and live:
+            n_fail = min(int(rng.poisson(len(live) * dt / spec.mtbf)),
+                         len(live))
+            if n_fail:
+                ts = np.sort(rng.uniform(t0, t1, size=n_fail))
+                idx = rng.choice(len(live), size=n_fail, replace=False)
+                for t, i in zip(ts, idx):
+                    node = live[int(i)]
+                    if rng.random() < spec.drain_frac:
+                        faults.append(FaultEvent(time=float(t), kind="drain",
+                                                 node=node))
+                    else:
+                        corrupt = bool(rng.random() < spec.corrupt_prob)
+                        faults.append(FaultEvent(time=float(t), kind="kill",
+                                                 node=node, corrupt=corrupt))
+                    killed.add(node)
+        # straggler episodes (global, node-agnostic)
+        if spec.straggler_rate > 0.0:
+            for _ in range(int(rng.poisson(dt / _HOUR * spec.straggler_rate))):
+                faults.append(FaultEvent(
+                    time=float(rng.uniform(t0, t1)), kind="straggler",
+                    duration=spec.straggler_duration,
+                    factor=spec.straggler_factor))
+    faults.sort(key=lambda f: (f.time, f.node, f.kind))
+    return FaultSchedule(tuple(faults))
+
+
+def inject_faults(events: Sequence[PoolEvent],
+                  schedule: FaultSchedule) -> List[PoolEvent]:
+    """Merge a fault schedule into an event stream.
+
+    Each kill/blackout becomes a ``PoolEvent(failed=(node,))`` and each
+    drain a ``PoolEvent(left=(node,))`` at the fault time — and the
+    victim's *next original departure* after the fault is consumed
+    (dropped), because the node already left the pool.  Without that
+    consumption the node would be subtracted twice from the pool size
+    and conservation of node-seconds would break.
+
+    With an empty schedule this returns ``list(events)`` unchanged — the
+    zero-fault-parity fast path.
+    """
+    removals = [f for f in schedule.events
+                if f.kind in ("kill", "drain", "blackout")]
+    if not removals:
+        return list(events)
+    evs = merge_events(events)
+    # per-node time-ordered indices of original departures
+    left_at: Dict[int, List[int]] = {}
+    for i, e in enumerate(evs):
+        for n in e.left:
+            left_at.setdefault(n, []).append(i)
+    consumed: Dict[int, Set[int]] = {}      # event index -> nodes to drop
+    ptr: Dict[int, int] = {}
+    for f in sorted(removals, key=lambda f: f.time):
+        occ = left_at.get(f.node, [])
+        p = ptr.get(f.node, 0)
+        while p < len(occ) and evs[occ[p]].time <= f.time:
+            p += 1
+        if p < len(occ):
+            consumed.setdefault(occ[p], set()).add(f.node)
+            p += 1
+        ptr[f.node] = p
+    out: List[PoolEvent] = []
+    for i, e in enumerate(evs):
+        drop = consumed.get(i)
+        if drop:
+            e = PoolEvent(time=e.time, joined=e.joined,
+                          left=tuple(n for n in e.left if n not in drop),
+                          failed=e.failed)
+        out.append(e)
+    for f in removals:
+        if f.kind == "drain":
+            out.append(PoolEvent(time=f.time, left=(f.node,)))
+        else:
+            out.append(PoolEvent(time=f.time, failed=(f.node,)))
+    return merge_events(out)

@@ -1,0 +1,112 @@
+"""One-call chaos replay: trace + Trainers + ChaosSpec → ChaosReport.
+
+``run_chaos`` wires the whole fault stack together: generate the
+deterministic schedule, inject it into the event stream, wrap the
+backend in ``ChaosBackend``, wrap the allocator in
+``RestartingAllocator``, run the ordinary ``ControlLoop``, and report
+``LoopStats`` plus the fault/recovery bookkeeping the tests and the
+chaos benchmark read.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+from repro.chaos.allocator import RestartingAllocator
+from repro.chaos.backend import ChaosBackend
+from repro.chaos.faults import (
+    ChaosSpec,
+    FaultSchedule,
+    generate_fault_schedule,
+    inject_faults,
+)
+from repro.core.backend import AnalyticBackend, ExecutionBackend
+from repro.core.engine import AllocationEngine
+from repro.core.events import PoolEvent, pool_sizes
+from repro.core.loop import ControlLoop, LoopStats, TrainerJob
+
+
+def pool_node_seconds(events: Sequence[PoolEvent],
+                      horizon: float) -> float:
+    """∫|N(t)|dt over [first event, horizon] — the supply side of the
+    conservation invariant (allocated node-seconds can never exceed it)."""
+    steps = pool_sizes(list(events))
+    if not steps:
+        return 0.0
+    total = 0.0
+    for (t, size), nxt in zip(steps, [t for t, _ in steps[1:]] + [horizon]):
+        if nxt > t:
+            total += size * (min(nxt, horizon) - t)
+        if t >= horizon:
+            break
+    return total
+
+
+@dataclass
+class ChaosReport:
+    stats: LoopStats
+    spec: ChaosSpec
+    schedule: FaultSchedule
+    events: List[PoolEvent]             # the injected stream actually run
+    jobs: List[TrainerJob]              # post-run job state
+    pool_node_seconds: float
+    allocator_restarts: int = 0
+    recovered_cache_entries: int = 0
+    corrupt_restores: int = 0
+
+    @property
+    def n_kills(self) -> int:
+        return len(self.schedule.kills)
+
+    @property
+    def allocated_node_seconds(self) -> float:
+        return sum(j.node_seconds for j in self.jobs)
+
+
+def run_chaos(events: Sequence[PoolEvent], jobs: Sequence[TrainerJob],
+              spec: ChaosSpec, *,
+              backend: Optional[ExecutionBackend] = None,
+              engine_factory: Callable[[], AllocationEngine] = None,
+              t_fwd=120.0, pj_max: int = 10,
+              horizon: Optional[float] = None,
+              coalesce_window: float = 0.0,
+              objective=None) -> ChaosReport:
+    """Replay ``events`` under the fault environment ``spec``.
+
+    ``jobs`` are mutated in place (standard ``ControlLoop`` contract —
+    pass fresh jobs per run): when the spec sets ``ckpt_every`` /
+    ``restart_penalty``, they are stamped onto every job first, so one
+    spec fully describes the fault discipline.
+    """
+    jobs = list(jobs)
+    for j in jobs:
+        if spec.ckpt_every is not None:
+            j.ckpt_every = spec.ckpt_every
+        if spec.restart_penalty:
+            j.restart_penalty = spec.restart_penalty
+    schedule = generate_fault_schedule(events, spec)
+    chaos_events = inject_faults(events, schedule)
+    if horizon is None:
+        horizon = max((e.time for e in chaos_events), default=0.0)
+    crash_times: List[float] = []
+    if spec.crash_every and chaos_events:
+        t = chaos_events[0].time + spec.crash_every
+        while t < horizon:
+            crash_times.append(t)
+            t += spec.crash_every
+    allocator = RestartingAllocator(
+        engine_factory, crash_times=crash_times,
+        snapshot_every=spec.snapshot_every, warm_restart=spec.warm_restart)
+    chaos_backend = ChaosBackend(backend or AnalyticBackend(), schedule)
+    stats = ControlLoop(chaos_events, jobs, allocator, chaos_backend,
+                        t_fwd=t_fwd, pj_max=pj_max, horizon=horizon,
+                        coalesce_window=coalesce_window,
+                        objective=objective).run()
+    return ChaosReport(
+        stats=stats, spec=spec, schedule=schedule,
+        events=chaos_events, jobs=jobs,
+        pool_node_seconds=pool_node_seconds(chaos_events, horizon),
+        allocator_restarts=allocator.restarts,
+        recovered_cache_entries=allocator.recovered_entries,
+        corrupt_restores=chaos_backend.corrupt_restores)

@@ -1,3 +1,15 @@
-from repro.checkpoint.checkpoint import Snapshot, load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    CorruptCheckpointError,
+    Snapshot,
+    load_checkpoint,
+    save_checkpoint,
+)
 
-__all__ = ["Snapshot", "load_checkpoint", "save_checkpoint"]
+__all__ = [
+    "CheckpointManager",
+    "CorruptCheckpointError",
+    "Snapshot",
+    "load_checkpoint",
+    "save_checkpoint",
+]

@@ -5,18 +5,32 @@ Elastic rescale in BFTrainer does NOT round-trip through durable storage
 durable storage") — ``Snapshot`` keeps host copies of params/opt state that
 the new mesh re-shards from.  Durable checkpoints cover Trainer preemption
 to zero nodes and job restarts.
+
+Durable checkpoints are integrity-checked (DESIGN.md §12): ``save``
+stamps the payload's SHA-256 into the sidecar meta, ``load`` verifies it
+and raises ``CorruptCheckpointError`` on mismatch, and
+``CheckpointManager`` keeps the last ``keep`` checkpoints so a corrupt
+latest restore falls back to the newest *good* one — the on-disk
+realization of the checkpoint-lattice rollback the control loop models
+(``TrainerJob.last_checkpoint`` / ``ChaosBackend.on_fail``).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 Pytree = Any
+
+
+class CorruptCheckpointError(RuntimeError):
+    """The checkpoint payload does not match its recorded checksum (or is
+    unreadable) — the restore must fall back to an older checkpoint."""
 
 
 def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
@@ -26,30 +40,126 @@ def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
 def save_checkpoint(path: str, tree: Pytree, meta: Optional[Dict] = None) -> None:
+    """Write ``tree`` as ``<path>.npz``.  When ``meta`` is given, a
+    ``<path>.meta.json`` sidecar is written alongside, with the npz
+    payload's SHA-256 added under ``"sha256"`` so ``load_checkpoint``
+    can verify integrity."""
     base = path[:-4] if path.endswith(".npz") else path
     os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
     flat = _flatten(tree)
     np.savez(base + ".npz", **flat)
     if meta is not None:
+        meta = dict(meta, sha256=_sha256(base + ".npz"))
         with open(base + ".meta.json", "w") as f:
             json.dump(meta, f)
 
 
-def load_checkpoint(path: str, like: Pytree) -> Tuple[Pytree, Optional[Dict]]:
-    """Restore into the structure of ``like`` (a pytree or abstract tree)."""
+def load_checkpoint(path: str, like: Pytree, *,
+                    verify: bool = True) -> Tuple[Pytree, Optional[Dict]]:
+    """Restore into the structure of ``like`` (a pytree or abstract tree).
+
+    When the sidecar meta records a ``sha256`` and ``verify`` is on, the
+    payload is checksummed first; a mismatch (bit rot, torn write) raises
+    ``CorruptCheckpointError`` *before* any array is deserialized.  The
+    digest is a transport detail and is stripped from the returned meta —
+    callers get back exactly what they passed to ``save_checkpoint``."""
     if not path.endswith(".npz"):
         path = path + ".npz"
-    data = np.load(path)
-    leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
-    treedef = jax.tree_util.tree_structure(like)
-    leaves = [data[jax.tree_util.keystr(p)] for p, _ in leaves_paths]
     meta = None
     meta_path = path[: -len(".npz")] + ".meta.json"
     if os.path.exists(meta_path):
         with open(meta_path) as f:
             meta = json.load(f)
+    if meta is not None and "sha256" in meta:
+        recorded = meta.pop("sha256")
+        if verify:
+            digest = _sha256(path)
+            if digest != recorded:
+                raise CorruptCheckpointError(
+                    f"checkpoint {path} fails integrity check: "
+                    f"sha256 {digest} != recorded {recorded}")
+    try:
+        data = np.load(path)
+        leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+        treedef = jax.tree_util.tree_structure(like)
+        leaves = [data[jax.tree_util.keystr(p)] for p, _ in leaves_paths]
+    except CorruptCheckpointError:
+        raise
+    except Exception as exc:
+        raise CorruptCheckpointError(
+            f"checkpoint {path} is unreadable: {exc}") from exc
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+class CheckpointManager:
+    """Rolling directory of integrity-checked checkpoints.
+
+    ``save`` writes ``ckpt_<step>.npz`` (+ checksummed meta) and prunes
+    to the newest ``keep``; ``load_latest_good`` walks checkpoints
+    newest-first and returns the first that passes verification —
+    exactly the last-good fallback a kill with ``corrupt_prob > 0``
+    exercises in the chaos layer.
+    """
+
+    def __init__(self, directory: str, *, keep: int = 2):
+        if keep < 1:
+            raise ValueError("keep must be >= 1")
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _base(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:012d}")
+
+    def steps(self) -> List[int]:
+        """Available checkpoint steps, oldest first."""
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("ckpt_") and name.endswith(".npz"):
+                try:
+                    out.append(int(name[len("ckpt_"):-len(".npz")]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def save(self, tree: Pytree, step: int,
+             meta: Optional[Dict] = None) -> str:
+        base = self._base(step)
+        save_checkpoint(base, tree, meta=dict(meta or {}, step=step))
+        for old in self.steps()[:-self.keep]:
+            for suffix in (".npz", ".meta.json"):
+                try:
+                    os.remove(self._base(old) + suffix)
+                except OSError:
+                    pass
+        return base + ".npz"
+
+    def load_latest_good(self, like: Pytree) -> Tuple[Pytree, Dict, int]:
+        """(tree, meta, step) of the newest checkpoint that verifies.
+
+        Corrupt or unreadable checkpoints are skipped (newest-first);
+        ``CorruptCheckpointError`` is raised only if *no* checkpoint
+        survives."""
+        steps = self.steps()
+        last_exc: Optional[Exception] = None
+        for step in reversed(steps):
+            try:
+                tree, meta = load_checkpoint(self._base(step), like)
+                return tree, (meta or {}), step
+            except CorruptCheckpointError as exc:
+                last_exc = exc
+        raise CorruptCheckpointError(
+            f"no loadable checkpoint in {self.directory} "
+            f"(tried steps {list(reversed(steps))})") from last_exc
 
 
 @dataclass

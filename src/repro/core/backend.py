@@ -50,6 +50,21 @@ class ExecutionBackend:
         """Nodes ``taken`` left the pool mid-run; ``job.nodes`` is already
         the surviving set."""
 
+    def on_fail(self, job: TrainerJob, failed: List[int],
+                now: float) -> Optional[float]:
+        """Nodes ``failed`` were hard-killed mid-run (DESIGN.md §12).
+
+        Returns the progress value to restore ``job.done`` to — the last
+        durable checkpoint on the ``ckpt_every`` lattice by default — or
+        ``None`` to keep progress (continuous checkpointing).  The loop
+        owns the rollback bookkeeping (``lost_progress``, restart-penalty
+        stall); substrates override this to consult real checkpoint
+        state (LiveBackend) or to inject corrupt-restore faults
+        (``repro.chaos.ChaosBackend``)."""
+        if not (math.isfinite(job.ckpt_every) and job.ckpt_every > 0):
+            return None
+        return job.last_checkpoint()
+
     def eta(self, job: TrainerJob, now: float,
             horizon: float) -> Optional[float]:
         """Predicted completion time (absolute trace-clock seconds)
@@ -164,6 +179,26 @@ class LiveBackend(ExecutionBackend):
         # departed nodes are gone now — shrink (or park) immediately, even
         # if the re-allocation itself is coalesced
         self._sync(job)
+
+    def on_fail(self, job: TrainerJob, failed: List[int],
+                now: float) -> Optional[float]:
+        """Hard kill on the live path: roll the managed trainer's step
+        counter back to the last checkpoint-lattice step so execution
+        and policy state agree.  If the managed object exposes a
+        ``restore_to_step(step)`` hook (e.g. backed by a
+        ``repro.checkpoint.CheckpointManager``), it is invoked so model/
+        optimizer state really rewinds; otherwise only the counters do
+        (the toy trainers are stateless enough for replay purposes)."""
+        restored = super().on_fail(job, failed, now)
+        if restored is None:
+            return None
+        m = self.managed[job.id]
+        step = int(restored)
+        hook = getattr(m, "restore_to_step", None)
+        if callable(hook):
+            step = int(hook(step))
+        m.steps_done = min(m.steps_done, step)
+        return float(m.steps_done)
 
     def advance(self, job: TrainerJob, start: float, end: float) -> float:
         m = self.managed[job.id]

@@ -24,6 +24,7 @@ policy applies: keep the current map (``fell_back=True``).
 """
 from __future__ import annotations
 
+import json
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -40,6 +41,33 @@ from repro.core.milp import (
 from repro.core.milp_fast import reconstruct_map, solve_fast_milp
 
 Signature = Tuple
+
+# Versioned schema tag for engine warm-state snapshots (DESIGN.md §12).
+# Bump the suffix on any incompatible change to the payload layout.
+SNAPSHOT_SCHEMA = "bftrainer-engine-snapshot/1"
+
+
+def _tuplify(x):
+    """Recursively convert lists back into tuples (JSON round-trip).
+
+    Signature keys and count vectors are nested tuples of
+    int/float/str/None, all of which survive JSON exactly; only the
+    list-vs-tuple distinction is lost, which this restores."""
+    if isinstance(x, list):
+        return tuple(_tuplify(v) for v in x)
+    return x
+
+
+def dumps_snapshot(snap: Dict) -> str:
+    """Serialize an engine snapshot to JSON text."""
+    return json.dumps(snap)
+
+
+def loads_snapshot(text: str) -> Dict:
+    """Parse JSON text produced by :func:`dumps_snapshot`.  Tuple
+    restoration happens inside ``AllocationEngine.restore``, so the
+    returned dict can be fed to it (or ``from_snapshot``) directly."""
+    return json.loads(text)
 
 
 def problem_signature(prob: AllocationProblem) -> Tuple[Signature, List[int]]:
@@ -92,6 +120,8 @@ class EngineStats:
     node_milp_solves: int = 0
     fallbacks: int = 0
     wall_time: float = 0.0
+    restores: int = 0             # warm-state snapshot restores applied
+    restored_entries: int = 0     # cache entries recovered across restores
 
     def as_dict(self) -> Dict[str, float]:
         return dict(events=self.events, cache_hits=self.cache_hits,
@@ -100,7 +130,9 @@ class EngineStats:
                     greedy_solves=self.greedy_solves,
                     fast_milp_solves=self.fast_milp_solves,
                     node_milp_solves=self.node_milp_solves,
-                    fallbacks=self.fallbacks, wall_time=self.wall_time)
+                    fallbacks=self.fallbacks, wall_time=self.wall_time,
+                    restores=self.restores,
+                    restored_entries=self.restored_entries)
 
 
 # Crude per-instance cost predictors (seconds), calibrated on the CPU
@@ -216,6 +248,66 @@ class AllocationEngine(Allocator):
 
     def clear_cache(self) -> None:
         self._cache.clear()
+
+    # -- warm-state snapshot / recovery (DESIGN.md §12) ----------------
+
+    def snapshot(self) -> Dict:
+        """Serializable warm state of this engine: config + the full
+        memoization cache (canonical signatures → count vectors) + a
+        copy of the running stats for post-mortem inspection.
+
+        The payload is versioned (``schema``) and JSON-round-trippable
+        via :func:`dumps_snapshot` / :func:`loads_snapshot`.  Restoring
+        it into a fresh engine (allocator restart) makes every problem
+        the old engine had solved a cache hit again; problems the
+        snapshot missed re-converge through the incremental warm-start
+        repair path, since the current map survives in the problems
+        themselves."""
+        return {
+            "schema": SNAPSHOT_SCHEMA,
+            "config": {
+                "time_budget": self.time_budget,
+                "use_greedy": self.use_greedy,
+                "use_node_milp": self.use_node_milp,
+                "cache_size": self.cache_size,
+                "incremental": self.incremental,
+                "repair_gap": self.repair_gap,
+                "repair_exact_gap": self.repair_exact_gap,
+            },
+            "cache": [[key, list(val)] for key, val in self._cache.items()],
+            "stats": self.stats.as_dict(),
+        }
+
+    def restore(self, snap: Dict) -> int:
+        """Load a :meth:`snapshot` into this engine (cache only — the
+        stats of a restarted engine start fresh, with ``restores`` /
+        ``restored_entries`` recording the recovery).  Returns the
+        number of cache entries recovered.  Raises ``ValueError`` on an
+        unknown snapshot schema."""
+        if snap.get("schema") != SNAPSHOT_SCHEMA:
+            raise ValueError(
+                f"unknown engine-snapshot schema {snap.get('schema')!r} "
+                f"(expected {SNAPSHOT_SCHEMA!r})")
+        self._cache.clear()
+        for key, val in snap["cache"]:
+            counts, objective, status = val
+            self._cache[_tuplify(key)] = (_tuplify(counts), objective, status)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+        self.stats.restores += 1
+        self.stats.restored_entries += len(self._cache)
+        return len(self._cache)
+
+    @classmethod
+    def from_snapshot(cls, snap: Dict) -> "AllocationEngine":
+        """Build a fresh engine configured and warmed from ``snap``."""
+        if snap.get("schema") != SNAPSHOT_SCHEMA:
+            raise ValueError(
+                f"unknown engine-snapshot schema {snap.get('schema')!r} "
+                f"(expected {SNAPSHOT_SCHEMA!r})")
+        eng = cls(**snap["config"])
+        eng.restore(snap)
+        return eng
 
     # ------------------------------------------------------------------
 

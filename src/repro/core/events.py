@@ -3,6 +3,13 @@
 A *fragment* is a period during which one node is idle; an *event* is a
 time at which the idle pool N changes (nodes join and/or leave; multiple
 simultaneous changes are one event).
+
+Beyond the paper's join/leave kinds, an event may carry *failed* nodes
+(DESIGN.md §12): a hard kill removes the node like a leave but without
+the drain grace — the holding Trainer rolls its progress back to its
+last checkpoint and pays a restart penalty on top of the forced
+scale-down.  ``failed`` tuples are produced by the fault-injection layer
+(``repro.chaos``); trace-derived streams never carry them.
 """
 from __future__ import annotations
 
@@ -28,6 +35,10 @@ class PoolEvent:
     time: float
     joined: Tuple[int, ...] = ()
     left: Tuple[int, ...] = ()
+    # hard node failures (kill, not drain): removed from the pool like
+    # ``left``, but the loop additionally applies restart-penalty /
+    # checkpoint-rollback semantics (DESIGN.md §12)
+    failed: Tuple[int, ...] = ()
 
 
 def fragments_to_events(fragments: Sequence[Fragment]) -> List[PoolEvent]:
@@ -68,20 +79,28 @@ def merge_events(events: Sequence[PoolEvent]) -> List[PoolEvent]:
     time point, preserving sequential-application semantics: events at the
     same instant are applied in their given order, and the *last* action
     on a node wins (a leave followed by a rejoin keeps the node; a join
-    followed by a leave drops it)."""
+    followed by a leave drops it; a fail after any action kills the
+    node).  Within one event joins apply before leaves before fails, so
+    an injected kill always beats the trace's own same-instant action."""
     out: List[PoolEvent] = []
     for e in sorted(events, key=lambda e: e.time):
         if out and out[-1].time == e.time:
-            delta: Dict[int, bool] = {}
+            delta: Dict[int, str] = {}
             for ev in (out[-1], e):
                 for n in ev.joined:
-                    delta[n] = True
+                    delta[n] = "join"
                 for n in ev.left:
-                    delta[n] = False
+                    delta[n] = "leave"
+                for n in ev.failed:
+                    delta[n] = "fail"
             out[-1] = PoolEvent(
                 time=e.time,
-                joined=tuple(sorted(n for n, v in delta.items() if v)),
-                left=tuple(sorted(n for n, v in delta.items() if not v)))
+                joined=tuple(sorted(n for n, v in delta.items()
+                                    if v == "join")),
+                left=tuple(sorted(n for n, v in delta.items()
+                                  if v == "leave")),
+                failed=tuple(sorted(n for n, v in delta.items()
+                                    if v == "fail")))
         else:
             out.append(e)
     return out
@@ -92,7 +111,7 @@ def pool_sizes(events: Sequence[PoolEvent]) -> List[Tuple[float, int]]:
     size = 0
     out = []
     for e in events:
-        size += len(e.joined) - len(e.left)
+        size += len(e.joined) - len(e.left) - len(e.failed)
         out.append((e.time, size))
     return out
 

@@ -17,6 +17,12 @@ Cost semantics (paper §2.1/§3.4), identical for both backends:
   foregone samples O_j(C_j)·R);
 * nodes leaving mid-run force a scale-down at cost ``r_dw`` (preemption);
   the preempted node-time itself is counted as preemption cost;
+* nodes *failing* mid-run (``PoolEvent.failed``, DESIGN.md §12) are a
+  preemption plus a restart: progress rolls back to the last good
+  checkpoint (``ckpt_every`` lattice; the backend's ``on_fail`` picks
+  the restore point) and ``restart_penalty`` extra stall seconds apply;
+* a forced scale-down (preemption or kill) supersedes any in-flight
+  rescale stall — the aborted rescale's residual stall is not served;
 * Trainers are admitted FCFS, at most ``pj_max`` concurrently (§5.3).
 """
 from __future__ import annotations
@@ -61,6 +67,15 @@ class TrainerJob:
     weight: float = 1.0             # admin priority weight (dimensionless)
     deadline: Optional[float] = None  # absolute trace-clock soft deadline (s)
     budget: Optional[float] = None    # node-seconds the job may consume
+    # --- fault model (DESIGN.md §12) ---
+    # checkpoint interval in progress units: a hard node failure rolls
+    # ``done`` back to the last multiple of ``ckpt_every``.  The default
+    # (inf) models continuous checkpointing — a kill loses no progress —
+    # which keeps fault-free replays bit-identical to the pre-chaos loop.
+    ckpt_every: float = math.inf
+    # extra stall seconds charged per hard node failure (restart/restore
+    # wall time), on top of the forced scale-down r_dw
+    restart_penalty: float = 0.0
 
     # --- runtime state ---
     done: float = 0.0
@@ -73,6 +88,9 @@ class TrainerJob:
     preempt_cost_s: float = 0.0
     n_rescales: int = 0
     n_preemptions: int = 0
+    n_failures: int = 0             # hard node failures survived
+    lost_progress: float = 0.0      # progress units rolled back by kills
+    restart_cost_s: float = 0.0     # restart-penalty stall seconds paid
     node_seconds: float = 0.0       # node-seconds consumed so far
     _bp_cache: Optional[tuple] = field(default=None, repr=False)
 
@@ -114,6 +132,14 @@ class TrainerJob:
     def throughput(self) -> float:
         return self.curve(len(self.nodes))
 
+    def last_checkpoint(self) -> float:
+        """Progress at the most recent durable checkpoint: the largest
+        multiple of ``ckpt_every`` not exceeding ``done`` (``done``
+        itself under the default continuous-checkpoint discipline)."""
+        if not (math.isfinite(self.ckpt_every) and self.ckpt_every > 0):
+            return self.done
+        return math.floor(self.done / self.ckpt_every) * self.ckpt_every
+
 
 @dataclass
 class EventRecord:
@@ -141,6 +167,10 @@ class LoopStats:
     solver_wall_total: float
     event_records: List[EventRecord] = field(default_factory=list)
     unfinished: int = 0
+    # fault-model totals (DESIGN.md §12); all zero on fault-free replays
+    n_failures: int = 0
+    lost_progress: float = 0.0
+    restart_cost_s: float = 0.0
 
 
 class ControlLoop:
@@ -236,10 +266,12 @@ class ControlLoop:
             ev = ev_by_time.get(now)
             if ev is not None:
                 if self.t_fwd_estimator is not None:
-                    self.t_fwd_estimator.observe(now, len(ev.left))
+                    self.t_fwd_estimator.observe(now,
+                                                 len(ev.left) + len(ev.failed))
                 for nid in ev.joined:
                     pool.add(nid)
-                lost = set(ev.left)
+                failed = set(ev.failed)
+                lost = set(ev.left) | failed
                 pool -= lost
                 for j in active:
                     taken = [n for n in j.nodes if n in lost]
@@ -247,10 +279,35 @@ class ControlLoop:
                         j.nodes = [n for n in j.nodes if n not in lost]
                         j.n_preemptions += 1
                         j.preempt_cost_s += len(taken) * j.r_dw
+                        penalty = 0.0
+                        dead = [n for n in taken if n in failed]
+                        if dead:
+                            # hard kill: roll progress back to the last
+                            # good checkpoint (the backend picks it — a
+                            # corrupt latest checkpoint restores one
+                            # interval further back) and charge the
+                            # restart penalty (DESIGN.md §12)
+                            j.n_failures += 1
+                            restored = backend.on_fail(j, dead, now)
+                            if restored is not None and restored < j.done:
+                                j.lost_progress += j.done - restored
+                                j.done = restored
+                            penalty = j.restart_penalty
+                            j.restart_cost_s += penalty
                         if j.nodes:
-                            # forced scale-down stall
-                            j.busy_until = max(j.busy_until, now) + j.r_dw
+                            # forced scale-down stall.  It *supersedes*
+                            # any in-flight rescale stall instead of
+                            # stacking on top of it: the interrupted
+                            # rescale is aborted, and serving its
+                            # residual stall after the kill would charge
+                            # R_up twice (the kill-during-rescale
+                            # double-count, tests/test_loop.py)
+                            j.busy_until = now + j.r_dw + penalty
                             j.rescale_cost_s += j.r_dw
+                        elif penalty > 0.0:
+                            # fully killed: the restart penalty is served
+                            # when (before) it next gets nodes
+                            j.busy_until = now + penalty
                         backend.on_preempt(j, taken, now)
                 pending_realloc = True
 
@@ -297,6 +354,7 @@ class ControlLoop:
                     current={j.id: list(j.nodes) for j in active},
                     t_fwd=t_fwd,
                     objective=self.objective,
+                    now=now,
                 )
                 res = self.allocator.allocate(prob)
                 solver_wall += res.wall_time
@@ -385,4 +443,7 @@ class ControlLoop:
             solver_wall_total=solver_wall,
             event_records=records,
             unfinished=len(active) + len(queued),
+            n_failures=sum(j.n_failures for j in all_jobs),
+            lost_progress=sum(j.lost_progress for j in all_jobs),
+            restart_cost_s=sum(j.restart_cost_s for j in all_jobs),
         )

@@ -113,6 +113,11 @@ class AllocationProblem:
     racks: Optional[Dict[int, int]] = None
     # allocation policy (repro.core.objectives); None = Throughput (Eqn 16)
     objective: Optional[object] = None
+    # trace-clock time of the event that produced this problem (seconds).
+    # Ignored by every solver and by the engine's cache signature; read by
+    # time-aware allocator wrappers (repro.chaos.RestartingAllocator's
+    # crash/snapshot schedule).
+    now: float = 0.0
 
 
 def project_current(prob: "AllocationProblem") -> Dict[int, List[int]]:

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.checkpoint import Snapshot
+from repro.checkpoint import CheckpointManager, Snapshot
 from repro.data import DataConfig, TokenPipeline
 from repro.models import Model
 from repro.optim import AdamW, AdamWState, linear_scaling, warmup_cosine
@@ -154,6 +154,41 @@ class ElasticTrainer:
                             loss=loss,
                             samples=batch_np["tokens"].shape[0],
                             step_time_s=dt)
+
+    # ------------------------------------------------------------------
+
+    def save_checkpoint(self, manager: CheckpointManager,
+                        meta: Optional[Dict] = None) -> str:
+        """Write a durable, integrity-checked checkpoint of params +
+        optimizer state at the current step.  Returns the npz path."""
+        tree = {
+            "params": Snapshot.take(self.params).tree,
+            "opt_state": Snapshot.take(self.opt_state).tree,
+        }
+        return manager.save(tree, step=self.step_count, meta=meta)
+
+    def restore_checkpoint(self, manager: CheckpointManager) -> int:
+        """Restore from the newest checkpoint that passes verification.
+
+        A corrupt latest checkpoint silently falls back to the previous
+        good one (``CheckpointManager.load_latest_good``) — the trainer
+        resumes from an older step rather than failing, which is the
+        restore-from-last-good semantics the chaos fault model assumes
+        (``ChaosBackend.on_fail``).  Returns the restored step count;
+        raises ``CorruptCheckpointError`` if no checkpoint survives."""
+        like = {"params": self.params, "opt_state": self.opt_state}
+        tree, meta, step = manager.load_latest_good(like)
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        if self.n_nodes > 0:
+            # re-shard the restored host arrays onto the live mesh
+            repl = NamedSharding(self.mesh, P())
+            self.params = jax.tree.map(
+                lambda x: jax.device_put(x, repl), self.params)
+            self.opt_state = jax.tree.map(
+                lambda x: jax.device_put(x, repl), self.opt_state)
+        self.step_count = int(meta.get("step", step))
+        return self.step_count
 
     # ------------------------------------------------------------------
 

@@ -11,6 +11,7 @@ from repro.sched.backfill import (
     simulate_schedule,
 )
 from repro.sched.scenarios import (
+    CHAOS_SCENARIOS,
     SCENARIOS,
     Scenario,
     all_scenarios,
@@ -29,8 +30,8 @@ from repro.sched.swf import (
 __all__ = [
     "BLOCKED", "LOW_LOAD", "Hole", "JobRecord", "SchedResult", "SchedStats",
     "simulate_schedule",
-    "SCENARIOS", "Scenario", "all_scenarios", "build_scenario",
-    "run_scenario",
+    "CHAOS_SCENARIOS", "SCENARIOS", "Scenario", "all_scenarios",
+    "build_scenario", "run_scenario",
     "BatchJob", "dump_swf", "mean_size", "offered_load", "parse_swf",
     "synthetic_workload",
 ]

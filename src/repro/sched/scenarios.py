@@ -15,8 +15,8 @@ scale-invariant.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Callable, Dict, Iterator, List, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.events import Fragment
 from repro.core.trace import TraceStats, trace_stats
@@ -37,6 +37,10 @@ class Scenario:
     stats: TraceStats               # shared trace statistics
     sched: SchedStats               # batch-scheduler-side statistics
     result: SchedResult             # full simulation (records, holes, ...)
+    # optional fault environment (repro.chaos.ChaosSpec); None for the
+    # fault-free profiles — set only by the CHAOS_SCENARIOS builders so
+    # existing sweeps over SCENARIOS are untouched
+    chaos: Optional[object] = None
 
 
 def _interarrival(load: float, mean_nodes: float, mean_runtime: float,
@@ -203,12 +207,70 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Chaos profiles (DESIGN.md §12): fault-free base trace + a ChaosSpec.
+# Kept in their own registry so sweeps over SCENARIOS stay fault-free.
+# ---------------------------------------------------------------------------
+
+
+def flaky(scale: float = 1.0, seed: int = 0, *,
+          mtbf: float = 4 * _HOUR) -> Scenario:
+    """Capacity profile on flaky hardware: independent per-node hard
+    kills at the given MTBF, occasionally with a corrupt latest
+    checkpoint; the allocator itself crashes twice a day."""
+    from repro.chaos import ChaosSpec
+    sc = capacity(scale=scale, seed=seed)
+    sc.name, sc.description = "flaky", \
+        f"capacity trace + per-node kills (MTBF {mtbf / _HOUR:g}h)"
+    # periods cap at a fraction of the trace so scaled-down (smoke/test)
+    # runs still exercise allocator restarts
+    sc.chaos = ChaosSpec(seed=seed, mtbf=mtbf, drain_frac=0.25,
+                         corrupt_prob=0.1,
+                         crash_every=min(12 * _HOUR, sc.duration / 2.0),
+                         restart_penalty=30.0)
+    return sc
+
+
+def straggler(scale: float = 1.0, seed: int = 0) -> Scenario:
+    """Bursty profile with straggler episodes: every few hours rescale
+    costs inflate 4x for 15 minutes — the MILP's r_up/r_dw terms must
+    push it toward keeping allocations still during episodes."""
+    from repro.chaos import ChaosSpec
+    sc = bursty(scale=scale, seed=seed)
+    sc.name, sc.description = "straggler", \
+        "bursty trace + 4x rescale-cost episodes (~2/12h, 15 min)"
+    sc.chaos = ChaosSpec(seed=seed, straggler_rate=1.0 / 6.0,
+                         straggler_factor=4.0, straggler_duration=900.0)
+    return sc
+
+
+def blackout(scale: float = 1.0, seed: int = 0) -> Scenario:
+    """Capability profile with correlated blackouts: half the live pool
+    hard-fails at once every ~8h (rack/power-domain loss)."""
+    from repro.chaos import ChaosSpec
+    sc = capability(scale=scale, seed=seed)
+    sc.name, sc.description = "blackout", \
+        "capability trace + 50% pool kill every ~8h"
+    sc.chaos = ChaosSpec(seed=seed,
+                         blackout_every=min(8 * _HOUR, sc.duration / 3.0),
+                         blackout_frac=0.5, restart_penalty=60.0)
+    return sc
+
+
+CHAOS_SCENARIOS: Dict[str, Callable[..., Scenario]] = {
+    "flaky": flaky,
+    "straggler": straggler,
+    "blackout": blackout,
+}
+
+
 def build_scenario(name: str, scale: float = 1.0, seed: int = 0) -> Scenario:
     try:
-        builder = SCENARIOS[name]
+        builder = SCENARIOS.get(name) or CHAOS_SCENARIOS[name]
     except KeyError:
-        raise KeyError(f"unknown scenario {name!r}; "
-                       f"available: {sorted(SCENARIOS)}") from None
+        raise KeyError(f"unknown scenario {name!r}; available: "
+                       f"{sorted(SCENARIOS) + sorted(CHAOS_SCENARIOS)}"
+                       ) from None
     return builder(scale=scale, seed=seed)
 
 

@@ -1,0 +1,355 @@
+"""Chaos-hardened control plane (DESIGN.md §12): zero-fault parity,
+fault-injection node-time accounting, warm-state allocator recovery,
+corrupt-checkpoint fallbacks, and straggler cost semantics."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.chaos import (
+    ChaosBackend,
+    ChaosSpec,
+    FaultEvent,
+    FaultSchedule,
+    RestartingAllocator,
+    generate_fault_schedule,
+    inject_faults,
+    run_chaos,
+)
+from repro.chaos.harness import pool_node_seconds
+from repro.core import (
+    AllocationEngine,
+    AnalyticBackend,
+    ControlLoop,
+    TrainerJob,
+    amdahl_curve,
+    fragments_to_events,
+    tab2_curve,
+)
+from repro.core.events import PoolEvent, merge_events
+from repro.core.scaling import TAB2
+from repro.sched.scenarios import CHAOS_SCENARIOS, SCENARIOS, build_scenario
+
+_SWEEP_POLICIES = ["throughput", "weighted", "maxmin", "deadline", "costcap"]
+
+
+def _policy_jobs(policy, n=4):
+    names = list(TAB2)
+    out = []
+    for i in range(n):
+        j = TrainerJob(id=i, curve=tab2_curve(names[i % len(names)]),
+                       work=2e8, n_min=1, n_max=16, r_up=20.0, r_dw=5.0)
+        if policy == "weighted":
+            j.weight = 1.0 + (i % 3)
+        if policy == "deadline":
+            j.deadline = 3600.0 * (4 + i)
+        if policy == "costcap":
+            j.budget = 3.0e5
+        out.append(j)
+    return out
+
+
+def normalized(stats):
+    """LoopStats with every wall-clock field zeroed and the allocator
+    label dropped — the bit-identical comparison surface (solver wall
+    time is physical time, everything else must replay exactly)."""
+    recs = [dataclasses.replace(r, solver_wall=0.0)
+            for r in stats.event_records]
+    return dataclasses.replace(stats, solver_wall_total=0.0,
+                               allocator="", event_records=recs)
+
+
+def _det_engine():
+    return AllocationEngine(time_budget=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Zero-fault parity: the chaos wrappers are exact no-ops without faults
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_zero_fault_chaos_replay_is_bit_identical(scenario):
+    """Acceptance (ISSUE 6): wrapping the backend in ChaosBackend and the
+    allocator in RestartingAllocator with a zero-fault spec replays
+    bit-identically to the plain ControlLoop — on every existing
+    scenario under all five policies."""
+    sc = build_scenario(scenario, scale=0.12)
+    events = fragments_to_events(sc.fragments)
+    empty = generate_fault_schedule(events, ChaosSpec())
+    assert empty.events == ()
+    assert inject_faults(events, empty) == list(events)
+
+    for policy in _SWEEP_POLICIES:
+        plain = ControlLoop(events, _policy_jobs(policy), _det_engine(),
+                            AnalyticBackend(), t_fwd=120.0, pj_max=10,
+                            horizon=sc.duration, objective=policy).run()
+        wrapped = ControlLoop(
+            events, _policy_jobs(policy),
+            RestartingAllocator(_det_engine, snapshot_every=600.0),
+            ChaosBackend(AnalyticBackend(), empty),
+            t_fwd=120.0, pj_max=10, horizon=sc.duration,
+            objective=policy).run()
+        assert normalized(wrapped) == normalized(plain), \
+            f"{scenario}/{policy}: zero-fault chaos replay diverged"
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: deterministic schedules, exact node-time accounting
+# ---------------------------------------------------------------------------
+
+
+def _trace_events(seed=5, n_nodes=12, hours=8.0):
+    from repro.core.trace import generate_summit_like
+    return fragments_to_events(generate_summit_like(
+        n_nodes=n_nodes, duration=hours * 3600.0, seed=seed))
+
+
+def test_fault_schedule_is_a_pure_function_of_seed():
+    events = _trace_events()
+    spec = ChaosSpec(seed=11, mtbf=2 * 3600.0, drain_frac=0.3,
+                     corrupt_prob=0.2, straggler_rate=0.5,
+                     blackout_every=3 * 3600.0)
+    s1 = generate_fault_schedule(events, spec)
+    s2 = generate_fault_schedule(events, spec)
+    assert s1 == s2 and s1.events                       # bit-identical
+    s3 = generate_fault_schedule(
+        events, dataclasses.replace(spec, seed=12))
+    assert s3 != s1                                     # seed matters
+
+
+def test_injection_conserves_node_time_exactly():
+    """Each kill/drain consumes the victim's next trace departure, so the
+    injected stream loses exactly the killed tails — no double-counted
+    departures, pool never negative."""
+    events = _trace_events(seed=9)
+    spec = ChaosSpec(seed=2, mtbf=3600.0, drain_frac=0.25)
+    sched = generate_fault_schedule(events, spec)
+    removals = [f for f in sched.events
+                if f.kind in ("kill", "drain", "blackout")]
+    assert removals, "spec produced no faults; pick a smaller mtbf"
+    injected = inject_faults(events, sched)
+
+    from repro.core.events import pool_sizes
+    sizes = pool_sizes(injected)
+    assert all(n >= 0 for _, n in sizes)
+    assert sizes[-1][1] == 0                 # pool still drains to empty
+
+    horizon = max(e.time for e in events)
+    # expected loss: for each fault, the tail from fault time to the
+    # victim's next scheduled departure in the original stream
+    merged = merge_events(events)
+    tails = 0.0
+    ptr = {}
+    for f in sorted(removals, key=lambda f: f.time):
+        for e in merged:
+            if e.time > f.time and f.node in e.left and \
+                    ptr.get(f.node, -1.0) < e.time:
+                tails += e.time - f.time
+                ptr[f.node] = e.time
+                break
+    assert (pool_node_seconds(events, horizon)
+            - pool_node_seconds(injected, horizon)
+            == pytest.approx(tails))
+
+
+def test_injected_kill_rolls_progress_back_to_lattice():
+    """Single deterministic kill: progress restores to the last multiple
+    of ckpt_every and total node-seconds still conserve."""
+    events = [PoolEvent(time=0.0, joined=(0, 1)),
+              PoolEvent(time=5000.0, left=(0, 1))]
+    sched = FaultSchedule((FaultEvent(time=1000.0, kind="kill", node=1),))
+    injected = inject_faults(events, sched)
+    job = TrainerJob(id=0, curve=amdahl_curve("j", 10.0, 0.2),
+                     work=math.inf, n_min=1, n_max=2, r_up=0.0, r_dw=0.0,
+                     ckpt_every=3000.0)
+    stats = ControlLoop(injected, [job], _det_engine(),
+                        ChaosBackend(AnalyticBackend(), sched),
+                        t_fwd=120.0, horizon=5000.0).run()
+    thr2, thr1 = job.curve(2), job.curve(1)
+    done_at_kill = 1000.0 * thr2
+    lattice = math.floor(done_at_kill / 3000.0) * 3000.0
+    assert stats.n_failures == 1
+    assert stats.lost_progress == pytest.approx(done_at_kill - lattice)
+    assert job.done == pytest.approx(lattice + 4000.0 * thr1)
+
+
+def test_corrupt_restore_falls_back_one_more_interval():
+    """A corrupt latest checkpoint restores one ckpt_every further back
+    (the last *good* checkpoint) and is counted."""
+    events = [PoolEvent(time=0.0, joined=(0, 1)),
+              PoolEvent(time=5000.0, left=(0, 1))]
+    kill = dict(time=2000.0, kind="kill", node=1)
+    job_kw = dict(curve=amdahl_curve("j", 10.0, 0.2), work=math.inf,
+                  n_min=1, n_max=2, r_up=0.0, r_dw=0.0, ckpt_every=1000.0)
+    results = {}
+    for corrupt in (False, True):
+        sched = FaultSchedule((FaultEvent(corrupt=corrupt, **kill),))
+        backend = ChaosBackend(AnalyticBackend(), sched)
+        job = TrainerJob(id=0, **job_kw)
+        stats = ControlLoop(inject_faults(events, sched), [job],
+                            _det_engine(), backend, t_fwd=120.0,
+                            horizon=5000.0).run()
+        results[corrupt] = (stats.lost_progress, backend.corrupt_restores)
+    lost_clean, n_clean = results[False]
+    lost_corrupt, n_corrupt = results[True]
+    assert n_clean == 0 and n_corrupt == 1
+    assert lost_corrupt == pytest.approx(lost_clean + 1000.0)
+
+
+def test_straggler_multiplier_applies_without_compounding():
+    sched = FaultSchedule((FaultEvent(time=100.0, kind="straggler",
+                                      duration=200.0, factor=4.0),))
+    backend = ChaosBackend(AnalyticBackend(), sched)
+    job = TrainerJob(id=0, curve=amdahl_curve("j", 10.0, 0.2),
+                     work=1e9, r_up=20.0, r_dw=5.0)
+    backend.refresh(job, 150.0)
+    assert (job.r_up, job.r_dw) == (80.0, 20.0)
+    backend.refresh(job, 200.0)              # still inside the episode
+    assert (job.r_up, job.r_dw) == (80.0, 20.0)     # no 4x^2 compounding
+    backend.refresh(job, 400.0)              # episode over
+    assert (job.r_up, job.r_dw) == (20.0, 5.0)      # clean base restored
+    # overlapping episodes *do* compound (two slow racks)
+    sched2 = FaultSchedule((
+        FaultEvent(time=0.0, kind="straggler", duration=300.0, factor=2.0),
+        FaultEvent(time=100.0, kind="straggler", duration=300.0, factor=3.0)))
+    assert sched2.straggler_multiplier(150.0) == 6.0
+    assert sched2.straggler_multiplier(350.0) == 3.0
+    assert sched2.straggler_multiplier(700.0) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Allocator crash/restart: warm recovery converges to the same decisions
+# ---------------------------------------------------------------------------
+
+
+def test_restarted_allocator_replays_identically():
+    """Crashing the allocator mid-replay (warm or cold) must not change a
+    single decision for deterministic engines: warm restores make old
+    problems cache hits again, cold re-converges through the repair
+    path — either way the stats are bit-identical to no crash at all."""
+    events = _trace_events(seed=13, n_nodes=10, hours=10.0)
+    horizon = 10 * 3600.0
+    crash_times = [2 * 3600.0, 5 * 3600.0, 8 * 3600.0]
+
+    def run(allocator):
+        jobs = _policy_jobs("throughput")
+        for j in jobs:
+            j.work = math.inf            # keep allocating all trace long
+        return ControlLoop(events, jobs, allocator, AnalyticBackend(),
+                           t_fwd=120.0, pj_max=10, horizon=horizon).run()
+
+    baseline = run(RestartingAllocator(_det_engine))
+    warm_alloc = RestartingAllocator(_det_engine, crash_times=crash_times,
+                                     snapshot_every=600.0, warm_restart=True)
+    warm = run(warm_alloc)
+    cold_alloc = RestartingAllocator(_det_engine, crash_times=crash_times,
+                                     warm_restart=False)
+    cold = run(cold_alloc)
+
+    assert warm_alloc.restarts == len(crash_times)
+    assert cold_alloc.restarts == len(crash_times)
+    assert warm_alloc.recovered_entries > 0
+    assert cold_alloc.recovered_entries == 0
+    assert normalized(warm) == normalized(baseline)
+    assert normalized(cold) == normalized(baseline)
+
+
+# ---------------------------------------------------------------------------
+# Chaos scenarios registry
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_scenario_registry_is_separate_and_complete():
+    assert set(CHAOS_SCENARIOS) == {"flaky", "straggler", "blackout"}
+    assert not (set(CHAOS_SCENARIOS) & set(SCENARIOS))
+    for name in CHAOS_SCENARIOS:
+        sc = build_scenario(name, scale=0.1, seed=4)
+        assert sc.chaos is not None and sc.name == name
+        assert isinstance(sc.chaos, ChaosSpec)
+    # base profiles stay fault-free
+    assert build_scenario("capacity", scale=0.1).chaos is None
+
+
+@pytest.mark.parametrize("name", sorted(CHAOS_SCENARIOS))
+def test_chaos_scenarios_replay_end_to_end(name):
+    sc = build_scenario(name, scale=0.1, seed=2)
+    events = fragments_to_events(sc.fragments)
+    jobs = [TrainerJob(id=i, curve=tab2_curve("ResNet18"), work=math.inf,
+                       n_min=1, n_max=8, r_up=20.0, r_dw=5.0)
+            for i in range(3)]
+    rep = run_chaos(events, jobs, sc.chaos, engine_factory=_det_engine,
+                    horizon=sc.duration)
+    assert rep.stats.total_samples > 0
+    assert rep.allocated_node_seconds <= rep.pool_node_seconds + 1e-6
+    if name in ("flaky", "blackout"):
+        assert rep.n_kills > 0
+
+
+# ---------------------------------------------------------------------------
+# Durable checkpoint integrity (repro.checkpoint)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_manager_falls_back_to_last_good(tmp_path):
+    from repro.checkpoint import CheckpointManager, CorruptCheckpointError
+
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.zeros(3)}
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(tree, step=10)
+    newer = {"w": tree["w"] + 1.0, "b": tree["b"] + 1.0}
+    path = mgr.save(newer, step=20)
+    with open(path, "r+b") as f:              # flip payload bytes
+        f.seek(64)
+        f.write(b"\xde\xad\xbe\xef")
+    got, meta, step = mgr.load_latest_good(tree)
+    assert step == 10 and meta["step"] == 10
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    # corrupt the survivor too: nothing left to restore
+    with open(str(tmp_path / "ckpt_000000000010.npz"), "r+b") as f:
+        f.seek(64)
+        f.write(b"\xde\xad\xbe\xef")
+    with pytest.raises(CorruptCheckpointError):
+        mgr.load_latest_good(tree)
+
+
+def test_checkpoint_manager_prunes_to_keep(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"x": np.ones(3)}
+    for step in (1, 2, 3, 4):
+        mgr.save(tree, step=step)
+    assert mgr.steps() == [3, 4]
+
+
+def test_elastic_trainer_restores_from_last_good(tmp_path):
+    """End-to-end: a corrupt latest checkpoint silently falls back to the
+    previous good one and training resumes from the older step."""
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_arch
+    from repro.elastic import ElasticTrainer
+    from repro.models import build_model
+    from repro.optim import AdamW
+
+    cfg = get_arch("gemma-2b").reduced()
+    tr = ElasticTrainer(build_model(cfg, remat=False), per_node_batch=2,
+                        seed=0, optimizer=AdamW(lr=3e-3), warmup_steps=2)
+    tr.pipeline.cfg.seq_len = 32
+    tr.rescale(1)
+    for _ in range(2):
+        tr.train_step()
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tr.save_checkpoint(mgr)                   # good, step 2
+    tr.train_step()
+    latest = tr.save_checkpoint(mgr)          # step 3, about to corrupt
+    with open(latest, "r+b") as f:
+        f.seek(256)
+        f.write(b"\x00" * 16)
+    tr.train_step()                           # drift past the checkpoint
+    step = tr.restore_checkpoint(mgr)
+    assert step == 2                          # fell back past corrupt 3
+    m = tr.train_step()
+    assert m.step == 3 and np.isfinite(m.loss)

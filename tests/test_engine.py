@@ -479,3 +479,78 @@ def test_coalescing_disabled_by_default_matches_old_behavior():
                    horizon=horizon, coalesce_window=0.0).run()
     assert r1.events_processed == r2.events_processed
     assert r1.total_samples == pytest.approx(r2.total_samples)
+
+
+# ---------------------------------------------------------------------------
+# Warm-state snapshot / restore (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_snapshot_restore_round_trip():
+    """Snapshot -> JSON -> fresh engine: every previously solved problem
+    is a cache hit with the *identical* (bit-for-bit) counts and
+    objective, and unseen problems solve exactly as a never-crashed
+    engine would (deterministic engines, zero time budget)."""
+    from repro.core.engine import dumps_snapshot, loads_snapshot
+
+    eng = AllocationEngine(time_budget=0.0)
+    probs = [random_instance(seed) for seed in range(8)]
+    before = [eng.allocate(p) for p in probs]
+
+    restored = AllocationEngine.from_snapshot(
+        loads_snapshot(dumps_snapshot(eng.snapshot())))
+    assert restored.stats.restores == 1
+    assert restored.stats.restored_entries == len(eng._cache)
+
+    hits0 = restored.stats.cache_hits
+    after = [restored.allocate(p) for p in probs]
+    assert restored.stats.cache_hits - hits0 == len(probs)   # all hits
+    for b, a in zip(before, after):
+        assert a.counts == b.counts                          # exact
+        assert a.objective == b.objective                    # bit-identical
+        assert a.allocation == b.allocation
+
+    # unseen problem: restored engine == pristine engine, 0.0 gap
+    novel = random_instance(99)
+    r_restored = restored.allocate(novel)
+    r_fresh = AllocationEngine(time_budget=0.0).allocate(novel)
+    assert r_restored.counts == r_fresh.counts
+    if r_restored.objective is not None and r_fresh.objective is not None:
+        assert abs(r_restored.objective - r_fresh.objective) <= 1e-12
+
+
+def test_engine_snapshot_config_round_trips():
+    eng = AllocationEngine(time_budget=0.123, use_greedy=False,
+                           use_node_milp=True, cache_size=7,
+                           incremental=False, repair_gap=1e-2,
+                           repair_exact_gap=1e-8)
+    twin = AllocationEngine.from_snapshot(eng.snapshot())
+    for attr in ("time_budget", "use_greedy", "use_node_milp", "cache_size",
+                 "incremental", "repair_gap", "repair_exact_gap"):
+        assert getattr(twin, attr) == getattr(eng, attr)
+
+
+def test_engine_snapshot_rejects_unknown_schema():
+    eng = AllocationEngine()
+    snap = eng.snapshot()
+    snap["schema"] = "bftrainer-engine-snapshot/999"
+    with pytest.raises(ValueError, match="snapshot schema"):
+        eng.restore(snap)
+    with pytest.raises(ValueError, match="snapshot schema"):
+        AllocationEngine.from_snapshot(snap)
+
+
+def test_engine_restore_respects_cache_capacity():
+    """Restoring a big snapshot into a smaller-cache engine keeps only
+    the most recent entries (LRU order survives the round trip)."""
+    big = AllocationEngine(time_budget=0.0, cache_size=64)
+    probs = [random_instance(seed) for seed in range(10)]
+    for p in probs:
+        big.allocate(p)
+    small = AllocationEngine(time_budget=0.0, cache_size=4)
+    recovered = small.restore(big.snapshot())
+    assert recovered == 4 == len(small._cache)
+    # the survivors are the most recently used ones
+    hits0 = small.stats.cache_hits
+    small.allocate(probs[-1])
+    assert small.stats.cache_hits == hits0 + 1

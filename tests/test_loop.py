@@ -248,3 +248,57 @@ def test_control_loop_direct_use_matches_simulator_facade():
     assert rep.total_samples == pytest.approx(stats.total_samples)
     assert rep.events_processed == stats.events_processed
     assert rep.rescale_cost_s == pytest.approx(stats.rescale_cost_s)
+
+
+def test_kill_during_rescale_supersedes_stall():
+    """Regression (DESIGN.md §12): a node failure landing while a Trainer
+    is mid-rescale must *replace* the in-flight stall with the forced
+    scale-down stall, not stack on top of it.  The old accounting kept
+    the unserved R_up residual and charged R_dw after it — double-counting
+    R_up for a rescale that was aborted by the kill."""
+    from repro.core.events import PoolEvent
+
+    events = [PoolEvent(time=0.0, joined=(0, 1)),
+              PoolEvent(time=5.0, failed=(1,))]
+    job = TrainerJob(id=0, curve=amdahl_curve("j", 100.0, 0.2),
+                     work=math.inf, n_min=1, n_max=2, r_up=20.0, r_dw=5.0)
+    stats = ControlLoop(events, [job], AllocationEngine(time_budget=0.0),
+                        AnalyticBackend(), t_fwd=120.0, horizon=100.0).run()
+
+    # t=0: 0->2 nodes, stalled until t=20.  t=5: node 1 killed; the
+    # forced scale-down stall supersedes -> busy until 5 + r_dw = 10,
+    # then 90 s of single-node progress.  The stacking bug would resume
+    # at max(20, 5) + 5 = 25 (only 75 s of progress).
+    assert job.busy_until == pytest.approx(10.0)
+    assert stats.total_samples == pytest.approx(90.0 * job.curve(1))
+    assert stats.n_failures == 1
+    assert job.preempt_cost_s == pytest.approx(5.0)       # 1 node * r_dw
+    assert job.rescale_cost_s == pytest.approx(25.0)      # r_up + forced r_dw
+    # continuous checkpointing (default): a kill loses no progress
+    assert stats.lost_progress == 0.0 and stats.restart_cost_s == 0.0
+
+
+def test_kill_charges_restart_penalty_and_rolls_back_to_checkpoint():
+    """Hard-kill semantics on the analytic path: progress rolls back to
+    the ckpt_every lattice and the restart penalty extends the forced
+    scale-down stall."""
+    from repro.core.events import PoolEvent
+
+    thr2 = amdahl_curve("j", 100.0, 0.2)(2)
+    events = [PoolEvent(time=0.0, joined=(0, 1)),
+              PoolEvent(time=1000.0, failed=(1,))]
+    job = TrainerJob(id=0, curve=amdahl_curve("j", 100.0, 0.2),
+                     work=math.inf, n_min=1, n_max=2, r_up=20.0, r_dw=5.0,
+                     ckpt_every=1000.0, restart_penalty=30.0)
+    stats = ControlLoop(events, [job], AllocationEngine(time_budget=0.0),
+                        AnalyticBackend(), t_fwd=120.0, horizon=2000.0).run()
+
+    done_at_kill = (1000.0 - 20.0) * thr2      # post-stall two-node progress
+    lost = done_at_kill - math.floor(done_at_kill / 1000.0) * 1000.0
+    assert stats.n_failures == 1
+    assert stats.lost_progress == pytest.approx(lost)
+    assert stats.restart_cost_s == pytest.approx(30.0)
+    # stall = kill + r_dw + penalty, then single-node to the horizon
+    resume = 1000.0 + 5.0 + 30.0
+    expect = done_at_kill - lost + (2000.0 - resume) * job.curve(1)
+    assert job.done == pytest.approx(expect)

@@ -315,3 +315,63 @@ def test_fast_milp_invariants(prob):
         keep_obj = sum(prob.t_fwd * t.value_at(keep[t.id])
                        for t in prob.trainers)
         assert r.objective >= max(keep_obj, zero_obj) - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Chaos recovery invariants (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+@given(fragment_lists, st.integers(0, 1000), st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_chaos_recovery_invariants(raw, chaos_seed, corrupt):
+    """Under seeded fault injection (kills, drains, corrupt restores):
+    conservation still holds — Trainers never hold more nodes than the
+    (fault-reduced) pool, allocated node-seconds <= pool node-seconds —
+    and recovery is bounded: progress stays within [0, work] and every
+    kill loses at most one checkpoint interval (two when the latest
+    checkpoint restores corrupt), i.e. never more than the lattice
+    guarantees."""
+    from repro.chaos import ChaosSpec, generate_fault_schedule, run_chaos
+    from repro.core import TrainerJob, amdahl_curve
+
+    frags, per_node_t = [], {}
+    for node, start, dur in raw:
+        t0 = max(start, per_node_t.get(node, 0.0) + 1e-3)
+        frags.append(Fragment(node=node, start=t0, end=t0 + dur))
+        per_node_t[node] = t0 + dur
+    events = fragments_to_events(frags)
+    ckpt = 200.0
+    jobs = [TrainerJob(id=i, curve=amdahl_curve(f"j{i}", 50.0, 0.3),
+                       work=1e6, n_min=1, n_max=4)
+            for i in range(2)]
+    spec = ChaosSpec(seed=chaos_seed, mtbf=1500.0, drain_frac=0.25,
+                     corrupt_prob=0.5 if corrupt else 0.0,
+                     ckpt_every=ckpt, restart_penalty=10.0)
+    rep = run_chaos(events, jobs, spec,
+                    horizon=max(f.end for f in frags))
+    stats = rep.stats
+
+    # fault schedules are pure functions of (events, spec)
+    assert generate_fault_schedule(events, spec) == rep.schedule
+    # the injected stream never drives the pool negative (each victim's
+    # original departure was consumed by the injection)
+    assert all(n >= 0 for _, n in pool_sizes(rep.events))
+
+    recs = stats.event_records
+    assert all(r.allocated <= r.pool_size for r in recs)
+    t_close = max(r.time for r in recs) if recs else 0.0
+    alloc_ns = pool_ns = 0.0
+    for a, b in zip(recs, recs[1:] + [None]):
+        dt = (b.time if b is not None else t_close) - a.time
+        alloc_ns += a.allocated * dt
+        pool_ns += a.pool_size * dt
+    assert alloc_ns <= pool_ns + 1e-9
+
+    # recovery bounds: progress never negative, never beyond work, and
+    # rollback loss bounded by the checkpoint lattice
+    assert all(0.0 <= j.done <= j.work for j in jobs)
+    assert stats.lost_progress >= 0.0
+    per_kill_bound = (2.0 if corrupt else 1.0) * ckpt
+    assert stats.lost_progress <= stats.n_failures * per_kill_bound + 1e-9
+    assert stats.restart_cost_s == pytest.approx(10.0 * stats.n_failures)
