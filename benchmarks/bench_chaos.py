@@ -23,6 +23,8 @@ import dataclasses
 import os
 from typing import Sequence
 
+import numpy as np
+
 from benchmarks.common import FULL, diverse_jobs, emit, maybe_write_json
 from benchmarks.schema import CHAOS_SCHEMA, bench_payload
 from repro.chaos import run_chaos
@@ -40,6 +42,15 @@ MTBF_HOURS = (1.0, 2.0, 4.0, 8.0)
 #: checkpoint lattice used for the sweep — coarse enough that rollbacks
 #: cost real progress, fine enough that a kill never erases a whole run
 CKPT_EVERY = 5e6
+
+
+def _decision_ms(stats):
+    """(p50, p95, p99) decision latency in ms from the replay's records."""
+    walls = np.array([r.solver_wall for r in stats.event_records
+                      if r.solver_wall > 0.0]) * 1e3
+    if not len(walls):
+        return 0.0, 0.0, 0.0
+    return tuple(float(np.percentile(walls, q)) for q in (50, 95, 99))
 
 
 def _static_baseline(events, jobs_fn, horizon: float) -> float:
@@ -75,6 +86,7 @@ def run_sweep(scale: float, seed: int = 7, scenario: str = "flaky") -> None:
         u_chaos = samples / a_s_chaos if a_s_chaos > 0 else 0.0
         u_raw = samples / a_s if a_s > 0 else 0.0
         lost_frac = rep.stats.lost_progress / samples if samples > 0 else 0.0
+        p50, p95, p99 = _decision_ms(rep.stats)
         row = {
             "mtbf_h": mtbf_h,
             "u_chaos": u_chaos,
@@ -86,6 +98,9 @@ def run_sweep(scale: float, seed: int = 7, scenario: str = "flaky") -> None:
             "recovered_cache_entries": rep.recovered_cache_entries,
             "lost_progress_frac": lost_frac,
             "events": rep.stats.events_processed,
+            "decision_ms_p50": p50,
+            "decision_ms_p95": p95,
+            "decision_ms_p99": p99,
         }
         payload["sweep"].append(row)
         tag = f"chaos/{scenario}/mtbf_{mtbf_h:g}h"

@@ -35,8 +35,12 @@ from repro.core import (
     Simulator,
     Throughput,
     WeightedPriority,
+    deadline_miss_rate,
     eq_nodes,
     fragments_to_events,
+    jain_fairness,
+    min_normalized_progress,
+    normalized_progress,
     static_outcome,
 )
 from repro.core.loop import TrainerJob
@@ -83,14 +87,6 @@ def _policies():
     )
 
 
-def jain(xs: Sequence[float]) -> float:
-    """Jain fairness index (Σx)² / (n·Σx²); 1.0 when perfectly even."""
-    xs = [max(x, 0.0) for x in xs]
-    if not xs or sum(xs) == 0:
-        return 0.0
-    return sum(xs) ** 2 / (len(xs) * sum(x * x for x in xs))
-
-
 def run_scenario_sweep(name: str, scale: float, seed: int = 7,
                        t_fwd: float = 120.0) -> None:
     sc = build_scenario(name, scale=scale, seed=seed)
@@ -113,16 +109,14 @@ def run_scenario_sweep(name: str, scale: float, seed: int = 7,
         rep = Simulator(events, jobs, eng, t_fwd=t_fwd,
                         horizon=sc.duration, objective=mk()).run()
         u = rep.total_samples / a_s if a_s > 0 else 0.0
-        xs = [min(j.done / j.work, 1.0) for j in jobs]
-        missed = [j for j in jobs
-                  if j.deadline is not None and j.deadline <= sc.duration
-                  and (j.finished_at is None or j.finished_at > j.deadline)]
+        xs = normalized_progress(jobs)
         pre = f"objectives/{name}/{pol_name}"
         emit(f"{pre}/efficiency_u", f"{u:.3f}", "vs dedicated eq-nodes")
-        emit(f"{pre}/jain_fairness", f"{jain(xs):.3f}")
-        emit(f"{pre}/min_norm_progress", f"{min(xs):.3f}")
+        emit(f"{pre}/jain_fairness", f"{jain_fairness(xs):.3f}")
+        emit(f"{pre}/min_norm_progress",
+             f"{min_normalized_progress(jobs):.3f}")
         emit(f"{pre}/deadline_miss_rate",
-             f"{len(missed) / max(len(jobs), 1):.2f}")
+             f"{deadline_miss_rate(jobs, sc.duration):.2f}")
         emit(f"{pre}/solver_wall_s", f"{rep.solver_wall_total:.3f}")
         s = eng.stats
         emit(f"{pre}/cache_hit_rate",

@@ -21,7 +21,7 @@ reported alongside the speedup.
 ``--smoke`` runs the two small tiers only (CI); the full sweep includes
 the 4,096 × 64 tier.  With ``--json`` / ``benchmarks.run --json`` the
 sweep persists ``BENCH_allocator.json`` (schema
-``bftrainer-bench-allocator/1``).
+``bftrainer-bench-allocator/2``).
 """
 from __future__ import annotations
 
@@ -140,8 +140,10 @@ def main() -> None:
             nodes=n_nodes, jobs=n_jobs, policy="throughput",
             events=n_events,
             baseline_per_event_ms_p50=float(np.percentile(base["walls"], 50)),
+            baseline_per_event_ms_p95=float(np.percentile(base["walls"], 95)),
             baseline_per_event_ms_p99=float(np.percentile(base["walls"], 99)),
             engine_per_event_ms_p50=float(np.percentile(eng["walls"], 50)),
+            engine_per_event_ms_p95=float(np.percentile(eng["walls"], 95)),
             engine_per_event_ms_p99=float(np.percentile(eng["walls"], 99)),
             speedup_p50=float(np.percentile(base["walls"], 50)
                               / max(np.percentile(eng["walls"], 50), 1e-6)),

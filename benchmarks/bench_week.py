@@ -10,7 +10,7 @@ Three arms replay the same trace in one run:
 * ``heuristic`` — the equal-share comparison scheme (paper §5.1).
 
 With ``--json`` / ``benchmarks.run --json`` the run persists
-``BENCH_week.json`` (schema ``bftrainer-bench-week/1``) carrying both
+``BENCH_week.json`` (schema ``bftrainer-bench-week/2``) carrying both
 the baseline and engine walls measured in the same process — the
 CI-tracked end-to-end speedup (EXPERIMENTS.md §Scale).
 """
@@ -31,14 +31,16 @@ from benchmarks.common import (
 )
 from benchmarks.schema import WEEK_SCHEMA, bench_payload
 from repro.core import AllocationEngine, EqualShareAllocator, MILPAllocator
+from repro.obs import Telemetry
 
 
 def _solver_wall_ms(rep):
+    """(p50, p95, p99) decision latency in ms over the replay's events."""
     walls = np.array([r.solver_wall for r in rep.event_records
                       if r.solver_wall > 0.0]) * 1e3
     if not len(walls):
-        return 0.0, 0.0
-    return float(np.percentile(walls, 50)), float(np.percentile(walls, 99))
+        return 0.0, 0.0, 0.0
+    return tuple(float(np.percentile(walls, q)) for q in (50, 95, 99))
 
 
 def main() -> None:
@@ -48,7 +50,9 @@ def main() -> None:
     ev = trace(n_nodes=n_nodes, hours=hours, seed=seed)
     horizon = hours * 3600.0
 
-    engine = AllocationEngine()
+    # the engine arm carries a live hub so the payload can break decision
+    # latency down per solver arm (cache/repair/greedy/milp/fallback)
+    engine = AllocationEngine(telemetry=Telemetry())
     arms = (("engine", engine),
             ("milp", MILPAllocator("fast")),
             ("heuristic", EqualShareAllocator()))
@@ -97,14 +101,22 @@ def main() -> None:
     payload["arms"] = {}
     for name, alloc in arms:
         rep, u, wall = results[name]
-        p50, p99 = _solver_wall_ms(rep)
+        p50, p95, p99 = _solver_wall_ms(rep)
         payload["arms"][name] = dict(
             allocator=alloc.name, wall_s=wall,
             solver_wall_s=rep.solver_wall_total,
-            solver_wall_p50_ms=p50, solver_wall_p99_ms=p99,
+            solver_wall_p50_ms=p50, solver_wall_p95_ms=p95,
+            solver_wall_p99_ms=p99,
             efficiency_u=u, samples=rep.total_samples,
             events_processed=rep.events_processed)
     payload["arms"]["engine"]["engine_stats"] = engine.stats.as_dict()
+    # per-arm decision-latency split from the engine's own telemetry hub
+    # (cache/repair/greedy/fallback/milp), when the caller enabled one
+    if engine.telemetry:
+        payload["arms"]["engine"]["decision_ms_by_arm"] = {
+            k.split(".")[-1]: v
+            for k, v in engine.telemetry.hist_summary().items()
+            if k.startswith("engine.decision_ms.")}
     payload["speedup_end_to_end"] = speedup
     payload["speedup_solver_wall"] = solver_speedup
     maybe_write_json("BENCH_week.json", payload)

@@ -15,9 +15,9 @@ import json
 import time
 from typing import Dict, List
 
-WEEK_SCHEMA = "bftrainer-bench-week/1"
-ALLOCATOR_SCHEMA = "bftrainer-bench-allocator/1"
-CHAOS_SCHEMA = "bftrainer-bench-chaos/1"
+WEEK_SCHEMA = "bftrainer-bench-week/2"
+ALLOCATOR_SCHEMA = "bftrainer-bench-allocator/2"
+CHAOS_SCHEMA = "bftrainer-bench-chaos/2"
 
 #: BENCH_week.json — one week-trace replay, engine vs the PR-4 baseline
 #: (per-event aggregate MILP), both measured in the same run.
@@ -25,7 +25,8 @@ WEEK_KEYS = ["schema", "generated_unix", "trace", "arms",
              "speedup_end_to_end", "speedup_solver_wall"]
 WEEK_TRACE_KEYS = ["n_nodes", "hours", "seed", "n_events"]
 WEEK_ARM_KEYS = ["allocator", "wall_s", "solver_wall_s",
-                 "solver_wall_p50_ms", "solver_wall_p99_ms",
+                 "solver_wall_p50_ms", "solver_wall_p95_ms",
+                 "solver_wall_p99_ms",
                  "efficiency_u", "samples", "events_processed"]
 
 #: BENCH_allocator.json — the nodes × jobs scale sweep: per-event solve
@@ -34,8 +35,10 @@ WEEK_ARM_KEYS = ["allocator", "wall_s", "solver_wall_s",
 ALLOCATOR_KEYS = ["schema", "generated_unix", "sweep"]
 ALLOCATOR_ROW_KEYS = ["nodes", "jobs", "policy", "events",
                       "baseline_per_event_ms_p50",
+                      "baseline_per_event_ms_p95",
                       "baseline_per_event_ms_p99",
-                      "engine_per_event_ms_p50", "engine_per_event_ms_p99",
+                      "engine_per_event_ms_p50", "engine_per_event_ms_p95",
+                      "engine_per_event_ms_p99",
                       "speedup_p50", "cache_hit_rate", "repair_rate",
                       "parity_max_rel_gap"]
 
@@ -47,7 +50,8 @@ CHAOS_KEYS = ["schema", "generated_unix", "scenario", "scale", "seed",
 CHAOS_ROW_KEYS = ["mtbf_h", "u_chaos", "u_raw", "kills", "drains",
                   "corrupt_restores", "allocator_restarts",
                   "recovered_cache_entries", "lost_progress_frac",
-                  "events"]
+                  "events", "decision_ms_p50", "decision_ms_p95",
+                  "decision_ms_p99"]
 
 
 def bench_payload(schema: str) -> Dict:

@@ -1,8 +1,9 @@
 #!/usr/bin/env python
 """Docs-consistency check: every ``repro`` import shown in a Markdown
-python code fence must actually work against ``src/``, and the bench
+python code fence must actually work against ``src/``, the bench
 JSON schema documented in EXPERIMENTS.md must match
-``benchmarks/schema.py`` (and any BENCH_*.json present on disk).
+``benchmarks/schema.py`` (and any BENCH_*.json present on disk), and
+the documented trace-JSONL schema must match ``repro.obs.spans``.
 
 Scans the given Markdown files (default: README.md DESIGN.md
 EXPERIMENTS.md), extracts fenced ```python blocks, parses each with
@@ -120,6 +121,42 @@ def check_bench_schema(root: Path) -> list:
     return failures
 
 
+def check_trace_schema(root: Path) -> list:
+    """EXPERIMENTS.md §Telemetry's documented trace-JSONL schema must
+    equal ``repro.obs.spans``'s declared constants (tag + key set)."""
+    try:
+        from repro.obs import spans
+    except Exception as exc:
+        return [f"repro.obs.spans unimportable: {exc!r}"]
+    exp = root / "EXPERIMENTS.md"
+    text = exp.read_text(encoding="utf-8")
+    documented_tag = None
+    documented_keys = None
+    for m in JSON_FENCE.finditer(text):
+        try:
+            obj = json.loads(m.group(1))
+        except json.JSONDecodeError:
+            continue
+        if isinstance(obj, dict) and "trace.jsonl" in obj:
+            documented_tag = obj.get("trace.jsonl")
+            documented_keys = obj.get("trace.jsonl events[]")
+    failures = []
+    if documented_tag is None:
+        failures.append(
+            f"{exp}: trace schema not documented "
+            f"(EXPERIMENTS.md §Telemetry json fence)")
+        return failures
+    if documented_tag != spans.TRACE_SCHEMA:
+        failures.append(
+            f"{exp}: documented trace schema {documented_tag!r} != "
+            f"repro.obs.spans.TRACE_SCHEMA {spans.TRACE_SCHEMA!r}")
+    if documented_keys != spans.TRACE_EVENT_KEYS:
+        failures.append(
+            f"{exp}: documented trace event keys {documented_keys} != "
+            f"repro.obs.spans.TRACE_EVENT_KEYS {spans.TRACE_EVENT_KEYS}")
+    return failures
+
+
 def main(argv) -> int:
     root = Path(__file__).resolve().parent.parent
     files = ([Path(a) for a in argv] if argv else
@@ -132,6 +169,7 @@ def main(argv) -> int:
         checked += 1
         failures.extend(check_file(f))
     failures.extend(check_bench_schema(root))
+    failures.extend(check_trace_schema(root))
     if failures:
         print(f"docs-consistency: {len(failures)} failure(s):")
         for fail in failures:

@@ -26,15 +26,18 @@ from repro.core.engine import (
     loads_snapshot,
 )
 from repro.core.milp import AllocationProblem, AllocationResult
+from repro.obs.telemetry import NULL_TELEMETRY
 
 
 class RestartingAllocator(Allocator):
     def __init__(self, factory: Callable[[], AllocationEngine] = None, *,
                  crash_times: Sequence[float] = (),
                  snapshot_every: float = 600.0,
-                 warm_restart: bool = True):
+                 warm_restart: bool = True,
+                 telemetry=None):
         self.factory = factory or AllocationEngine
-        self.engine = self.factory()
+        self.telemetry = telemetry or NULL_TELEMETRY
+        self.engine = self._build_engine()
         self.name = f"restarting({self.engine.name})"
         self.crash_times = sorted(crash_times)
         self.snapshot_every = snapshot_every
@@ -44,24 +47,48 @@ class RestartingAllocator(Allocator):
         self.restarts = 0
         self.recovered_entries = 0
 
+    def _build_engine(self) -> AllocationEngine:
+        engine = self.factory()
+        # share the hub so decision-latency histograms survive restarts
+        # (factory engines default to the null hub; a factory that wires
+        # its own telemetry wins)
+        if self.telemetry and getattr(engine, "telemetry", None) in (
+                None, NULL_TELEMETRY):
+            engine.telemetry = self.telemetry
+        return engine
+
     def allocate(self, prob: AllocationProblem) -> AllocationResult:
         now = prob.now
         while self.crash_times and self.crash_times[0] <= now:
             self.crash_times.pop(0)
-            self._restart()
+            self._restart(now)
         res = self.engine.allocate(prob)
         if self.snapshot_every > 0 and (
                 self._last_snapshot_t is None
                 or now - self._last_snapshot_t >= self.snapshot_every):
             # persist warm state the way a deployment would: through the
             # JSON wire format, so the round trip itself stays exercised
-            self._snapshot_text = dumps_snapshot(self.engine.snapshot())
+            snap = self.engine.snapshot()
+            self._snapshot_text = dumps_snapshot(snap)
             self._last_snapshot_t = now
+            tel = self.telemetry
+            if tel:
+                tel.count("allocator.snapshots")
+                tel.instant("allocator", "snapshot", now,
+                            entries=len(snap.get("cache", ())))
         return res
 
-    def _restart(self) -> None:
+    def _restart(self, now: float = 0.0) -> None:
         self.restarts += 1
-        self.engine = self.factory()
-        if self.warm_restart and self._snapshot_text is not None:
-            self.recovered_entries += self.engine.restore(
+        self.engine = self._build_engine()
+        recovered = 0
+        warm = self.warm_restart and self._snapshot_text is not None
+        if warm:
+            recovered = self.engine.restore(
                 loads_snapshot(self._snapshot_text))
+            self.recovered_entries += recovered
+        tel = self.telemetry
+        if tel:
+            tel.count("allocator.restarts")
+            tel.instant("allocator", "restart", now, warm=warm,
+                        recovered=recovered)

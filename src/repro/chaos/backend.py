@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.chaos.faults import FaultSchedule
 from repro.core.backend import ExecutionBackend
 from repro.core.loop import TrainerJob
+from repro.obs.telemetry import NULL_TELEMETRY
 
 
 class ChaosBackend(ExecutionBackend):
@@ -42,10 +43,18 @@ class ChaosBackend(ExecutionBackend):
         # refreshes on backends whose own refresh is a no-op (Analytic).
         self._written: Dict[int, Tuple[float, float]] = {}
         self._clean: Dict[int, Tuple[float, float]] = {}
+        # last straggler multiplier observed, so episode edges emit one
+        # instant each instead of one per refresh
+        self._last_mult = 1.0
 
     # -- pure delegation ------------------------------------------------
 
     def bind(self, jobs) -> None:
+        # the loop hands *this* wrapper its telemetry hub; share it with
+        # the inner substrate so live rescale spans land in the same trace
+        if self.telemetry and getattr(self.inner, "telemetry", None) in (
+                None, NULL_TELEMETRY):
+            self.inner.telemetry = self.telemetry
         self.inner.bind(jobs)
 
     def apply_allocation(self, job: TrainerJob, old_n: int,
@@ -77,6 +86,13 @@ class ChaosBackend(ExecutionBackend):
         self.inner.refresh(job, now)
         self._clean[job.id] = (job.r_up, job.r_dw)
         m = self.schedule.straggler_multiplier(now)
+        if m != self._last_mult:
+            tel = self.telemetry
+            if tel:
+                tel.instant("chaos", "straggler", now,
+                            old=self._last_mult, new=m)
+                tel.sample("chaos.straggler_mult", now, m)
+            self._last_mult = m
         if m != 1.0:
             job.r_up *= m
             job.r_dw *= m
@@ -96,4 +112,9 @@ class ChaosBackend(ExecutionBackend):
             base = job.last_checkpoint() if restored is None else restored
             restored = max(0.0, base - job.ckpt_every)
             self.corrupt_restores += 1
+            tel = self.telemetry
+            if tel:
+                tel.count("chaos.corrupt_restores")
+                tel.instant("chaos", "corrupt-restore", now, job=job.id,
+                            rejected=base, restored=restored)
         return restored

@@ -71,7 +71,7 @@ def run_chaos(events: Sequence[PoolEvent], jobs: Sequence[TrainerJob],
               t_fwd=120.0, pj_max: int = 10,
               horizon: Optional[float] = None,
               coalesce_window: float = 0.0,
-              objective=None) -> ChaosReport:
+              objective=None, telemetry=None) -> ChaosReport:
     """Replay ``events`` under the fault environment ``spec``.
 
     ``jobs`` are mutated in place (standard ``ControlLoop`` contract —
@@ -97,12 +97,28 @@ def run_chaos(events: Sequence[PoolEvent], jobs: Sequence[TrainerJob],
             t += spec.crash_every
     allocator = RestartingAllocator(
         engine_factory, crash_times=crash_times,
-        snapshot_every=spec.snapshot_every, warm_restart=spec.warm_restart)
+        snapshot_every=spec.snapshot_every, warm_restart=spec.warm_restart,
+        telemetry=telemetry)
     chaos_backend = ChaosBackend(backend or AnalyticBackend(), schedule)
+    if telemetry:
+        # record the injected fault environment itself so a trace is
+        # self-describing: every scheduled fault becomes an instant
+        for ev in schedule.kills:
+            telemetry.count("chaos.kills")
+            telemetry.instant("chaos", "kill", ev.time, node=ev.node,
+                              corrupt=ev.corrupt)
+        for ev in schedule.drains:
+            telemetry.count("chaos.drains")
+            telemetry.instant("chaos", "drain", ev.time, node=ev.node,
+                              duration=ev.duration)
+        for ev in schedule.stragglers:
+            telemetry.count("chaos.stragglers")
+            telemetry.instant("chaos", "straggler-episode", ev.time,
+                              duration=ev.duration, factor=ev.factor)
     stats = ControlLoop(chaos_events, jobs, allocator, chaos_backend,
                         t_fwd=t_fwd, pj_max=pj_max, horizon=horizon,
                         coalesce_window=coalesce_window,
-                        objective=objective).run()
+                        objective=objective, telemetry=telemetry).run()
     return ChaosReport(
         stats=stats, spec=spec, schedule=schedule,
         events=chaos_events, jobs=jobs,

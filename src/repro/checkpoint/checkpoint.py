@@ -19,11 +19,14 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.obs.telemetry import NULL_TELEMETRY
 
 Pytree = Any
 
@@ -110,11 +113,12 @@ class CheckpointManager:
     exercises in the chaos layer.
     """
 
-    def __init__(self, directory: str, *, keep: int = 2):
+    def __init__(self, directory: str, *, keep: int = 2, telemetry=None):
         if keep < 1:
             raise ValueError("keep must be >= 1")
         self.directory = directory
         self.keep = keep
+        self.telemetry = telemetry or NULL_TELEMETRY
         os.makedirs(directory, exist_ok=True)
 
     def _base(self, step: int) -> str:
@@ -133,6 +137,7 @@ class CheckpointManager:
 
     def save(self, tree: Pytree, step: int,
              meta: Optional[Dict] = None) -> str:
+        t0 = time.perf_counter()
         base = self._base(step)
         save_checkpoint(base, tree, meta=dict(meta or {}, step=step))
         for old in self.steps()[:-self.keep]:
@@ -141,6 +146,12 @@ class CheckpointManager:
                     os.remove(self._base(old) + suffix)
                 except OSError:
                     pass
+        tel = self.telemetry
+        if tel:
+            wall = time.perf_counter() - t0
+            tel.observe("checkpoint.save_ms", wall * 1e3)
+            tel.instant("checkpoint", "save", float(step), wall_s=wall,
+                        bytes=os.path.getsize(base + ".npz"))
         return base + ".npz"
 
     def load_latest_good(self, like: Pytree) -> Tuple[Pytree, Dict, int]:
@@ -151,12 +162,23 @@ class CheckpointManager:
         survives."""
         steps = self.steps()
         last_exc: Optional[Exception] = None
+        tel = self.telemetry
         for step in reversed(steps):
             try:
+                t0 = time.perf_counter()
                 tree, meta = load_checkpoint(self._base(step), like)
+                if tel:
+                    wall = time.perf_counter() - t0
+                    tel.observe("checkpoint.load_ms", wall * 1e3)
+                    tel.instant("checkpoint", "load", float(step),
+                                wall_s=wall)
                 return tree, (meta or {}), step
             except CorruptCheckpointError as exc:
                 last_exc = exc
+                if tel:
+                    tel.count("checkpoint.corrupt_fallbacks")
+                    tel.instant("checkpoint", "corrupt-fallback",
+                                float(step))
         raise CorruptCheckpointError(
             f"no loadable checkpoint in {self.directory} "
             f"(tried steps {list(reversed(steps))})") from last_exc

@@ -15,7 +15,16 @@ from repro.core.events import (
 )
 from repro.core.greedy import PAIR_REPAIR_MAX_TRAINERS, solve_greedy
 from repro.core.loop import ControlLoop, EventRecord, LoopStats
-from repro.core.metrics import Efficiency, ROI, eq_nodes, resource_integral
+from repro.core.metrics import (
+    Efficiency,
+    ROI,
+    deadline_miss_rate,
+    eq_nodes,
+    jain_fairness,
+    min_normalized_progress,
+    normalized_progress,
+    resource_integral,
+)
 from repro.core.milp import (
     AllocationProblem,
     AllocationResult,
@@ -49,6 +58,8 @@ __all__ = [
     "Fragment", "PoolEvent", "fragments_to_events", "merge_events",
     "merge_fragments", "pool_sizes", "validate_fragments",
     "Efficiency", "ROI", "eq_nodes", "resource_integral",
+    "jain_fairness", "normalized_progress", "min_normalized_progress",
+    "deadline_miss_rate",
     "AllocationProblem", "AllocationResult", "TrainerSpec",
     "project_current", "solve_node_milp",
     "reconstruct_map", "solve_fast_milp",

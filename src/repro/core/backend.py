@@ -21,9 +21,11 @@ coalescing and preemption-stall bookkeeping apply identically.
 from __future__ import annotations
 
 import math
+import time
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.loop import TrainerJob
+from repro.obs.telemetry import NULL_TELEMETRY
 
 
 class ExecutionBackend:
@@ -33,6 +35,10 @@ class ExecutionBackend:
     ``done``/``work``) the loop maintains."""
 
     name = "base"
+    #: observation sink (repro.obs); ``ControlLoop.run`` hands its own
+    #: hub to a backend still carrying the null default, so substrate
+    #: spans (live rescale walls, chaos faults) share the loop's trace
+    telemetry = NULL_TELEMETRY
 
     def bind(self, jobs: Sequence[TrainerJob]) -> None:
         """Called once at loop start with the full (sorted) job list."""
@@ -165,20 +171,30 @@ class LiveBackend(ExecutionBackend):
             job.r_up, job.r_dw = \
                 self.managed[job.id].trainer.measured_rescale_costs()
 
-    def _sync(self, job: TrainerJob) -> None:
+    def _sync(self, job: TrainerJob, now: float = 0.0) -> None:
         tr = self.managed[job.id].trainer
         if tr.n_nodes != len(job.nodes):
+            old = tr.n_nodes
+            t0 = time.perf_counter()
             tr.rescale(len(job.nodes))
+            tel = self.telemetry
+            if tel:
+                # measured physical rescale duration — the live-path
+                # analogue of the analytic r_up/r_dw model costs
+                wall = time.perf_counter() - t0
+                tel.observe("backend.rescale_ms", wall * 1e3)
+                tel.instant("backend", "rescale", now, job=job.id,
+                            old=old, new=len(job.nodes), wall_s=wall)
 
     def apply_allocation(self, job: TrainerJob, old_n: int,
                          now: float) -> None:
-        self._sync(job)
+        self._sync(job, now)
 
     def on_preempt(self, job: TrainerJob, taken: List[int],
                    now: float) -> None:
         # departed nodes are gone now — shrink (or park) immediately, even
         # if the re-allocation itself is coalesced
-        self._sync(job)
+        self._sync(job, now)
 
     def on_fail(self, job: TrainerJob, failed: List[int],
                 now: float) -> Optional[float]:
@@ -224,5 +240,6 @@ class LiveBackend(ExecutionBackend):
     def on_finish(self, job: TrainerJob, now: float) -> None:
         m = self.managed[job.id]
         if m.trainer.n_nodes > 0:
-            m.trainer.rescale(0)      # park: snapshot to host, free devices
+            job.nodes = []
+            self._sync(job, now)      # park: snapshot to host, free devices
         job.nodes = []

@@ -24,6 +24,7 @@ policy applies: keep the current map (``fell_back=True``).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
 from collections import OrderedDict
@@ -31,6 +32,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.allocator import Allocator
+from repro.obs.telemetry import NULL_TELEMETRY, Telemetry
 from repro.core.greedy import solve_greedy
 from repro.core.milp import (
     AllocationProblem,
@@ -111,6 +113,12 @@ def problem_signature(prob: AllocationProblem) -> Tuple[Signature, List[int]]:
 
 @dataclass
 class EngineStats:
+    """Engine counters.  The engine maintains these through
+    ``AllocationEngine._count``, which mirrors every increment into the
+    attached telemetry hub (counter ``engine.<field>``) — the dataclass
+    is the always-on cheap view, the hub the superset (histograms,
+    per-arm latency) when telemetry is enabled (DESIGN.md §13)."""
+
     events: int = 0
     cache_hits: int = 0
     repairs: int = 0              # incremental warm-start repairs accepted
@@ -124,15 +132,33 @@ class EngineStats:
     restored_entries: int = 0     # cache entries recovered across restores
 
     def as_dict(self) -> Dict[str, float]:
-        return dict(events=self.events, cache_hits=self.cache_hits,
-                    repairs=self.repairs,
-                    repair_escalations=self.repair_escalations,
-                    greedy_solves=self.greedy_solves,
-                    fast_milp_solves=self.fast_milp_solves,
-                    node_milp_solves=self.node_milp_solves,
-                    fallbacks=self.fallbacks, wall_time=self.wall_time,
-                    restores=self.restores,
-                    restored_entries=self.restored_entries)
+        # dataclasses-derived: a new counter field automatically appears
+        # in every report (regression-tested keys == fields)
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_telemetry(cls, tel: Telemetry) -> "EngineStats":
+        """Reconstruct the stats view from a telemetry hub's mirrored
+        ``engine.*`` counters (e.g. inside ``repro.obs.report``)."""
+        vals = {}
+        for f in dataclasses.fields(cls):
+            v = tel.counters.get(f"engine.{f.name}", 0.0)
+            vals[f.name] = float(v) if f.name == "wall_time" else int(v)
+        return cls(**vals)
+
+
+def _decision_arm(solver_status: str) -> str:
+    """Classify a result's producing solver arm for the per-arm
+    decision-latency histograms (``engine.decision_ms.<arm>``)."""
+    if solver_status.startswith("cache("):
+        return "cache"
+    if solver_status == "greedy-repair":
+        return "repair"
+    if solver_status == "greedy":
+        return "greedy"
+    if solver_status == "engine-fallback":
+        return "fallback"
+    return "milp"
 
 
 # Crude per-instance cost predictors (seconds), calibrated on the CPU
@@ -208,7 +234,8 @@ class AllocationEngine(Allocator):
     def __init__(self, *, time_budget: float = 0.050,
                  use_greedy: bool = True, use_node_milp: bool = False,
                  cache_size: int = 4096, incremental: bool = True,
-                 repair_gap: float = 1e-3, repair_exact_gap: float = 1e-9):
+                 repair_gap: float = 1e-3, repair_exact_gap: float = 1e-9,
+                 telemetry: Optional[Telemetry] = None):
         self.time_budget = time_budget
         self.use_greedy = use_greedy
         self.use_node_milp = use_node_milp
@@ -216,24 +243,34 @@ class AllocationEngine(Allocator):
         self.incremental = incremental
         self.repair_gap = repair_gap
         self.repair_exact_gap = repair_exact_gap
+        # telemetry is observation-only (repro.obs): decisions never read
+        # it, so an enabled hub cannot perturb allocations.  The default
+        # NULL_TELEMETRY sink is falsy and drops everything.
+        self.telemetry = telemetry or NULL_TELEMETRY
         self.name = "engine"
         self.stats = EngineStats()
         self._cache: "OrderedDict[Signature, Tuple[Tuple[int, ...], Optional[float], str]]" = OrderedDict()
+
+    def _count(self, name: str, delta=1) -> None:
+        """Bump an ``EngineStats`` counter and mirror it into the hub."""
+        setattr(self.stats, name, getattr(self.stats, name) + delta)
+        if self.telemetry:
+            self.telemetry.count(f"engine.{name}", delta)
 
     # ------------------------------------------------------------------
 
     def allocate(self, prob: AllocationProblem) -> AllocationResult:
         t0 = time.perf_counter()
-        self.stats.events += 1
+        self._count("events")
         key, order = problem_signature(prob)
 
         cached = self._cache.get(key)
         if cached is not None:
             self._cache.move_to_end(key)
-            self.stats.cache_hits += 1
+            self._count("cache_hits")
             res = self._ground(prob, order, *cached)
             res.wall_time = time.perf_counter() - t0
-            self.stats.wall_time += res.wall_time
+            self._finish_decision(res)
             return res
 
         res = self._solve(prob)
@@ -243,8 +280,20 @@ class AllocationEngine(Allocator):
             if len(self._cache) > self.cache_size:
                 self._cache.popitem(last=False)
         res.wall_time = time.perf_counter() - t0
-        self.stats.wall_time += res.wall_time
+        self._finish_decision(res)
         return res
+
+    def _finish_decision(self, res: AllocationResult) -> None:
+        """Account one decision: the ``wall_time`` sum stays (report
+        compatibility) and the hub additionally gets the per-arm
+        decision-latency histograms the sum could never show."""
+        self._count("wall_time", res.wall_time)
+        tel = self.telemetry
+        if tel:
+            ms = res.wall_time * 1e3
+            tel.observe("engine.decision_ms", ms)
+            tel.observe(
+                f"engine.decision_ms.{_decision_arm(res.solver_status)}", ms)
 
     def clear_cache(self) -> None:
         self._cache.clear()
@@ -294,8 +343,8 @@ class AllocationEngine(Allocator):
             self._cache[_tuplify(key)] = (_tuplify(counts), objective, status)
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
-        self.stats.restores += 1
-        self.stats.restored_entries += len(self._cache)
+        self._count("restores")
+        self._count("restored_entries", len(self._cache))
         return len(self._cache)
 
     @classmethod
@@ -351,7 +400,7 @@ class AllocationEngine(Allocator):
                     gap = ub - repair.objective
                     if gap <= self.repair_exact_gap * scale:
                         # repair reached the bound: provably optimal
-                        self.stats.repairs += 1
+                        self._count("repairs")
                         repair.solver_status = "greedy-repair"
                         return repair
                     if gap <= self.repair_gap * scale:
@@ -359,15 +408,15 @@ class AllocationEngine(Allocator):
                         # the MILPs
                         skip_milp = True
                 if not skip_milp:
-                    self.stats.repair_escalations += 1
+                    self._count("repair_escalations")
 
         if self.use_greedy:
             best = solve_greedy(prob)
-            self.stats.greedy_solves += 1
+            self._count("greedy_solves")
             if repair is not None:
                 best = _better(best, repair)
             if skip_milp:
-                self.stats.repairs += 1
+                self._count("repairs")
                 if best is not None and not best.fell_back:
                     return best
 
@@ -376,18 +425,18 @@ class AllocationEngine(Allocator):
         # so identical problem sequences make identical decisions run-to-run.
         if budget > 0 and _est_fast_milp(n, j) <= budget:
             r = solve_fast_milp(prob, time_limit=max(budget, 1e-3))
-            self.stats.fast_milp_solves += 1
+            self._count("fast_milp_solves")
             best = _better(best, r)
 
         if self.use_node_milp and budget > 0 and \
                 _est_node_milp(n, j) <= budget:
             r = solve_node_milp(prob, time_limit=max(budget, 1e-3))
-            self.stats.node_milp_solves += 1
+            self._count("node_milp_solves")
             best = _better(best, r)
 
         if best is None or best.fell_back:
             # §3.6: keep the current map
-            self.stats.fallbacks += 1
+            self._count("fallbacks")
             alloc = {j: sorted(ns)
                      for j, ns in project_current(prob).items()}
             return AllocationResult(

@@ -28,6 +28,7 @@ Cost semantics (paper §2.1/§3.4), identical for both backends:
 from __future__ import annotations
 
 import bisect
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
@@ -37,6 +38,7 @@ from repro.core.events import PoolEvent, merge_events
 from repro.core.milp import AllocationProblem, TrainerSpec
 from repro.core.scaling import ScalingCurve
 from repro.core.tfwd import TfwdEstimator, resolve_tfwd
+from repro.obs.telemetry import NULL_TELEMETRY, Telemetry
 
 
 @dataclass
@@ -172,6 +174,12 @@ class LoopStats:
     lost_progress: float = 0.0
     restart_cost_s: float = 0.0
 
+    def as_dict(self) -> Dict:
+        """Dataclasses-derived serialization (``event_records`` become
+        nested dicts): a new stats field cannot silently drift out of
+        reports (regression-tested keys == fields)."""
+        return dataclasses.asdict(self)
+
 
 class ControlLoop:
     """The single policy engine behind ``Simulator`` and
@@ -201,6 +209,11 @@ class ControlLoop:
     objective : Objective | str, optional
         Allocation policy passed to every solve (repro.core.objectives);
         ``None`` = the paper's Eqn-16 throughput (DESIGN.md §10).
+    telemetry : repro.obs.Telemetry, optional
+        Observation sink for decision spans, per-job lifecycle events
+        and pool counter tracks (DESIGN.md §13).  Default is the no-op
+        ``NULL_TELEMETRY``; the loop never *reads* telemetry, so an
+        enabled hub cannot change any decision or stat.
     """
 
     def __init__(self, events: Sequence[PoolEvent],
@@ -208,7 +221,7 @@ class ControlLoop:
                  backend, *, t_fwd: Union[float, str] = 120.0,
                  pj_max: int = 10, horizon: Optional[float] = None,
                  sos2_points: int = 8, coalesce_window: float = 0.0,
-                 objective=None):
+                 objective=None, telemetry: Optional[Telemetry] = None):
         self.events = sorted(events, key=lambda e: e.time)
         self.jobs = sorted(jobs, key=lambda j: (j.arrival, j.id))
         self.allocator = allocator
@@ -227,12 +240,19 @@ class ControlLoop:
         # instead of N (DESIGN.md §3.4).  Preemption of departed nodes is
         # never deferred — only the hand-out of new assignments is.
         self.coalesce_window = coalesce_window
+        self.telemetry = telemetry or NULL_TELEMETRY
 
     # ------------------------------------------------------------------
 
     def run(self) -> LoopStats:
         backend = self.backend
         jobs = self.jobs
+        tel = self.telemetry
+        # hand the hub to an unwired backend so substrate-level spans
+        # (live rescale walls, chaos faults) land in the same trace
+        if tel and getattr(backend, "telemetry", None) in (None,
+                                                           NULL_TELEMETRY):
+            backend.telemetry = tel
         backend.bind(jobs)
         pool: set[int] = set()
         qi = 0                                        # FCFS admission pointer
@@ -273,12 +293,19 @@ class ControlLoop:
                 failed = set(ev.failed)
                 lost = set(ev.left) | failed
                 pool -= lost
+                if tel:
+                    tel.instant("loop", "pool-event", now,
+                                joined=len(ev.joined), left=len(ev.left),
+                                failed=len(ev.failed))
                 for j in active:
                     taken = [n for n in j.nodes if n in lost]
                     if taken:
                         j.nodes = [n for n in j.nodes if n not in lost]
                         j.n_preemptions += 1
                         j.preempt_cost_s += len(taken) * j.r_dw
+                        if tel:
+                            tel.instant("job", "preempt", now, job=j.id,
+                                        taken=len(taken))
                         penalty = 0.0
                         dead = [n for n in taken if n in failed]
                         if dead:
@@ -289,11 +316,16 @@ class ControlLoop:
                             # restart penalty (DESIGN.md §12)
                             j.n_failures += 1
                             restored = backend.on_fail(j, dead, now)
+                            lost_now = 0.0
                             if restored is not None and restored < j.done:
-                                j.lost_progress += j.done - restored
+                                lost_now = j.done - restored
+                                j.lost_progress += lost_now
                                 j.done = restored
                             penalty = j.restart_penalty
                             j.restart_cost_s += penalty
+                            if tel:
+                                tel.instant("job", "fail", now, job=j.id,
+                                            lost=lost_now, penalty_s=penalty)
                         if j.nodes:
                             # forced scale-down stall.  It *supersedes*
                             # any in-flight rescale stall instead of
@@ -304,10 +336,18 @@ class ControlLoop:
                             # double-count, tests/test_loop.py)
                             j.busy_until = now + j.r_dw + penalty
                             j.rescale_cost_s += j.r_dw
+                            if tel:
+                                tel.span("job", "stall", now, j.busy_until,
+                                         job=j.id, why="preempt",
+                                         cost_s=j.r_dw + penalty)
                         elif penalty > 0.0:
                             # fully killed: the restart penalty is served
                             # when (before) it next gets nodes
                             j.busy_until = now + penalty
+                            if tel:
+                                tel.span("job", "stall", now, j.busy_until,
+                                         job=j.id, why="restart",
+                                         cost_s=penalty)
                         backend.on_preempt(j, taken, now)
                 pending_realloc = True
 
@@ -321,6 +361,10 @@ class ControlLoop:
                     finished.append(job)
                     continue
                 active.append(job)
+                if tel:
+                    tel.instant("job", "admit", now, job=job.id,
+                                arrival=job.arrival,
+                                wait=now - job.arrival)
                 pending_realloc = True
 
             # 3) reallocate — unless a coalescing window says another pool
@@ -372,10 +416,25 @@ class ControlLoop:
                         j.rescale_cost_samples += c_samples
                         realloc_cost_samples += c_samples
                         j.n_rescales += 1
+                        if tel:
+                            tel.instant("job", "rescale", now, job=j.id,
+                                        old=old, new=new, cost_s=cost)
+                            tel.span("job", "stall", now, j.busy_until,
+                                     job=j.id,
+                                     why="grow" if new > old else "shrink",
+                                     cost_s=cost)
                     if j.nodes and j.started_at is None:
                         j.started_at = now
                     backend.apply_allocation(j, old, now)
                 n_events += 1
+                if tel:
+                    # one decision span per solve: position = trace-clock
+                    # instant, cost = solver wall (the dual clock)
+                    tel.observe("loop.decision_ms", res.wall_time * 1e3)
+                    tel.span("solver", res.solver_status, now, now,
+                             wall_s=res.wall_time, pool=len(pool),
+                             jobs=len(active),
+                             allocated=sum(len(j.nodes) for j in active))
             if not defer:
                 pending_realloc = False
                 pending_since = None
@@ -404,6 +463,15 @@ class ControlLoop:
                 rescale_cost_samples=realloc_cost_samples,
                 outcome_until_next=outcome, solver_wall=ev_solver_wall,
                 allocated=sum(len(j.nodes) for j in active)))
+            if tel:
+                rec = records[-1]
+                tel.sample("pool_size", now, rec.pool_size)
+                tel.sample("allocated", now, rec.allocated)
+                if nxt > now:
+                    for j in active:
+                        if j.nodes:
+                            tel.span("job", "run", now, nxt, job=j.id,
+                                     n=len(j.nodes))
 
             # 5) retire finished jobs
             newly_done = [j for j in active if j.finished]
@@ -411,6 +479,8 @@ class ControlLoop:
                 for j in newly_done:
                     j.finished_at = nxt
                     backend.on_finish(j, nxt)
+                    if tel:
+                        tel.instant("job", "finish", nxt, job=j.id)
                     finished.append(j)
                 active = [j for j in active if not j.finished]
                 pending_realloc = True
@@ -431,7 +501,7 @@ class ControlLoop:
         queued = [j for j in jobs[qi:] if not j.finished]
         per_rt = {j.id: (j.finished_at - j.arrival)
                   for j in finished if j.finished_at is not None}
-        return LoopStats(
+        stats = LoopStats(
             total_samples=total_outcome,
             makespan=now - times[0],
             events_processed=n_events,
@@ -447,3 +517,12 @@ class ControlLoop:
             lost_progress=sum(j.lost_progress for j in all_jobs),
             restart_cost_s=sum(j.restart_cost_s for j in all_jobs),
         )
+        if tel:
+            # mirror the scalar report fields as hub gauges, so the hub
+            # alone reconstructs the run summary (LoopStats stays the
+            # canonical report object — this is the thin-view mirror)
+            for f in dataclasses.fields(LoopStats):
+                v = getattr(stats, f.name)
+                if isinstance(v, (int, float)):
+                    tel.gauge(f"loop.{f.name}", v)
+        return stats

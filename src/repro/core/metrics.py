@@ -1,5 +1,7 @@
 """Evaluation metrics (paper §4.1): resource integral (Eqn 17), eq-nodes
-(Eqn 18), utilization efficiency U = A_e / A_s, and ROI (Fig 8)."""
+(Eqn 18), utilization efficiency U = A_e / A_s, ROI (Fig 8), and the
+policy-portfolio metrics (DESIGN.md §10): Jain fairness over normalized
+progress, the max-min floor, and deadline miss rate."""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -47,3 +49,57 @@ class ROI:
     @property
     def value(self) -> float:
         return self.ret / self.investment if self.investment > 0 else float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Policy-portfolio metrics (DESIGN.md §10) — shared by the objectives
+# benchmark and tests so the definitions cannot drift apart.
+# ---------------------------------------------------------------------------
+
+
+def jain_fairness(xs: Sequence[float]) -> float:
+    """Jain fairness index (Σx)² / (n·Σx²); 1.0 when perfectly even.
+
+    Negative inputs are clamped to 0 (progress cannot be negative); an
+    empty or all-zero population scores 0.0."""
+    xs = [max(x, 0.0) for x in xs]
+    if not xs or sum(xs) == 0:
+        return 0.0
+    return sum(xs) ** 2 / (len(xs) * sum(x * x for x in xs))
+
+
+def normalized_progress(jobs: Sequence) -> List[float]:
+    """Per-job x_j = min(done_j / work_j, 1) — the unit every fairness
+    metric below is computed over.  Jobs with non-finite or non-positive
+    ``work`` (run-forever Trainers) score 1.0: they cannot be "behind"."""
+    out = []
+    for j in jobs:
+        w = getattr(j, "work", None)
+        if w is None or not (w > 0) or w == float("inf"):
+            out.append(1.0)
+        else:
+            out.append(min(j.done / w, 1.0))
+    return out
+
+
+def min_normalized_progress(jobs: Sequence) -> float:
+    """min_j x_j — the floor ``MaxMinFairness`` maximizes; 0.0 when the
+    population is empty."""
+    xs = normalized_progress(jobs)
+    return min(xs) if xs else 0.0
+
+
+def deadline_miss_rate(jobs: Sequence, horizon: float) -> float:
+    """Fraction of jobs whose soft deadline fell inside the horizon but
+    passed unfinished (``finished_at`` unset or after the deadline) —
+    what ``DeadlineAware`` minimizes.  Jobs without a deadline, or with
+    one beyond the horizon, count toward the denominator but can never
+    miss (matching the objectives benchmark's definition)."""
+    if not jobs:
+        return 0.0
+    missed = [j for j in jobs
+              if getattr(j, "deadline", None) is not None
+              and j.deadline <= horizon
+              and (getattr(j, "finished_at", None) is None
+                   or j.finished_at > j.deadline)]
+    return len(missed) / len(jobs)

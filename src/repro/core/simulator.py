@@ -44,12 +44,12 @@ class Simulator:
                  allocator: Allocator, *, t_fwd: Union[float, str] = 120.0,
                  pj_max: int = 10, horizon: Optional[float] = None,
                  sos2_points: int = 8, coalesce_window: float = 0.0,
-                 objective=None):
+                 objective=None, telemetry=None):
         self.loop = ControlLoop(events, jobs, allocator, AnalyticBackend(),
                                 t_fwd=t_fwd, pj_max=pj_max, horizon=horizon,
                                 sos2_points=sos2_points,
                                 coalesce_window=coalesce_window,
-                                objective=objective)
+                                objective=objective, telemetry=telemetry)
     def run(self) -> SimReport:
         return SimReport.from_stats(self.loop.run())
 
@@ -64,7 +64,7 @@ def _delegate(attr):
 
 for _attr in ("events", "jobs", "allocator", "t_fwd", "t_fwd_estimator",
               "pj_max", "horizon", "sos2_points", "coalesce_window",
-              "objective"):
+              "objective", "telemetry"):
     setattr(Simulator, _attr, _delegate(_attr))
 
 

@@ -72,7 +72,7 @@ class BFTrainerRuntime:
                  steps_per_second: float = 1.0,
                  metric: str = "throughput", pj_max: int = 10,
                  coalesce_window: float = 0.0, sos2_points: int = 8,
-                 objective=None):
+                 objective=None, telemetry=None):
         self.managed = list(managed)
         self.allocator = allocator or MILPAllocator("fast")
         self.t_fwd = t_fwd
@@ -83,6 +83,8 @@ class BFTrainerRuntime:
         self.sos2_points = sos2_points
         # allocation policy (repro.core.objectives); None = throughput
         self.objective = objective
+        # observation sink (repro.obs); None = disabled
+        self.telemetry = telemetry
 
     def run(self, events: Sequence[PoolEvent], *, time_scale: float = 1.0,
             max_steps_per_interval: int = 4,
@@ -99,7 +101,8 @@ class BFTrainerRuntime:
                            t_fwd=self.t_fwd, pj_max=self.pj_max,
                            horizon=horizon, sos2_points=self.sos2_points,
                            coalesce_window=self.coalesce_window,
-                           objective=self.objective)
+                           objective=self.objective,
+                           telemetry=self.telemetry)
         stats = loop.run()
         return RuntimeReport(
             steps={m.id: m.steps_done for m in self.managed},

@@ -1,0 +1,194 @@
+"""Run-summary CLI for control-plane telemetry (DESIGN.md §13).
+
+Two modes:
+
+* replay a scenario with telemetry enabled and summarize it::
+
+    python -m repro.obs.report --scenario bursty --scale 0.1 \\
+        --trace trace.json          # Chrome trace JSON → Perfetto
+    python -m repro.obs.report --scenario bursty --json   # JSON summary
+
+* summarize an existing deterministic trace stream
+  (``Telemetry.write_jsonl``)::
+
+    python -m repro.obs.report trace.jsonl
+
+The text report covers the decision-latency histograms (p50/p95/p99 per
+solver arm), the hub counters, and one line per Trainer from the
+per-job lifecycle timelines (admission wait, run/stall split, rescales,
+rollbacks).  ``--trace`` writes Chrome trace-event JSON loadable at
+https://ui.perfetto.dev.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Sequence
+
+from repro.obs.spans import read_jsonl
+from repro.obs.telemetry import Telemetry
+from repro.obs.timeline import build_timelines
+
+
+def run_summary(tel: Telemetry, stats=None) -> Dict:
+    """One JSON-ready dict for a telemetry hub (+ optional LoopStats)."""
+    out = tel.summary()
+    out["timelines"] = {job: t.summary()
+                        for job, t in sorted(build_timelines(tel).items())}
+    if stats is not None:
+        out["loop_stats"] = stats.as_dict()
+    return out
+
+
+def _fmt(v, width: int = 10) -> str:
+    if v is None:
+        return "-".rjust(width)
+    if isinstance(v, float):
+        return f"{v:{width}.3f}" if abs(v) < 1e5 else f"{v:{width}.3e}"
+    return f"{v:{width}d}" if isinstance(v, int) else str(v).rjust(width)
+
+
+def render_text(summary: Dict) -> str:
+    lines: List[str] = []
+    hists = summary.get("histograms", {})
+    if hists:
+        lines.append("== histograms (ms unless noted) ==")
+        lines.append(f"{'name':<40} {'count':>8} {'p50':>10} {'p95':>10} "
+                     f"{'p99':>10} {'max':>10}")
+        for name, h in hists.items():
+            lines.append(f"{name:<40} {h['count']:>8} {_fmt(h['p50'])} "
+                         f"{_fmt(h['p95'])} {_fmt(h['p99'])} {_fmt(h['max'])}")
+    counters = summary.get("counters", {})
+    if counters:
+        lines.append("")
+        lines.append("== counters ==")
+        for name, v in counters.items():
+            lines.append(f"{name:<48} {v:>12g}")
+    gauges = summary.get("gauges", {})
+    if gauges:
+        lines.append("")
+        lines.append("== gauges ==")
+        for name, v in gauges.items():
+            lines.append(f"{name:<48} {v:>12g}")
+    timelines = summary.get("timelines", {})
+    if timelines:
+        lines.append("")
+        lines.append("== per-job timelines ==")
+        lines.append(f"{'job':>4} {'wait_s':>9} {'run_s':>10} {'stall_s':>9} "
+                     f"{'node_s':>12} {'rescales':>8} {'preempt':>7} "
+                     f"{'fails':>5} {'lost':>10} {'finished':>10}")
+        for job, t in timelines.items():
+            fin = (f"{t['finished_at']:.0f}"
+                   if t["finished_at"] is not None else "-")
+            wait = (f"{t['admission_wait_s']:.1f}"
+                    if t["admission_wait_s"] is not None else "-")
+            lines.append(
+                f"{job:>4} {wait:>9} {t['run_time_s']:>10.0f} "
+                f"{t['stall_time_s']:>9.0f} {t['node_seconds']:>12.0f} "
+                f"{t['n_rescales']:>8} {t['n_preemptions']:>7} "
+                f"{t['n_failures']:>5} {t['lost_progress']:>10.3g} "
+                f"{fin:>10}")
+    lines.append("")
+    lines.append(f"trace events: {summary.get('n_events', 0)}")
+    return "\n".join(lines)
+
+
+def _demo_jobs(n: int, duration: float, eq_nodes: float, seed: int):
+    """Contended finite-work Trainers cycled from Tab 2 (the same shape
+    the benchmarks use), so a scenario replay exercises every span."""
+    import numpy as np
+
+    from repro.core import TrainerJob, tab2_curve
+    from repro.core.scaling import TAB2
+    rng = np.random.default_rng(seed)
+    names = list(TAB2)
+    share = max(eq_nodes / max(n, 1), 1.0)
+    jobs, t = [], 0.0
+    for i in range(n):
+        curve = tab2_curve(names[i % len(names)])
+        t += float(rng.exponential(duration / (4.0 * max(n, 1))))
+        jobs.append(TrainerJob(id=i, curve=curve,
+                               work=1.2 * duration * curve(share),
+                               n_min=1, n_max=24, r_up=20.0, r_dw=5.0,
+                               arrival=t))
+    return jobs
+
+
+def run_scenario_with_telemetry(name: str, *, scale: float = 0.1,
+                                seed: int = 7, objective=None,
+                                t_fwd: float = 120.0):
+    """Replay scenario ``name`` with an enabled hub; returns
+    ``(telemetry, stats)``."""
+    from repro.core import AllocationEngine, Simulator, fragments_to_events
+    from repro.sched import build_scenario
+
+    sc = build_scenario(name, scale=scale, seed=seed)
+    events = fragments_to_events(sc.fragments)
+    tel = Telemetry()
+    n_jobs = max(4, int(round(sc.stats.eq_nodes / 3)))
+    jobs = _demo_jobs(n_jobs, sc.duration, sc.stats.eq_nodes, seed)
+    engine = AllocationEngine(telemetry=tel)
+    stats = Simulator(events, jobs, engine, t_fwd=t_fwd,
+                      horizon=sc.duration, objective=objective,
+                      telemetry=tel).run()
+    return tel, stats
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("jsonl", nargs="?", default=None,
+                    help="existing trace JSONL to summarize")
+    ap.add_argument("--scenario", default=None,
+                    help="replay this scenario (repro.sched name) with "
+                         "telemetry enabled")
+    ap.add_argument("--scale", type=float, default=0.1,
+                    help="scenario scale factor (default 0.1)")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--policy", default=None,
+                    help="objective policy name (repro.core.objectives)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write Chrome trace-event JSON (Perfetto)")
+    ap.add_argument("--jsonl-out", default=None, metavar="PATH",
+                    help="write the deterministic trace JSONL")
+    ap.add_argument("--json", action="store_true",
+                    help="print the summary as JSON instead of text")
+    args = ap.parse_args(argv)
+
+    if (args.jsonl is None) == (args.scenario is None):
+        ap.error("pass exactly one of: a trace JSONL path, or --scenario")
+
+    if args.scenario is not None:
+        tel, stats = run_scenario_with_telemetry(
+            args.scenario, scale=args.scale, seed=args.seed,
+            objective=args.policy)
+        summary = run_summary(tel, stats)
+        if args.trace:
+            tel.write_chrome_trace(args.trace)
+            print(f"wrote Perfetto trace: {args.trace}", file=sys.stderr)
+        if args.jsonl_out:
+            tel.write_jsonl(args.jsonl_out)
+            print(f"wrote trace JSONL: {args.jsonl_out}", file=sys.stderr)
+    else:
+        with open(args.jsonl, encoding="utf-8") as f:
+            events = read_jsonl(f)
+        summary = {"n_events": len(events),
+                   "timelines": {job: t.summary() for job, t in
+                                 sorted(build_timelines(events).items())}}
+        if args.trace:
+            from repro.obs.spans import chrome_trace
+            with open(args.trace, "w", encoding="utf-8") as f:
+                json.dump(chrome_trace(events), f)
+            print(f"wrote Perfetto trace: {args.trace}", file=sys.stderr)
+
+    if args.json:
+        print(json.dumps(summary, indent=2, sort_keys=True))
+    else:
+        print(render_text(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

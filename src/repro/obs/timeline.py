@@ -1,0 +1,138 @@
+"""Per-job lifecycle timelines from the control-plane trace
+(DESIGN.md §13).
+
+``build_timelines`` folds the hub's event stream into one
+``JobTimeline`` per Trainer: when it waited for admission, which node
+counts it ran at (coalescing back-to-back equal-size run segments),
+where rescale/preemption/restart stalls sat, and what each kill rolled
+back.  This is the per-job accounting view that multi-tenant SLO
+policies (Synergy, PAPERS.md) need and that ``repro.obs.report``
+renders.
+
+The builder only *reads* events with ``cat == "job"`` — the emission
+contract is:
+
+========  =========  ==================================================
+name      kind       args
+========  =========  ==================================================
+admit     instant    arrival, wait
+run       span       n (node count over the span)
+stall     span       why ∈ {grow, shrink, preempt, restart}, cost_s
+rescale   instant    old, new, cost_s
+preempt   instant    taken (node count preempted away)
+fail      instant    lost (progress units rolled back), penalty_s
+finish    instant    —
+========  =========  ==================================================
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple, Union
+
+from repro.obs.spans import KIND_INSTANT, KIND_SPAN, SpanEvent
+from repro.obs.telemetry import Telemetry
+
+
+@dataclass
+class JobTimeline:
+    """Lifecycle of one Trainer, folded from the trace stream."""
+
+    job: int
+    arrival: Optional[float] = None
+    admitted_at: Optional[float] = None
+    started_at: Optional[float] = None      # first interval holding nodes
+    finished_at: Optional[float] = None
+    #: (t0, t1, n_nodes) run segments, consecutive equal-n merged
+    segments: List[Tuple[float, float, int]] = field(default_factory=list)
+    #: (t0, t1, why) stall windows: grow/shrink/preempt/restart
+    stalls: List[Tuple[float, float, str]] = field(default_factory=list)
+    #: (t, old_n, new_n) allocation size changes
+    rescales: List[Tuple[float, int, int]] = field(default_factory=list)
+    n_preemptions: int = 0
+    n_failures: int = 0
+    lost_progress: float = 0.0
+
+    @property
+    def admission_wait(self) -> Optional[float]:
+        if self.admitted_at is None or self.arrival is None:
+            return None
+        return self.admitted_at - self.arrival
+
+    @property
+    def node_seconds(self) -> float:
+        return sum(n * (t1 - t0) for t0, t1, n in self.segments)
+
+    @property
+    def run_time(self) -> float:
+        return sum(t1 - t0 for t0, t1, _ in self.segments)
+
+    @property
+    def stall_time(self) -> float:
+        return sum(t1 - t0 for t0, t1, _ in self.stalls)
+
+    def summary(self) -> Dict:
+        grows = sum(1 for _, old, new in self.rescales if new > old)
+        return {
+            "job": self.job,
+            "arrival": self.arrival,
+            "admitted_at": self.admitted_at,
+            "admission_wait_s": self.admission_wait,
+            "started_at": self.started_at,
+            "finished_at": self.finished_at,
+            "node_seconds": self.node_seconds,
+            "run_time_s": self.run_time,
+            "stall_time_s": self.stall_time,
+            "n_segments": len(self.segments),
+            "n_rescales": len(self.rescales),
+            "n_grows": grows,
+            "n_shrinks": len(self.rescales) - grows,
+            "n_preemptions": self.n_preemptions,
+            "n_failures": self.n_failures,
+            "lost_progress": self.lost_progress,
+        }
+
+
+def build_timelines(source: Union[Telemetry, Iterable[SpanEvent]]
+                    ) -> Dict[int, JobTimeline]:
+    """Fold a telemetry hub (or raw event list) into per-job timelines."""
+    events = source.events if isinstance(source, Telemetry) else source
+    out: Dict[int, JobTimeline] = {}
+
+    def tl(job: int) -> JobTimeline:
+        t = out.get(job)
+        if t is None:
+            t = out[job] = JobTimeline(job=job)
+        return t
+
+    for ev in events:
+        if ev.cat != "job" or ev.job is None:
+            continue
+        t = tl(ev.job)
+        if ev.kind == KIND_SPAN and ev.name == "run":
+            n = int(ev.args.get("n", 0))
+            if t.started_at is None:
+                t.started_at = ev.t0
+            if t.segments and t.segments[-1][1] == ev.t0 \
+                    and t.segments[-1][2] == n:
+                t0, _, _ = t.segments[-1]
+                t.segments[-1] = (t0, ev.t1, n)
+            else:
+                t.segments.append((ev.t0, ev.t1, n))
+        elif ev.kind == KIND_SPAN and ev.name == "stall":
+            t.stalls.append((ev.t0, ev.t1, str(ev.args.get("why", ""))))
+        elif ev.kind == KIND_INSTANT:
+            if ev.name == "admit":
+                t.admitted_at = ev.t0
+                if "arrival" in ev.args:
+                    t.arrival = float(ev.args["arrival"])
+            elif ev.name == "rescale":
+                t.rescales.append((ev.t0, int(ev.args.get("old", 0)),
+                                   int(ev.args.get("new", 0))))
+            elif ev.name == "preempt":
+                t.n_preemptions += 1
+            elif ev.name == "fail":
+                t.n_failures += 1
+                t.lost_progress += float(ev.args.get("lost", 0.0))
+            elif ev.name == "finish":
+                t.finished_at = ev.t0
+    return out

@@ -1,0 +1,67 @@
+"""Unit tests for the shared policy-portfolio metrics in
+``repro.core.metrics`` (deduplicated out of the objectives benchmark)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import pytest
+
+from repro.core import (
+    deadline_miss_rate,
+    jain_fairness,
+    min_normalized_progress,
+    normalized_progress,
+)
+
+
+@dataclass
+class _Job:
+    done: float = 0.0
+    work: float = 100.0
+    deadline: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+def test_jain_fairness_perfectly_even():
+    assert jain_fairness([0.5, 0.5, 0.5]) == pytest.approx(1.0)
+
+
+def test_jain_fairness_single_winner():
+    # one of n jobs gets everything → index 1/n
+    assert jain_fairness([1.0, 0.0, 0.0, 0.0]) == pytest.approx(0.25)
+
+
+def test_jain_fairness_degenerate():
+    assert jain_fairness([]) == 0.0
+    assert jain_fairness([0.0, 0.0]) == 0.0
+    # negative progress is clamped, not allowed to inflate the index
+    assert jain_fairness([-1.0, 1.0]) == pytest.approx(0.5)
+
+
+def test_normalized_progress_clamps_and_handles_infinite_work():
+    jobs = [_Job(done=50.0, work=100.0),
+            _Job(done=250.0, work=100.0),          # overshoot clamps to 1
+            _Job(done=1.0, work=math.inf),         # run-forever: never behind
+            _Job(done=0.0, work=0.0)]              # degenerate work
+    assert normalized_progress(jobs) == [0.5, 1.0, 1.0, 1.0]
+
+
+def test_min_normalized_progress():
+    assert min_normalized_progress([]) == 0.0
+    jobs = [_Job(done=30.0), _Job(done=80.0)]
+    assert min_normalized_progress(jobs) == pytest.approx(0.3)
+
+
+def test_deadline_miss_rate():
+    horizon = 1000.0
+    jobs = [
+        _Job(deadline=500.0, finished_at=400.0),    # made it
+        _Job(deadline=500.0, finished_at=600.0),    # late
+        _Job(deadline=500.0, finished_at=None),     # never finished
+        _Job(deadline=2000.0, finished_at=None),    # deadline past horizon
+        _Job(deadline=None),                        # no deadline
+    ]
+    assert deadline_miss_rate(jobs, horizon) == pytest.approx(2 / 5)
+    assert deadline_miss_rate([], horizon) == 0.0
