@@ -18,14 +18,26 @@ Jobs carry finite work (sized so a fair share finishes ~most of it),
 staggered soft deadlines, and node-second budgets on half the fleet, so
 every policy has something to act on.  ``--smoke`` (or ``BENCH_SMOKE=1``)
 shrinks scenarios for CI.
+
+The **metric arms** (paper Figs 12-13 + Tabs 3-4, absorbed from the
+legacy ``bench_objective`` module when it moved onto the JSON path)
+replay diverse Tab-2 Trainers on one unfillable-hole trace under the
+``throughput`` vs ``efficiency`` objective metrics and report total /
+rescale-lost samples and the per-DNN runtime spread — the paper's
+evidence that the raw-throughput metric starves compute-heavy DNNs.
+
+With ``--json`` / ``BENCH_JSON_DIR`` the sweep persists
+``BENCH_objectives.json`` (schema ``bftrainer-bench-objectives/1``).
 """
 from __future__ import annotations
 
 import argparse
 import os
-from typing import List, Sequence
+from collections import defaultdict
+from typing import Dict, List, Sequence
 
-from benchmarks.common import FULL, emit
+from benchmarks.common import FULL, diverse_jobs, emit, maybe_write_json, trace
+from benchmarks.schema import OBJECTIVES_SCHEMA, bench_payload
 from repro.core import (
     AllocationEngine,
     CostCap,
@@ -88,7 +100,7 @@ def _policies():
 
 
 def run_scenario_sweep(name: str, scale: float, seed: int = 7,
-                       t_fwd: float = 120.0) -> None:
+                       t_fwd: float = 120.0) -> List[Dict]:
     sc = build_scenario(name, scale=scale, seed=seed)
     events = fragments_to_events(sc.fragments)
     n_eq = max(1, round(eq_nodes(events, 0.0, sc.duration)))
@@ -103,6 +115,7 @@ def run_scenario_sweep(name: str, scale: float, seed: int = 7,
     emit(f"objectives/{name}/n_jobs", n_jobs)
     emit(f"objectives/{name}/eq_nodes", n_eq)
 
+    rows: List[Dict] = []
     for pol_name, mk in _policies():
         eng = AllocationEngine(time_budget=0.050)
         jobs = jobs_fn()
@@ -110,17 +123,66 @@ def run_scenario_sweep(name: str, scale: float, seed: int = 7,
                         horizon=sc.duration, objective=mk()).run()
         u = rep.total_samples / a_s if a_s > 0 else 0.0
         xs = normalized_progress(jobs)
+        s = eng.stats
+        row = dict(
+            scenario=name, policy=pol_name, efficiency_u=float(u),
+            jain_fairness=float(jain_fairness(xs)),
+            min_norm_progress=float(min_normalized_progress(jobs)),
+            deadline_miss_rate=float(
+                deadline_miss_rate(jobs, sc.duration)),
+            solver_wall_s=float(rep.solver_wall_total),
+            cache_hit_rate=float(
+                s.cache_hits / s.events if s.events else 0.0))
+        rows.append(row)
         pre = f"objectives/{name}/{pol_name}"
         emit(f"{pre}/efficiency_u", f"{u:.3f}", "vs dedicated eq-nodes")
-        emit(f"{pre}/jain_fairness", f"{jain_fairness(xs):.3f}")
+        emit(f"{pre}/jain_fairness", f"{row['jain_fairness']:.3f}")
         emit(f"{pre}/min_norm_progress",
-             f"{min_normalized_progress(jobs):.3f}")
+             f"{row['min_norm_progress']:.3f}")
         emit(f"{pre}/deadline_miss_rate",
-             f"{deadline_miss_rate(jobs, sc.duration):.2f}")
-        emit(f"{pre}/solver_wall_s", f"{rep.solver_wall_total:.3f}")
-        s = eng.stats
-        emit(f"{pre}/cache_hit_rate",
-             f"{(s.cache_hits / s.events if s.events else 0.0):.2f}")
+             f"{row['deadline_miss_rate']:.2f}")
+        emit(f"{pre}/solver_wall_s", f"{row['solver_wall_s']:.3f}")
+        emit(f"{pre}/cache_hit_rate", f"{row['cache_hit_rate']:.2f}")
+    return rows
+
+
+def run_metric_arms(smoke: bool) -> List[Dict]:
+    """Figs 12-13: diverse Trainers under throughput vs efficiency
+    objective metrics — per-DNN runtime spread and sample totals."""
+    import numpy as np
+    hours = 48.0 if FULL else (6.0 if smoke else 24.0)
+    ev = trace(n_nodes=160, hours=hours, seed=44)
+    horizon = hours * 3600.0
+    n_jobs = 42 if FULL else (10 if smoke else 21)
+    rows: List[Dict] = []
+    for metric in ("throughput", "efficiency"):
+        jobs = diverse_jobs(n=n_jobs, metric=metric)
+        rep = Simulator(list(ev), jobs, MILPAllocator("fast"), t_fwd=120.0,
+                        pj_max=10, horizon=horizon).run()
+        runtimes = defaultdict(list)
+        for j in jobs:
+            if j.finished_at is not None:
+                runtimes[j.curve.name].append(
+                    (j.finished_at - j.arrival) / 3600.0)
+        for dnn, rts in sorted(runtimes.items()):
+            emit(f"objective/{metric}/{dnn}/runtime_h",
+                 f"{np.mean(rts):.2f}", "fig12")
+        spread = 0.0
+        if runtimes:
+            means = [float(np.mean(v)) for v in runtimes.values()]
+            spread = max(means) / max(min(means), 1e-9)
+            emit(f"objective/{metric}/runtime_spread", f"{spread:.1f}",
+                 "fig12: throughput metric starves compute-heavy DNNs")
+        emit(f"objective/{metric}/total_samples",
+             f"{rep.total_samples:.3e}", "fig13 proxy")
+        emit(f"objective/{metric}/rescale_cost_samples",
+             f"{rep.rescale_cost_samples:.3e}", "")
+        rows.append(dict(metric=metric,
+                         total_samples=float(rep.total_samples),
+                         rescale_cost_samples=float(
+                             rep.rescale_cost_samples),
+                         runtime_spread=float(spread)))
+    return rows
 
 
 def main(argv: Sequence[str] = ()) -> None:
@@ -136,8 +198,13 @@ def main(argv: Sequence[str] = ()) -> None:
     scale = 0.12 if smoke else (1.0 if FULL else 0.5)
     names = args.scenario or (
         ["bursty", "capacity"] if smoke else sorted(SCENARIOS))
+    payload = bench_payload(OBJECTIVES_SCHEMA)
+    payload["scale"] = scale
+    payload["policies"] = []
     for name in names:
-        run_scenario_sweep(name, scale=scale)
+        payload["policies"].extend(run_scenario_sweep(name, scale=scale))
+    payload["metrics"] = run_metric_arms(smoke)
+    maybe_write_json("BENCH_objectives.json", payload)
 
 
 if __name__ == "__main__":

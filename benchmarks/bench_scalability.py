@@ -1,22 +1,41 @@
 """Paper Fig. 15: HPO efficiency per DNN scalability class — every Tab-2
-DNN gets an HPO run on the same trace."""
+DNN gets an HPO run on the same trace.
+
+With ``--json`` / ``BENCH_JSON_DIR`` the sweep persists
+``BENCH_scalability.json`` (schema ``bftrainer-bench-scalability/1``);
+``--smoke`` (or ``BENCH_SMOKE=1``) shortens the trace for CI.
+"""
 from __future__ import annotations
 
-from benchmarks.common import FULL, efficiency, emit, hpo_jobs, trace
+import sys
+
+from benchmarks.common import FULL, SMOKE, efficiency, emit, hpo_jobs, \
+    maybe_write_json, trace
+from benchmarks.schema import SCALABILITY_SCHEMA, bench_payload
 from repro.core import MILPAllocator
 from repro.core.scaling import TAB2
 
 
 def main() -> None:
-    hours = 24.0 if FULL else 12.0
-    ev = trace(n_nodes=160, hours=hours, seed=66)
+    smoke = SMOKE or "--smoke" in sys.argv[1:]
+    hours = 24.0 if FULL else (6.0 if smoke else 12.0)
+    seed = 66
+    ev = trace(n_nodes=160, hours=hours, seed=seed)
     horizon = hours * 3600.0
+    payload = bench_payload(SCALABILITY_SCHEMA)
+    payload["trace"] = dict(n_nodes=160, hours=hours, seed=seed)
+    payload["rows"] = []
     for dnn in TAB2:
         rep, u = efficiency(ev, lambda d=dnn: hpo_jobs(8, dnn=d), horizon,
                             MILPAllocator("fast"))
+        payload["rows"].append(dict(dnn=dnn, efficiency_u=float(u)))
         emit(f"scalability/{dnn}/efficiency_u", f"{u:.3f}",
              "fig15: U grows with DNN scalability")
+    maybe_write_json("BENCH_scalability.json", payload)
 
 
 if __name__ == "__main__":
+    if "--json" in sys.argv[1:]:
+        import os
+        os.environ.setdefault("BENCH_JSON_DIR", ".")
     main()

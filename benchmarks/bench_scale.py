@@ -18,10 +18,23 @@ next event's current map — the steady-state replay access pattern.
 Solution parity (relative objective gap between the two arms) is
 reported alongside the speedup.
 
-``--smoke`` runs the two small tiers only (CI); the full sweep includes
-the 4,096 × 64 tier.  With ``--json`` / ``benchmarks.run --json`` the
+On top of the monolithic sweep, the **federated tier** (DESIGN.md §14)
+shards the fleet into pools of 4,096 nodes × 64 Trainers — one
+``AllocationEngine`` per pool behind a ``FederatedEngine`` — and
+replays interleaved per-pool event streams at 16,384 (4 pools) and
+65,536 (16 pools) fleet nodes.  Per-event decision latency is the
+single-pool solve wall (pools are independent, so fleet size never
+enters the per-event critical path); the comparison column is the
+monolithic single-engine cost on the equivalent fleet-sized problem,
+measured directly up to 16,384 × 256 and extrapolated O(N·J) from the
+largest measured tier beyond that (a 65,536 × 1,024 value table alone
+is ~0.5 GB — the point of federation is that nobody should build it).
+
+``--smoke`` runs the two small tiers plus the 16k federated point
+(CI); the full sweep includes the 4,096 × 64 monolithic tier and the
+65k federated point.  With ``--json`` / ``benchmarks.run --json`` the
 sweep persists ``BENCH_allocator.json`` (schema
-``bftrainer-bench-allocator/2``).
+``bftrainer-bench-allocator/3``).
 """
 from __future__ import annotations
 
@@ -39,9 +52,20 @@ from repro.core.greedy import solve_greedy
 from repro.core.milp import AllocationProblem, TrainerSpec
 from repro.core.milp_fast import solve_fast_milp
 from repro.core.scaling import amdahl_curve
+from repro.federation import FederatedEngine, PoolMap
 
 SWEEP = [(256, 16), (1024, 32), (4096, 64)]
 SWEEP_SMOKE = [(128, 8), (256, 16)]
+
+#: federated tier: (fleet nodes, pools) at a fixed 4,096-node /
+#: 64-Trainer pool shape — the per-pool problem stays constant while
+#: the fleet grows with the pool count.
+JOBS_PER_POOL = 64
+FED_SWEEP = [(16384, 4), (65536, 16)]
+FED_SWEEP_SMOKE = [(16384, 4)]
+#: largest monolithic fleet-sized problem we measure directly; beyond
+#: it the monolithic column is extrapolated O(N·J) from this tier.
+MONO_CAP = 16384 * 256
 
 
 def _trainers(n_nodes: int, n_jobs: int, rng) -> List[TrainerSpec]:
@@ -105,6 +129,47 @@ def _run_arm(trainers, seqs, solve, currents=None) -> Dict:
     return dict(walls=np.array(walls) * 1e3, objs=objs, currents=used)
 
 
+def _monolithic_p99(n_nodes: int, n_jobs: int, n_events: int) -> float:
+    """Measured per-event engine p99 (ms) on one fleet-sized monolithic
+    problem — the federated tier's comparison column."""
+    trainers, seqs = _event_sequence(n_nodes, n_jobs, n_events, seed=7)
+    engine = AllocationEngine()
+    res = _run_arm(trainers, seqs, engine.allocate)
+    return float(np.percentile(res["walls"], 99))
+
+
+def _federated_tier(n_fleet: int, n_pools: int, n_events: int) -> Dict:
+    """Replay ``n_events`` interleaved join/leave deltas per pool
+    through a ``FederatedEngine``; every pool owns a disjoint
+    4,096-node slice with its own Trainer population and feedback
+    trajectory, and the recorded wall per event is the one-pool solve
+    the fleet actually waits on."""
+    per_pool = n_fleet // n_pools
+    fed = FederatedEngine(PoolMap.contiguous(n_fleet, n_pools))
+    pools = []
+    for k in range(n_pools):
+        trainers, seqs = _event_sequence(per_pool, JOBS_PER_POOL,
+                                         n_events, seed=7 + k)
+        off = k * per_pool
+        seqs = [[nid + off for nid in s] for s in seqs]
+        pools.append(dict(trainers=trainers, seqs=seqs, current={}))
+    walls = []
+    for i in range(n_events):
+        for k, p in enumerate(pools):
+            prob = AllocationProblem(nodes=list(p["seqs"][i]),
+                                     trainers=p["trainers"],
+                                     current=p["current"], t_fwd=120.0)
+            t0 = time.perf_counter()
+            res = fed.allocate(k, prob)
+            walls.append(time.perf_counter() - t0)
+            p["current"] = {j: list(ns)
+                            for j, ns in res.allocation.items()}
+    stats = fed.stats()
+    return dict(walls=np.array(walls) * 1e3,
+                cache_hit_rate=stats.cache_hits / max(stats.events, 1),
+                repair_rate=stats.repairs / max(stats.events, 1))
+
+
 def main() -> None:
     smoke = SMOKE or "--smoke" in sys.argv[1:]
     tiers = SWEEP_SMOKE if smoke else SWEEP
@@ -163,6 +228,51 @@ def main() -> None:
              f"{row['parity_max_rel_gap']:.2e}", "")
         emit(f"scale/{n_nodes}x{n_jobs}/repair_rate",
              f"{row['repair_rate']:.2f}", "")
+
+    # --- federated tier: sharded engines at 16k/65k fleet nodes ------
+    payload["federated"] = []
+    fed_tiers = FED_SWEEP_SMOKE if smoke else FED_SWEEP
+    # one measured monolithic anchor at the largest affordable
+    # fleet-sized problem; larger tiers extrapolate O(N·J) from it
+    anchor_nodes, anchor_jobs = 16384, 256
+    anchor_events = 6 if smoke else 8
+    anchor_p99 = _monolithic_p99(anchor_nodes, anchor_jobs, anchor_events)
+    for n_fleet, n_pools in fed_tiers:
+        n_events = 6 if smoke else (8 if n_fleet >= 65536 else 10)
+        fed = _federated_tier(n_fleet, n_pools, n_events)
+        n_jobs_fleet = n_pools * JOBS_PER_POOL
+        extrapolated = n_fleet * n_jobs_fleet > MONO_CAP
+        if extrapolated:
+            mono_p99 = anchor_p99 * (n_fleet * n_jobs_fleet
+                                     / (anchor_nodes * anchor_jobs))
+        elif (n_fleet, n_jobs_fleet) == (anchor_nodes, anchor_jobs):
+            mono_p99 = anchor_p99
+        else:
+            mono_p99 = _monolithic_p99(n_fleet, n_jobs_fleet,
+                                       anchor_events)
+        fed_p99 = float(np.percentile(fed["walls"], 99))
+        row = dict(
+            nodes=n_fleet, jobs=n_jobs_fleet, pools=n_pools,
+            events=n_events * n_pools,
+            decision_ms_p50=float(np.percentile(fed["walls"], 50)),
+            decision_ms_p95=float(np.percentile(fed["walls"], 95)),
+            decision_ms_p99=fed_p99,
+            monolithic_ms_p99=float(mono_p99),
+            monolithic_extrapolated=extrapolated,
+            speedup_p99_vs_monolithic=float(mono_p99 / max(fed_p99, 1e-6)),
+            cache_hit_rate=float(fed["cache_hit_rate"]),
+            repair_rate=float(fed["repair_rate"]),
+        )
+        payload["federated"].append(row)
+        tag = f"scale/fed/{n_fleet}x{n_pools}p"
+        emit(f"{tag}/decision_ms_p50", f"{row['decision_ms_p50']:.2f}",
+             "per-pool solve wall")
+        emit(f"{tag}/decision_ms_p99", f"{row['decision_ms_p99']:.2f}", "")
+        emit(f"{tag}/monolithic_ms_p99", f"{row['monolithic_ms_p99']:.1f}",
+             "extrapolated O(N*J)" if extrapolated else "measured")
+        emit(f"{tag}/speedup_p99_vs_monolithic",
+             f"{row['speedup_p99_vs_monolithic']:.1f}",
+             "target >= 5x at 65536")
     maybe_write_json("BENCH_allocator.json", payload)
 
 

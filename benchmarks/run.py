@@ -6,9 +6,13 @@ paper-scale variants, BENCH_SMOKE=1 (or ``--smoke``) for CI-scale runs.
 
 ``--json [DIR]`` additionally persists the perf-trajectory payloads
 (``BENCH_week.json`` from the ``week`` section, ``BENCH_allocator.json``
-from ``scale``, ``BENCH_chaos.json`` from ``chaos``) into DIR (default:
+from ``scale``, ``BENCH_chaos.json`` from ``chaos``,
+``BENCH_objectives.json`` from ``objectives``,
+``BENCH_scalability.json`` from ``scalability``) into DIR (default:
 the current directory), validated
-against ``benchmarks.schema`` — the artifacts CI uploads per commit.
+against ``benchmarks.schema`` — the artifacts CI uploads per commit
+and ``scripts/bench_compare.py`` diffs against the committed baselines
+in ``benchmarks/baselines/``.
 """
 from __future__ import annotations
 
@@ -25,11 +29,10 @@ SECTIONS = [
     ("tfwd", "Figs 7-9: forward-looking time", "benchmarks.bench_tfwd"),
     ("week", "Figs 10-11: weekly efficiency engine/MILP vs heuristic",
      "benchmarks.bench_week"),
-    ("objective", "Figs 12-13 + Tabs 3-4: objective metrics",
-     "benchmarks.bench_objective"),
     ("workloads", "Scenario library: engine efficiency per workload profile",
      "benchmarks.bench_workloads"),
-    ("objectives", "Policy portfolio: throughput-vs-fairness across scenarios",
+    ("objectives", "Figs 12-13 + Tabs 3-4 + policy portfolio: "
+     "throughput-vs-fairness across scenarios",
      "benchmarks.bench_objectives"),
     ("runtime", "Live ControlLoop: real elastic trainers on a replayed trace",
      "benchmarks.bench_runtime"),

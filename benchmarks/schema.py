@@ -16,8 +16,10 @@ import time
 from typing import Dict, List
 
 WEEK_SCHEMA = "bftrainer-bench-week/2"
-ALLOCATOR_SCHEMA = "bftrainer-bench-allocator/2"
+ALLOCATOR_SCHEMA = "bftrainer-bench-allocator/3"
 CHAOS_SCHEMA = "bftrainer-bench-chaos/2"
+OBJECTIVES_SCHEMA = "bftrainer-bench-objectives/1"
+SCALABILITY_SCHEMA = "bftrainer-bench-scalability/1"
 
 #: BENCH_week.json — one week-trace replay, engine vs the PR-4 baseline
 #: (per-event aggregate MILP), both measured in the same run.
@@ -31,8 +33,13 @@ WEEK_ARM_KEYS = ["allocator", "wall_s", "solver_wall_s",
 
 #: BENCH_allocator.json — the nodes × jobs scale sweep: per-event solve
 #: wall of the incremental/vectorized engine vs the pre-PR-5 scalar
-#: fresh-solve baseline, plus hit rates and solution parity.
-ALLOCATOR_KEYS = ["schema", "generated_unix", "sweep"]
+#: fresh-solve baseline, plus hit rates and solution parity.  Since /3
+#: the payload also carries the ``federated`` tier (DESIGN.md §14):
+#: sharded per-pool engines replaying interleaved pool-event streams at
+#: 16k/65k fleet nodes, compared against the monolithic single-engine
+#: per-event cost (measured up to 16,384 × 256, extrapolated O(N·J)
+#: beyond — ``monolithic_extrapolated`` flags which).
+ALLOCATOR_KEYS = ["schema", "generated_unix", "sweep", "federated"]
 ALLOCATOR_ROW_KEYS = ["nodes", "jobs", "policy", "events",
                       "baseline_per_event_ms_p50",
                       "baseline_per_event_ms_p95",
@@ -41,6 +48,12 @@ ALLOCATOR_ROW_KEYS = ["nodes", "jobs", "policy", "events",
                       "engine_per_event_ms_p99",
                       "speedup_p50", "cache_hit_rate", "repair_rate",
                       "parity_max_rel_gap"]
+FEDERATED_ROW_KEYS = ["nodes", "jobs", "pools", "events",
+                      "decision_ms_p50", "decision_ms_p95",
+                      "decision_ms_p99", "monolithic_ms_p99",
+                      "monolithic_extrapolated",
+                      "speedup_p99_vs_monolithic",
+                      "cache_hit_rate", "repair_rate"]
 
 #: BENCH_chaos.json — the fault-injection MTBF sweep on the ``flaky``
 #: chaos scenario: efficiency retention under node kills, drains,
@@ -52,6 +65,26 @@ CHAOS_ROW_KEYS = ["mtbf_h", "u_chaos", "u_raw", "kills", "drains",
                   "recovered_cache_entries", "lost_progress_frac",
                   "events", "decision_ms_p50", "decision_ms_p95",
                   "decision_ms_p99"]
+
+#: BENCH_objectives.json — the policy portfolio sweep (Figs 12-13 +
+#: Tabs 3-4): per scenario × policy efficiency/fairness/deadline rows,
+#: plus the throughput-vs-efficiency metric arms on the diverse-DNN
+#: trace (the legacy ``bench_objective`` fig-12/13 measurement, folded
+#: in here when it moved onto the JSON path).
+OBJECTIVES_KEYS = ["schema", "generated_unix", "scale", "policies",
+                   "metrics"]
+OBJECTIVES_POLICY_ROW_KEYS = ["scenario", "policy", "efficiency_u",
+                              "jain_fairness", "min_norm_progress",
+                              "deadline_miss_rate", "solver_wall_s",
+                              "cache_hit_rate"]
+OBJECTIVES_METRIC_ROW_KEYS = ["metric", "total_samples",
+                              "rescale_cost_samples", "runtime_spread"]
+
+#: BENCH_scalability.json — paper Fig 15: HPO efficiency U per Tab-2
+#: DNN scalability class on the same unfillable-hole trace.
+SCALABILITY_KEYS = ["schema", "generated_unix", "trace", "rows"]
+SCALABILITY_TRACE_KEYS = ["n_nodes", "hours", "seed"]
+SCALABILITY_ROW_KEYS = ["dnn", "efficiency_u"]
 
 
 def bench_payload(schema: str) -> Dict:
@@ -95,6 +128,38 @@ def validate_bench_payload(payload: Dict) -> List[str]:
         else:
             for i, row in enumerate(rows):
                 need(row, ALLOCATOR_ROW_KEYS, f"allocator.sweep[{i}]")
+        fed = payload.get("federated", [])
+        if not isinstance(fed, list) or not fed:
+            errors.append("allocator.federated: expected a non-empty list")
+        else:
+            for i, row in enumerate(fed):
+                need(row, FEDERATED_ROW_KEYS, f"allocator.federated[{i}]")
+    elif schema == OBJECTIVES_SCHEMA:
+        need(payload, OBJECTIVES_KEYS, "objectives")
+        rows = payload.get("policies", [])
+        if not isinstance(rows, list) or not rows:
+            errors.append("objectives.policies: expected a non-empty list")
+        else:
+            for i, row in enumerate(rows):
+                need(row, OBJECTIVES_POLICY_ROW_KEYS,
+                     f"objectives.policies[{i}]")
+        rows = payload.get("metrics", [])
+        if not isinstance(rows, list) or not rows:
+            errors.append("objectives.metrics: expected a non-empty list")
+        else:
+            for i, row in enumerate(rows):
+                need(row, OBJECTIVES_METRIC_ROW_KEYS,
+                     f"objectives.metrics[{i}]")
+    elif schema == SCALABILITY_SCHEMA:
+        need(payload, SCALABILITY_KEYS, "scalability")
+        need(payload.get("trace", {}), SCALABILITY_TRACE_KEYS,
+             "scalability.trace")
+        rows = payload.get("rows", [])
+        if not isinstance(rows, list) or not rows:
+            errors.append("scalability.rows: expected a non-empty list")
+        else:
+            for i, row in enumerate(rows):
+                need(row, SCALABILITY_ROW_KEYS, f"scalability.rows[{i}]")
     elif schema == CHAOS_SCHEMA:
         need(payload, CHAOS_KEYS, "chaos")
         rows = payload.get("sweep", [])
@@ -105,7 +170,8 @@ def validate_bench_payload(payload: Dict) -> List[str]:
                 need(row, CHAOS_ROW_KEYS, f"chaos.sweep[{i}]")
     else:
         errors.append(f"unknown schema {schema!r} (expected {WEEK_SCHEMA!r}, "
-                      f"{ALLOCATOR_SCHEMA!r} or {CHAOS_SCHEMA!r})")
+                      f"{ALLOCATOR_SCHEMA!r}, {CHAOS_SCHEMA!r}, "
+                      f"{OBJECTIVES_SCHEMA!r} or {SCALABILITY_SCHEMA!r})")
     return errors
 
 

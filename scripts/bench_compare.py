@@ -1,0 +1,232 @@
+#!/usr/bin/env python
+"""Diff fresh BENCH_*.json perf artifacts against committed baselines.
+
+``benchmarks/baselines/BENCH_<name>.baseline.json`` holds smoke-mode
+artifacts committed with the repo; CI regenerates the same artifacts
+per commit and runs this script so a perf or quality regression fails
+the build instead of silently drifting.  Rows are matched by their
+natural keys (nodes × jobs for the allocator sweep, scenario × policy
+for the objectives sweep, …) and every shared numeric field is
+classified by name into a tolerance class:
+
+* **time-like** (``*_ms*``, ``*wall*``, ``*_s`` suffixes) — flagged
+  only when the fresh value exceeds baseline × ``--time-tol`` (default
+  4.0: CI runners are noisy, so only order-of-magnitude regressions
+  should fail; improvements never do);
+* **parity/gap** — solution-parity fields; fresh must stay ≤
+  max(baseline × 10, 2e-3).  The absolute floor is 2× the engine's
+  ``repair_gap`` acceptance bound (1e-3): a run may legitimately land
+  anywhere in [0, repair_gap] depending on which events the wall-clock
+  budget lets escalate, so only gaps past the contract are
+  regressions;
+* **quality** (efficiency ``u``, fairness, hit/miss rates) — bounded
+  drift: |fresh − baseline| ≤ ``--quality-tol`` (default 0.25);
+* everything else (counts, flags, schema strings) — exact for strings
+  and booleans, informational for numbers.
+
+Rows present in the baseline but missing fresh are failures (a tier
+was dropped); new fresh rows are reported but pass (a tier was added).
+
+Usage:
+    python scripts/bench_compare.py [--baseline-dir benchmarks/baselines]
+                                    [--fresh-dir .] [names...]
+
+``names`` restricts the comparison (e.g. ``allocator objectives``);
+default is every baseline present.  Exits non-zero on any violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+#: baseline-row keys used to match a fresh row, per artifact kind and
+#: row-list key.  Artifact kind = the <name> in BENCH_<name>.json.
+ROW_KEYS = {
+    ("allocator", "sweep"): ("nodes", "jobs"),
+    ("allocator", "federated"): ("nodes", "pools"),
+    ("chaos", "sweep"): ("mtbf_h",),
+    ("objectives", "policies"): ("scenario", "policy"),
+    ("objectives", "metrics"): ("metric",),
+    ("scalability", "rows"): ("dnn",),
+}
+
+#: top-level keys that are never compared numerically
+SKIP_FIELDS = {"schema", "generated_unix"}
+
+
+def _classify(field: str) -> str:
+    f = field.lower()
+    if "parity" in f or "gap" in f:
+        return "parity"
+    if "ms" in f or "wall" in f or f.endswith("_s") or f == "speedup" \
+            or "speedup" in f:
+        return "time"
+    if ("rate" in f or "fairness" in f or "progress" in f
+            or f.startswith("u_") or f.endswith("_u") or f == "u"
+            or "spread" in f or "frac" in f):
+        return "quality"
+    return "info"
+
+
+class Comparison:
+    def __init__(self, time_tol: float, quality_tol: float):
+        self.time_tol = time_tol
+        self.quality_tol = quality_tol
+        self.failures: list = []
+        self.notes: list = []
+
+    def field(self, where: str, name: str, base, fresh) -> None:
+        if name in SKIP_FIELDS:
+            return
+        if isinstance(base, str) or isinstance(base, bool):
+            if base != fresh:
+                # schema strings must match exactly; flags (e.g.
+                # monolithic_extrapolated) flipping is a real change
+                self.failures.append(
+                    f"{where}.{name}: {base!r} -> {fresh!r}")
+            return
+        if not isinstance(base, (int, float)) or \
+                not isinstance(fresh, (int, float)):
+            return
+        cls = _classify(name)
+        if cls == "time":
+            # speedups regress downward, walls regress upward
+            if "speedup" in name.lower():
+                if fresh < base / self.time_tol:
+                    self.failures.append(
+                        f"{where}.{name}: speedup {base:.2f} -> "
+                        f"{fresh:.2f} (< 1/{self.time_tol:g} of baseline)")
+            elif fresh > base * self.time_tol and fresh > 1.0:
+                self.failures.append(
+                    f"{where}.{name}: {base:.3g} -> {fresh:.3g} "
+                    f"(> {self.time_tol:g}x baseline)")
+        elif cls == "parity":
+            # floor = 2x the engine's repair_gap acceptance bound:
+            # parity varies in [0, repair_gap] run-to-run (wall-clock
+            # budget gating), so only contract violations fail
+            ceiling = max(base * 10.0, 2e-3)
+            if fresh > ceiling:
+                self.failures.append(
+                    f"{where}.{name}: parity {base:.3g} -> {fresh:.3g} "
+                    f"(> {ceiling:.3g})")
+        elif cls == "quality":
+            if abs(fresh - base) > self.quality_tol:
+                self.failures.append(
+                    f"{where}.{name}: {base:.3f} -> {fresh:.3f} "
+                    f"(drift > {self.quality_tol:g})")
+        else:
+            if fresh != base:
+                self.notes.append(
+                    f"{where}.{name}: {base!r} -> {fresh!r} (info)")
+
+
+def compare_payloads(kind: str, base: dict, fresh: dict,
+                     cmp: Comparison) -> None:
+    if base.get("schema") != fresh.get("schema"):
+        cmp.failures.append(
+            f"{kind}: schema {base.get('schema')!r} != "
+            f"{fresh.get('schema')!r} — regenerate the baseline")
+        return
+    for key, value in base.items():
+        if key in SKIP_FIELDS:
+            continue
+        where = f"{kind}.{key}"
+        if isinstance(value, list) and (kind, key) in ROW_KEYS:
+            match_on = ROW_KEYS[(kind, key)]
+            fresh_rows = {
+                tuple(r.get(k) for k in match_on): r
+                for r in fresh.get(key, []) if isinstance(r, dict)}
+            for row in value:
+                rid = tuple(row.get(k) for k in match_on)
+                label = f"{where}[{'/'.join(str(x) for x in rid)}]"
+                if rid not in fresh_rows:
+                    cmp.failures.append(f"{label}: row missing from "
+                                        f"fresh artifact")
+                    continue
+                for fname, fval in row.items():
+                    if fname in fresh_rows[rid]:
+                        cmp.field(label, fname, fval,
+                                  fresh_rows[rid][fname])
+            extra = set(fresh_rows) - {
+                tuple(r.get(k) for k in match_on) for r in value}
+            for rid in sorted(extra, key=str):
+                cmp.notes.append(f"{where}: new row "
+                                 f"{'/'.join(str(x) for x in rid)}")
+        elif isinstance(value, dict):
+            # e.g. week.arms / week.trace: recurse one level by name
+            for sub, subrow in value.items():
+                if isinstance(subrow, dict):
+                    if sub not in fresh.get(key, {}):
+                        cmp.failures.append(f"{where}[{sub}]: missing")
+                        continue
+                    for fname, fval in subrow.items():
+                        if fname in fresh[key][sub]:
+                            cmp.field(f"{where}[{sub}]", fname, fval,
+                                      fresh[key][sub][fname])
+                else:
+                    if key in fresh and sub in fresh[key]:
+                        cmp.field(where, sub, subrow, fresh[key][sub])
+        elif not isinstance(value, list):
+            if key in fresh:
+                cmp.field(kind, key, value, fresh[key])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*",
+                    help="artifact kinds to compare (default: all "
+                         "baselines present)")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--fresh-dir", default=".")
+    ap.add_argument("--time-tol", type=float, default=4.0,
+                    help="wall-time regression factor (default 4x)")
+    ap.add_argument("--quality-tol", type=float, default=0.25,
+                    help="absolute quality-metric drift (default 0.25)")
+    args = ap.parse_args(argv)
+
+    base_dir = Path(args.baseline_dir)
+    fresh_dir = Path(args.fresh_dir)
+    baselines = sorted(base_dir.glob("BENCH_*.baseline.json"))
+    if args.names:
+        baselines = [p for p in baselines
+                     if p.name.replace("BENCH_", "").replace(
+                         ".baseline.json", "") in set(args.names)]
+    if not baselines:
+        print(f"bench-compare: no baselines found in {base_dir}")
+        return 1
+
+    cmp = Comparison(args.time_tol, args.quality_tol)
+    compared = 0
+    for bpath in baselines:
+        kind = bpath.name.replace("BENCH_", "").replace(
+            ".baseline.json", "")
+        fpath = fresh_dir / f"BENCH_{kind}.json"
+        if not fpath.exists():
+            print(f"bench-compare: {fpath} not present, skipping {kind}")
+            continue
+        with open(bpath, encoding="utf-8") as f:
+            base = json.load(f)
+        with open(fpath, encoding="utf-8") as f:
+            fresh = json.load(f)
+        compared += 1
+        compare_payloads(kind, base, fresh, cmp)
+
+    for note in cmp.notes:
+        print(f"  note: {note}")
+    if cmp.failures:
+        print(f"bench-compare: {len(cmp.failures)} regression(s) vs "
+              f"baseline:")
+        for fail in cmp.failures:
+            print(f"  FAIL: {fail}")
+        return 1
+    if compared == 0:
+        print("bench-compare: nothing compared (no fresh artifacts)")
+        return 0
+    print(f"bench-compare: OK ({compared} artifact(s) within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

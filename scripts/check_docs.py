@@ -88,8 +88,16 @@ def check_bench_schema(root: Path) -> list:
         "BENCH_week.json arms.*": schema.WEEK_ARM_KEYS,
         "BENCH_allocator.json": schema.ALLOCATOR_KEYS,
         "BENCH_allocator.json sweep[]": schema.ALLOCATOR_ROW_KEYS,
+        "BENCH_allocator.json federated[]": schema.FEDERATED_ROW_KEYS,
         "BENCH_chaos.json": schema.CHAOS_KEYS,
         "BENCH_chaos.json sweep[]": schema.CHAOS_ROW_KEYS,
+        "BENCH_objectives.json": schema.OBJECTIVES_KEYS,
+        "BENCH_objectives.json policies[]":
+            schema.OBJECTIVES_POLICY_ROW_KEYS,
+        "BENCH_objectives.json metrics[]":
+            schema.OBJECTIVES_METRIC_ROW_KEYS,
+        "BENCH_scalability.json": schema.SCALABILITY_KEYS,
+        "BENCH_scalability.json rows[]": schema.SCALABILITY_ROW_KEYS,
     }
     failures = []
     exp = root / "EXPERIMENTS.md"
@@ -114,10 +122,16 @@ def check_bench_schema(root: Path) -> list:
                 f"{exp}: {name!r} keys {sorted(documented[name])} != "
                 f"benchmarks.schema {sorted(keys)}")
     for artifact in ("BENCH_week.json", "BENCH_allocator.json",
-                     "BENCH_chaos.json"):
+                     "BENCH_chaos.json", "BENCH_objectives.json",
+                     "BENCH_scalability.json"):
         p = root / artifact
         if p.exists():
             failures.extend(schema.validate_bench_file(str(p)))
+    # committed baselines must conform to the same schemas — they are
+    # what scripts/bench_compare.py diffs CI's fresh artifacts against
+    for p in sorted((root / "benchmarks" / "baselines").glob(
+            "BENCH_*.baseline.json")):
+        failures.extend(schema.validate_bench_file(str(p)))
     return failures
 
 

@@ -26,7 +26,12 @@ from repro.chaos.faults import (
     generate_fault_schedule,
     inject_faults,
 )
-from repro.chaos.harness import ChaosReport, run_chaos
+from repro.chaos.harness import (
+    ChaosReport,
+    FederatedChaosReport,
+    run_chaos,
+    run_federated_chaos,
+)
 
 __all__ = [
     "ChaosSpec",
@@ -37,5 +42,7 @@ __all__ = [
     "ChaosBackend",
     "RestartingAllocator",
     "ChaosReport",
+    "FederatedChaosReport",
     "run_chaos",
+    "run_federated_chaos",
 ]

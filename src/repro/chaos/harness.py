@@ -126,3 +126,100 @@ def run_chaos(events: Sequence[PoolEvent], jobs: Sequence[TrainerJob],
         allocator_restarts=allocator.restarts,
         recovered_cache_entries=allocator.recovered_entries,
         corrupt_restores=chaos_backend.corrupt_restores)
+
+
+@dataclass
+class FederatedChaosReport:
+    """Fleet-level chaos report: ``FederatedStats`` plus the fault and
+    recovery bookkeeping summed over the per-pool allocators/backends."""
+    stats: object                       # repro.federation.FederatedStats
+    spec: ChaosSpec
+    schedule: FaultSchedule
+    events: List[PoolEvent]
+    jobs: List[TrainerJob]
+    pool_node_seconds: float
+    allocator_restarts: int = 0
+    recovered_cache_entries: int = 0
+    corrupt_restores: int = 0
+
+    @property
+    def n_kills(self) -> int:
+        return len(self.schedule.kills)
+
+    @property
+    def allocated_node_seconds(self) -> float:
+        return sum(j.node_seconds for j in self.jobs)
+
+
+def run_federated_chaos(events: Sequence[PoolEvent],
+                        jobs: Sequence[TrainerJob], spec: ChaosSpec, *,
+                        n_pools: int = 4, pool_map=None,
+                        engine_factory: Callable[[],
+                                                 AllocationEngine] = None,
+                        t_fwd=120.0, pj_max: int = 10,
+                        horizon: Optional[float] = None,
+                        coalesce_window: float = 0.0, objective=None,
+                        telemetry=None, epoch_s: Optional[float] = None,
+                        migration_cost_s: float = 0.0,
+                        parallel: bool = True) -> FederatedChaosReport:
+    """Federated counterpart of :func:`run_chaos` (DESIGN.md §14).
+
+    Faults are generated and injected into the *fleet* stream — per-pool
+    failures emerge from node → pool ownership when the router splits it
+    — and every pool gets its own ``RestartingAllocator`` (same crash
+    schedule: a control-plane crash takes all pools down together, the
+    correlated-failure worst case) over a shared fault schedule, with
+    per-pool ``ChaosBackend`` wrappers.  Warm-state recovery is
+    therefore exercised pool-by-pool, including across migrations.
+    """
+    from repro.federation import FederatedLoop
+
+    jobs = list(jobs)
+    for j in jobs:
+        if spec.ckpt_every is not None:
+            j.ckpt_every = spec.ckpt_every
+        if spec.restart_penalty:
+            j.restart_penalty = spec.restart_penalty
+    schedule = generate_fault_schedule(events, spec)
+    chaos_events = inject_faults(events, schedule)
+    if horizon is None:
+        horizon = max((e.time for e in chaos_events), default=0.0)
+    crash_times: List[float] = []
+    if spec.crash_every and chaos_events:
+        t = chaos_events[0].time + spec.crash_every
+        while t < horizon:
+            crash_times.append(t)
+            t += spec.crash_every
+
+    allocators: List[RestartingAllocator] = []
+    backends: List[ChaosBackend] = []
+
+    def make_allocator(k: int) -> RestartingAllocator:
+        alloc = RestartingAllocator(
+            engine_factory, crash_times=list(crash_times),
+            snapshot_every=spec.snapshot_every,
+            warm_restart=spec.warm_restart, telemetry=telemetry)
+        allocators.append(alloc)
+        return alloc
+
+    def make_backend(k: int) -> ChaosBackend:
+        b = ChaosBackend(AnalyticBackend(), schedule)
+        backends.append(b)
+        return b
+
+    fed = FederatedLoop(
+        chaos_events, jobs, pool_map=pool_map, n_pools=n_pools,
+        allocator_factory=make_allocator, backend_factory=make_backend,
+        t_fwd=t_fwd, pj_max=pj_max, horizon=horizon,
+        coalesce_window=coalesce_window, objective=objective,
+        telemetry=telemetry, epoch_s=epoch_s,
+        migration_cost_s=migration_cost_s, parallel=parallel)
+    stats = fed.run()
+    return FederatedChaosReport(
+        stats=stats, spec=spec, schedule=schedule,
+        events=chaos_events, jobs=jobs,
+        pool_node_seconds=pool_node_seconds(chaos_events, horizon),
+        allocator_restarts=sum(a.restarts for a in allocators),
+        recovered_cache_entries=sum(a.recovered_entries
+                                    for a in allocators),
+        corrupt_restores=sum(b.corrupt_restores for b in backends))

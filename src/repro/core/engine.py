@@ -146,6 +146,30 @@ class EngineStats:
             vals[f.name] = float(v) if f.name == "wall_time" else int(v)
         return cls(**vals)
 
+    def merged(self, other: "EngineStats") -> "EngineStats":
+        """Field-wise sum — the composition law for fleet-level stats."""
+        return EngineStats(**{
+            f.name: getattr(self, f.name) + getattr(other, f.name)
+            for f in dataclasses.fields(EngineStats)})
+
+    @classmethod
+    def sum_of(cls, stats: "List[EngineStats]") -> "EngineStats":
+        """Compose per-pool engine stats into one fleet view — every
+        counter is a plain sum (used by ``repro.federation``)."""
+        out = cls()
+        for s in stats:
+            out = out.merged(s)
+        return out
+
+
+#: precomputed hub counter names — the per-decision mirror must not pay
+#: an f-string per increment on the hot path (EXPERIMENTS.md §Telemetry)
+_MIRROR_NAMES = {f.name: f"engine.{f.name}"
+                 for f in dataclasses.fields(EngineStats)}
+#: precomputed per-arm decision-latency histogram names
+_ARM_HIST = {arm: f"engine.decision_ms.{arm}"
+             for arm in ("cache", "repair", "greedy", "milp", "fallback")}
+
 
 def _decision_arm(solver_status: str) -> str:
     """Classify a result's producing solver arm for the per-arm
@@ -250,12 +274,27 @@ class AllocationEngine(Allocator):
         self.name = "engine"
         self.stats = EngineStats()
         self._cache: "OrderedDict[Signature, Tuple[Tuple[int, ...], Optional[float], str]]" = OrderedDict()
+        # per-decision mirror buffer: increments land here (plain dict,
+        # no string formatting) and flush into the hub once per decision
+        # — batching the hub traffic out of the engine inner loop
+        self._pending: Dict[str, float] = {}
 
     def _count(self, name: str, delta=1) -> None:
-        """Bump an ``EngineStats`` counter and mirror it into the hub."""
+        """Bump an ``EngineStats`` counter; the hub mirror is batched
+        (``_flush_counts``) so the inner loop never formats names or
+        touches the hub per increment."""
         setattr(self.stats, name, getattr(self.stats, name) + delta)
         if self.telemetry:
-            self.telemetry.count(f"engine.{name}", delta)
+            self._pending[name] = self._pending.get(name, 0) + delta
+
+    def _flush_counts(self) -> None:
+        """Push the buffered per-decision increments into the hub in one
+        pass (precomputed names; see EXPERIMENTS.md §Telemetry)."""
+        if self._pending:
+            count = self.telemetry.count
+            for name, delta in self._pending.items():
+                count(_MIRROR_NAMES[name], delta)
+            self._pending.clear()
 
     # ------------------------------------------------------------------
 
@@ -290,10 +329,10 @@ class AllocationEngine(Allocator):
         self._count("wall_time", res.wall_time)
         tel = self.telemetry
         if tel:
+            self._flush_counts()
             ms = res.wall_time * 1e3
             tel.observe("engine.decision_ms", ms)
-            tel.observe(
-                f"engine.decision_ms.{_decision_arm(res.solver_status)}", ms)
+            tel.observe(_ARM_HIST[_decision_arm(res.solver_status)], ms)
 
     def clear_cache(self) -> None:
         self._cache.clear()
@@ -345,6 +384,8 @@ class AllocationEngine(Allocator):
             self._cache.popitem(last=False)
         self._count("restores")
         self._count("restored_entries", len(self._cache))
+        if self.telemetry:
+            self._flush_counts()
         return len(self._cache)
 
     @classmethod

@@ -14,7 +14,7 @@ scale-down.  ``failed`` tuples are produced by the fault-injection layer
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Sequence, Set, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -39,6 +39,10 @@ class PoolEvent:
     # ``left``, but the loop additionally applies restart-penalty /
     # checkpoint-rollback semantics (DESIGN.md §12)
     failed: Tuple[int, ...] = ()
+    # owning pool shard on the federated path (DESIGN.md §14); ``None``
+    # on single-pool streams.  Set by ``split_events_by_pool`` — every
+    # node in a tagged event belongs to that pool.
+    pool: Optional[int] = None
 
 
 def fragments_to_events(fragments: Sequence[Fragment]) -> List[PoolEvent]:
@@ -103,6 +107,48 @@ def merge_events(events: Sequence[PoolEvent]) -> List[PoolEvent]:
                                     if v == "fail")))
         else:
             out.append(e)
+    return out
+
+
+def split_events_by_pool(events: Sequence[PoolEvent],
+                         pool_of: Callable[[int], int]
+                         ) -> Dict[int, List[PoolEvent]]:
+    """Split a fleet event stream into per-pool, pool-tagged substreams.
+
+    This is the federated ingestion primitive (DESIGN.md §14): an event
+    touching nodes of pools {1, 3} becomes one sub-event in pool 1's
+    stream and one in pool 3's — the other K−2 pools never see it, so a
+    pool's decision cadence depends only on its own churn, never on the
+    fleet's merged timeline.  Each sub-event carries ``pool=k`` and only
+    that pool's nodes; within each substream, relative event order (and
+    therefore sequential-application semantics) is preserved.
+    """
+    out: Dict[int, List[PoolEvent]] = {}
+    for e in events:
+        buckets: Dict[int, Dict[str, List[int]]] = {}
+        for attr in ("joined", "left", "failed"):
+            for n in getattr(e, attr):
+                b = buckets.setdefault(pool_of(n), {"joined": [], "left": [],
+                                                    "failed": []})
+                b[attr].append(n)
+        for k in sorted(buckets):
+            b = buckets[k]
+            out.setdefault(k, []).append(PoolEvent(
+                time=e.time, joined=tuple(b["joined"]),
+                left=tuple(b["left"]), failed=tuple(b["failed"]), pool=k))
+    return out
+
+
+def apply_events(live: Set[int], events: Sequence[PoolEvent]) -> Set[int]:
+    """Fold ``events`` over a live-node set: joins add, leaves and
+    failures remove.  Returns a new set (``live`` is not mutated) — the
+    federated layer uses this to carry each pool's membership across
+    decision epochs even when the pool's loop short-circuits."""
+    out = set(live)
+    for e in events:
+        out.update(e.joined)
+        out.difference_update(e.left)
+        out.difference_update(e.failed)
     return out
 
 

@@ -214,6 +214,16 @@ class ControlLoop:
         and pool counter tracks (DESIGN.md §13).  Default is the no-op
         ``NULL_TELEMETRY``; the loop never *reads* telemetry, so an
         enabled hub cannot change any decision or stat.
+    t_start : float, optional
+        Resume the loop mid-trace: integration starts at ``t_start``
+        (events before it are dropped, arrivals before it admit at it)
+        instead of the first timeline point.  Used by the federated
+        epoch replay (DESIGN.md §14) to run one decision epoch per call
+        while job state carries across calls.  ``None`` (default) keeps
+        the from-the-top semantics bit-identical.
+    initial_pool : sequence of int, optional
+        Idle-pool membership at ``t_start`` (nodes that joined before
+        the window).  Only meaningful with ``t_start``; default empty.
     """
 
     def __init__(self, events: Sequence[PoolEvent],
@@ -221,8 +231,12 @@ class ControlLoop:
                  backend, *, t_fwd: Union[float, str] = 120.0,
                  pj_max: int = 10, horizon: Optional[float] = None,
                  sos2_points: int = 8, coalesce_window: float = 0.0,
-                 objective=None, telemetry: Optional[Telemetry] = None):
+                 objective=None, telemetry: Optional[Telemetry] = None,
+                 t_start: Optional[float] = None,
+                 initial_pool: Sequence[int] = ()):
         self.events = sorted(events, key=lambda e: e.time)
+        self.t_start = t_start
+        self.initial_pool = tuple(initial_pool)
         self.jobs = sorted(jobs, key=lambda j: (j.arrival, j.id))
         self.allocator = allocator
         self.backend = backend
@@ -254,7 +268,7 @@ class ControlLoop:
                                                            NULL_TELEMETRY):
             backend.telemetry = tel
         backend.bind(jobs)
-        pool: set[int] = set()
+        pool: set[int] = set(self.initial_pool)
         qi = 0                                        # FCFS admission pointer
         active: List[TrainerJob] = []
         finished: List[TrainerJob] = []
@@ -265,10 +279,16 @@ class ControlLoop:
         # one event per time point (hand-built streams may carry several
         # events at one timestamp; sequential last-action-wins semantics)
         events = merge_events(self.events)
+        t0 = self.t_start
+        if t0 is not None:
+            events = [e for e in events if e.time >= t0]
         # merged timeline: pool events + job arrivals (+ completions found
-        # during integration)
+        # during integration).  On a windowed run, arrivals before the
+        # window admit at its opening instant (FCFS order is preserved:
+        # jobs stay sorted by their true arrival).
         times = sorted({e.time for e in events}
-                       | {j.arrival for j in jobs})
+                       | {j.arrival if t0 is None else max(j.arrival, t0)
+                          for j in jobs})
         ev_by_time: Dict[float, PoolEvent] = {e.time: e for e in events}
         if not times:
             return LoopStats(0.0, 0.0, 0, self.allocator.name, {}, 0.0, 0.0,

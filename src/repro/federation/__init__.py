@@ -1,0 +1,29 @@
+"""Federated multi-pool allocation (DESIGN.md §14).
+
+Shards the fleet into K pools — one independent allocation engine and
+event queue per pool, parallel per-pool solves, and a slow-cadence
+cross-pool rebalancer — so fleet-wide decision latency stays at
+single-pool scale while the node count grows by the pool count.
+"""
+from repro.federation.engine import (
+    FEDERATION_SNAPSHOT_SCHEMA,
+    FederatedEngine,
+)
+from repro.federation.ingest import EventRouter
+from repro.federation.loop import FederatedLoop, FederatedStats, PoolStats
+from repro.federation.rebalance import Migration, PoolView, Rebalancer
+from repro.federation.sharding import PoolMap, assign_jobs
+
+__all__ = [
+    "FEDERATION_SNAPSHOT_SCHEMA",
+    "EventRouter",
+    "FederatedEngine",
+    "FederatedLoop",
+    "FederatedStats",
+    "Migration",
+    "PoolMap",
+    "PoolStats",
+    "PoolView",
+    "Rebalancer",
+    "assign_jobs",
+]

@@ -1,0 +1,134 @@
+"""FederatedEngine: K independent per-pool allocators (DESIGN.md §14).
+
+One ``AllocationEngine`` (or any ``Allocator``, e.g. a chaos-wrapped
+``RestartingAllocator``) per pool, built lazily from a factory.  The
+federated engine never merges sub-problems — pool k's problems go to
+pool k's engine, full stop — so caches, warm-start state and stats stay
+pool-local, and the fleet view is pure composition:
+
+* ``stats()``       — ``EngineStats.sum_of`` over the pools;
+* ``snapshot()``    — versioned fleet snapshot embedding one engine
+  snapshot per pool (warm-state recovery for the whole federation in
+  one artifact);
+* ``restore()``     — per-pool warm restore, tolerant of pool-count
+  mismatch only in the strict sense: it refuses, because silently
+  rekeying pools would corrupt warm-start state.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.core.allocator import Allocator
+from repro.core.engine import AllocationEngine, EngineStats
+from repro.core.milp import AllocationProblem, AllocationResult
+from repro.federation.sharding import PoolMap
+
+# Versioned schema tag for fleet-wide warm-state snapshots; the per-pool
+# payloads carry their own engine-level schema tag.
+FEDERATION_SNAPSHOT_SCHEMA = "bftrainer-federation-snapshot/1"
+
+
+class FederatedEngine:
+    """K per-pool allocators behind one façade.
+
+    Parameters
+    ----------
+    pool_map : PoolMap
+        Static node → pool ownership.
+    factory : Callable[[int], Allocator]
+        Builds pool k's allocator; defaults to a fresh
+        ``AllocationEngine()`` per pool.
+    """
+
+    def __init__(self, pool_map: PoolMap,
+                 factory: Optional[Callable[[int], Allocator]] = None):
+        self.pool_map = pool_map
+        self._factory = factory or (lambda k: AllocationEngine())
+        self.engines: Dict[int, Allocator] = {
+            k: self._factory(k) for k in range(pool_map.n_pools)}
+        self.name = f"federated(x{pool_map.n_pools})"
+
+    @property
+    def n_pools(self) -> int:
+        return self.pool_map.n_pools
+
+    def engine(self, pool: int) -> Allocator:
+        return self.engines[pool]
+
+    def allocate(self, pool: int, prob: AllocationProblem
+                 ) -> AllocationResult:
+        """Solve one pool-local problem with that pool's engine."""
+        return self.engines[pool].allocate(prob)
+
+    # -- fleet composition ---------------------------------------------
+
+    def stats(self) -> EngineStats:
+        """Fleet totals: sum of per-pool ``EngineStats`` (pools whose
+        allocator keeps no stats contribute zeros)."""
+        per_pool = []
+        for eng in self.engines.values():
+            s = self._engine_of(eng)
+            if s is not None:
+                per_pool.append(s.stats)
+        return EngineStats.sum_of(per_pool)
+
+    def pool_stats(self) -> Dict[int, EngineStats]:
+        out = {}
+        for k, eng in self.engines.items():
+            s = self._engine_of(eng)
+            if s is not None:
+                out[k] = s.stats
+        return out
+
+    @staticmethod
+    def _engine_of(alloc: Allocator) -> Optional[AllocationEngine]:
+        """Unwrap to the underlying ``AllocationEngine`` if there is one
+        (``RestartingAllocator`` exposes it as ``.engine``)."""
+        if isinstance(alloc, AllocationEngine):
+            return alloc
+        inner = getattr(alloc, "engine", None)
+        return inner if isinstance(inner, AllocationEngine) else None
+
+    # -- fleet warm-state snapshot / recovery (DESIGN.md §12, §14) -----
+
+    def snapshot(self) -> Dict:
+        """One artifact holding every pool's engine snapshot.  Pools
+        whose allocator exposes no snapshotable engine store ``None``
+        (they restart cold on restore)."""
+        pools = {}
+        for k, alloc in self.engines.items():
+            eng = self._engine_of(alloc)
+            pools[str(k)] = eng.snapshot() if eng is not None else None
+        return {
+            "schema": FEDERATION_SNAPSHOT_SCHEMA,
+            "n_pools": self.n_pools,
+            "pools": pools,
+        }
+
+    def restore(self, snap: Dict) -> int:
+        """Warm-restore every pool from a fleet snapshot.  Returns the
+        total number of cache entries recovered across pools."""
+        if snap.get("schema") != FEDERATION_SNAPSHOT_SCHEMA:
+            raise ValueError(
+                f"unknown federation-snapshot schema {snap.get('schema')!r} "
+                f"(expected {FEDERATION_SNAPSHOT_SCHEMA!r})")
+        if snap.get("n_pools") != self.n_pools:
+            raise ValueError(
+                f"snapshot has {snap.get('n_pools')} pools, "
+                f"this federation has {self.n_pools}")
+        recovered = 0
+        for k, alloc in self.engines.items():
+            sub = snap["pools"].get(str(k))
+            eng = self._engine_of(alloc)
+            if sub is not None and eng is not None:
+                recovered += eng.restore(sub)
+        return recovered
+
+    @classmethod
+    def from_snapshot(cls, snap: Dict, pool_map: PoolMap,
+                      factory: Optional[Callable[[int], Allocator]] = None
+                      ) -> "FederatedEngine":
+        """Build a fresh federation warmed from a fleet snapshot."""
+        fed = cls(pool_map, factory)
+        fed.restore(snap)
+        return fed

@@ -1,0 +1,77 @@
+"""Async event ingestion: per-pool FIFO queues (DESIGN.md §14).
+
+The federated control plane never hands a pool the fleet's merged
+timeline.  Incoming ``PoolEvent``s are routed to the owning pool's
+queue as they arrive (``EventRouter.ingest`` / ``push``) and each pool
+drains *its own* queue once per decision epoch — an event in pool 3
+wakes pool 3's engine and nobody else's.  Queues are plain FIFOs over
+an already time-sorted stream, so draining up to an epoch boundary is a
+pointer bump, not a sort.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.events import PoolEvent, merge_events
+from repro.federation.sharding import PoolMap
+
+
+class EventRouter:
+    """Routes a fleet event stream into K per-pool FIFO queues.
+
+    ``drain(k, upto)`` pops pool k's events strictly before ``upto`` —
+    epoch windows are half-open ``[t0, t1)``, so an event at exactly the
+    boundary belongs to the *next* epoch (matching ``ControlLoop``'s
+    ``t_start`` filter, which is inclusive).
+    """
+
+    def __init__(self, pool_map: PoolMap):
+        self.pool_map = pool_map
+        self._queues: Dict[int, List[PoolEvent]] = {
+            k: [] for k in range(pool_map.n_pools)}
+        self._heads: Dict[int, int] = {k: 0 for k in self._queues}
+
+    def push(self, event: PoolEvent) -> None:
+        """Enqueue one already pool-tagged event (``event.pool`` set)."""
+        if event.pool is None:
+            raise ValueError("push() requires a pool-tagged event; "
+                             "use ingest() for raw fleet events")
+        self._queues[event.pool].append(event)
+
+    def ingest(self, events: Sequence[PoolEvent]) -> None:
+        """Split a raw fleet stream by ownership and enqueue per pool."""
+        for k, evs in self.pool_map.split(merge_events(events)).items():
+            self._queues[k].extend(evs)
+
+    def drain(self, pool: int, upto: Optional[float] = None
+              ) -> List[PoolEvent]:
+        """Pop pool's queued events with ``time < upto`` (all if None)."""
+        q = self._queues[pool]
+        head = self._heads[pool]
+        if upto is None:
+            tail = len(q)
+        else:
+            tail = head
+            while tail < len(q) and q[tail].time < upto:
+                tail += 1
+        out = q[head:tail]
+        self._heads[pool] = tail
+        return out
+
+    def pending(self, pool: int) -> int:
+        return len(self._queues[pool]) - self._heads[pool]
+
+    def next_time(self, pool: int) -> Optional[float]:
+        """Timestamp of the pool's oldest undrained event, or None."""
+        q = self._queues[pool]
+        head = self._heads[pool]
+        return q[head].time if head < len(q) else None
+
+    def pools_with_pending(self, upto: Optional[float] = None) -> List[int]:
+        """Pools holding at least one undrained event (before ``upto``)."""
+        out = []
+        for k in self._queues:
+            t = self.next_time(k)
+            if t is not None and (upto is None or t < upto):
+                out.append(k)
+        return out

@@ -1,0 +1,505 @@
+"""FederatedLoop: K pool-local control loops + slow cross-pool
+rebalancing (DESIGN.md §14).
+
+Architecture
+------------
+The fleet is sharded by ``PoolMap`` into K pools.  Each pool owns an
+independent ``ControlLoop`` + ``Allocator`` pair and reacts *only* to
+its own events, drained from a per-pool FIFO (``EventRouter``) once per
+decision epoch — churn in pool 3 never triggers a re-solve in pool 0.
+Execution proceeds in epoch windows ``[a, b)``: every pool with queued
+events or unfinished jobs replays its window through a windowed
+``ControlLoop`` (``t_start=a``, ``initial_pool`` = the pool's live
+set), job state carrying across windows on the shared ``TrainerJob``
+objects.  Pool windows are disjoint in state, so they run concurrently
+(``parallel=True``) with deterministic results.
+
+At epoch boundaries (every ``rebalance_every``-th), the ``Rebalancer``
+compares per-pool ``Objective.upper_bound`` deficits and migrates whole
+jobs from persistently starved pools to pools with spare capacity,
+charging the teardown + transfer stall explicitly.
+
+Degenerate modes keep the semantics honest:
+
+* ``n_pools=1`` with default cadence runs ONE full-horizon
+  ``ControlLoop`` — bit-identical to the single-pool simulator (the
+  K=1 parity sweep in tests/test_federation.py);
+* rebalancing off (``rebalance=False``) runs each pool's full horizon
+  in one un-windowed shot — maximal asynchrony, zero epoch overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+from repro.core.allocator import Allocator
+from repro.core.backend import AnalyticBackend
+from repro.core.engine import AllocationEngine, EngineStats
+from repro.core.events import PoolEvent, apply_events, merge_events
+from repro.core.loop import ControlLoop, LoopStats, TrainerJob
+from repro.federation.engine import FederatedEngine
+from repro.federation.ingest import EventRouter
+from repro.federation.rebalance import Migration, PoolView, Rebalancer
+from repro.federation.sharding import PoolMap, assign_jobs
+from repro.obs.telemetry import NULL_TELEMETRY, Histogram, Telemetry
+
+
+@dataclass
+class PoolStats:
+    """Per-pool slice of a federated run."""
+    pool: int
+    n_jobs: int = 0                 # jobs owned at end of run
+    events_processed: int = 0       # solves this pool's loop performed
+    total_samples: float = 0.0
+    solver_wall: float = 0.0
+    supply_node_s: float = 0.0      # ∫ |live set| dt over the run
+    allocated_node_s: float = 0.0   # Σ job node-second deltas while owned
+    migrations_in: int = 0
+    migrations_out: int = 0
+    decision_walls: List[float] = field(default_factory=list)
+    engine: Optional[EngineStats] = None
+
+    def as_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["engine"] = self.engine.as_dict() if self.engine else None
+        return d
+
+
+def _percentile(walls: Sequence[float], q: float) -> float:
+    if not walls:
+        return 0.0
+    s = sorted(walls)
+    k = max(0, min(len(s) - 1, int(round(q / 100.0 * len(s))) - 1))
+    return s[k]
+
+
+@dataclass
+class FederatedStats:
+    """Fleet-level report: LoopStats-shaped totals + federation extras.
+
+    Job-derived totals (rescale/preempt/failure costs, runtimes) are
+    computed from the ``TrainerJob`` objects at end of run, so they
+    include migration charges; flow totals (samples, solves, solver
+    wall) are summed over per-pool epoch runs."""
+
+    total_samples: float
+    makespan: float
+    events_processed: int
+    allocator: str
+    per_trainer_runtime: Dict[int, float]
+    rescale_cost_samples: float
+    rescale_cost_s: float
+    preempt_cost_s: float
+    solver_wall_total: float
+    unfinished: int = 0
+    n_failures: int = 0
+    lost_progress: float = 0.0
+    restart_cost_s: float = 0.0
+    # -- federation extras --
+    n_pools: int = 1
+    epochs: int = 0
+    migrations: List[Migration] = field(default_factory=list)
+    migration_stall_s: float = 0.0
+    pools: List[PoolStats] = field(default_factory=list)
+
+    def decision_walls(self) -> List[float]:
+        """Fleet-wide per-solve wall times (seconds), pool order."""
+        out: List[float] = []
+        for p in self.pools:
+            out.extend(p.decision_walls)
+        return out
+
+    def decision_ms(self, q: float) -> float:
+        """Fleet decision-latency percentile in milliseconds."""
+        return _percentile(self.decision_walls(), q) * 1e3
+
+    def as_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["pools"] = [p.as_dict() for p in self.pools]
+        d["migrations"] = [dataclasses.asdict(m) for m in self.migrations]
+        return d
+
+
+def _supply_integral(size0: int, events: Sequence[PoolEvent],
+                     a: float, b: float) -> float:
+    """∫|live| dt over [a, b) given the window's (sorted) events."""
+    t, size, total = a, size0, 0.0
+    for e in events:
+        total += size * (e.time - t)
+        size += len(e.joined) - len(e.left) - len(e.failed)
+        t = e.time
+    return total + size * (b - t)
+
+
+class FederatedLoop:
+    """K pool-local control loops behind one run() (parameters mirror
+    ``ControlLoop``; federation knobs documented below).
+
+    Parameters
+    ----------
+    pool_map : PoolMap, optional
+        Node ownership; default ``PoolMap.stride(n_pools)``.
+    n_pools : int
+        Pool count when ``pool_map`` is not given (default 1).
+    allocator_factory : Callable[[int], Allocator], optional
+        Builds pool k's allocator (default: one ``AllocationEngine``
+        per pool, wired to that pool's telemetry hub).
+    backend_factory : Callable[[int], backend], optional
+        Builds pool k's execution backend (default ``AnalyticBackend``).
+    epoch_s : float, optional
+        Decision-epoch width (trace seconds).  Default: 1/16 of the
+        trace span when rebalancing, whole-horizon otherwise.  Also
+        forces the epoch path for ``n_pools=1`` when set explicitly
+        (used by the windowed-equivalence tests).
+    rebalance : bool
+        Enable the cross-pool rebalancer (default True; moot at K=1).
+    rebalance_every : int
+        Rebalance once per this many epochs (default 1).
+    rebalancer : Rebalancer, optional
+        Custom policy instance (overrides ``migration_cost_s``).
+    migration_cost_s : float
+        State-transfer stall charged per migrated job (seconds).
+    parallel : bool
+        Solve pool windows concurrently (default True).  Pool state is
+        disjoint, so results are identical either way.
+    """
+
+    def __init__(self, events: Sequence[PoolEvent],
+                 jobs: Sequence[TrainerJob], *,
+                 pool_map: Optional[PoolMap] = None, n_pools: int = 1,
+                 allocator_factory: Optional[
+                     Callable[[int], Allocator]] = None,
+                 backend_factory: Optional[Callable[[int], object]] = None,
+                 t_fwd: Union[float, str] = 120.0, pj_max: int = 10,
+                 horizon: Optional[float] = None, sos2_points: int = 8,
+                 coalesce_window: float = 0.0, objective=None,
+                 telemetry: Optional[Telemetry] = None,
+                 epoch_s: Optional[float] = None, rebalance: bool = True,
+                 rebalance_every: int = 1,
+                 rebalancer: Optional[Rebalancer] = None,
+                 migration_cost_s: float = 0.0, parallel: bool = True,
+                 max_workers: Optional[int] = None):
+        self.pool_map = pool_map or PoolMap.stride(n_pools)
+        K = self.pool_map.n_pools
+        self.events = list(events)
+        self.jobs = list(jobs)
+        self.t_fwd = t_fwd
+        self.pj_max = pj_max
+        self.horizon = horizon
+        self.sos2_points = sos2_points
+        self.coalesce_window = coalesce_window
+        self.objective = objective
+        self.telemetry = telemetry or NULL_TELEMETRY
+        self.epoch_s = epoch_s
+        self.rebalance = rebalance and K > 1
+        self.rebalance_every = max(1, rebalance_every)
+        self.migration_cost_s = migration_cost_s
+        self.rebalancer = rebalancer or Rebalancer(
+            migration_cost_s=migration_cost_s, sos2_points=sos2_points)
+        self.parallel = parallel
+        self.max_workers = max_workers
+        # nominal forward window for rebalance projections ("adaptive"
+        # resolves per-pool inside each ControlLoop; the rebalancer uses
+        # the paper's default constant)
+        self._t_fwd_nominal = (float(t_fwd)
+                               if not isinstance(t_fwd, str) else 120.0)
+
+        # per-pool telemetry hubs (only when observing: the federated
+        # path keeps the zero-overhead-when-disabled property)
+        if self.telemetry:
+            self._pool_tel: Dict[int, Telemetry] = {
+                k: Telemetry(exact_cap=self.telemetry.exact_cap)
+                for k in range(K)}
+        else:
+            self._pool_tel = {k: NULL_TELEMETRY for k in range(K)}
+
+        if allocator_factory is None:
+            allocator_factory = (
+                lambda k: AllocationEngine(telemetry=self._pool_tel[k]))
+        self.fed_engine = FederatedEngine(self.pool_map, allocator_factory)
+        self._backend_factory = backend_factory or (lambda k:
+                                                    AnalyticBackend())
+        self.backends = {k: self._backend_factory(k) for k in range(K)}
+
+    # ------------------------------------------------------------------
+
+    def run(self) -> FederatedStats:
+        K = self.pool_map.n_pools
+        events = merge_events(self.events)
+        jobs = sorted(self.jobs, key=lambda j: (j.arrival, j.id))
+
+        if not events and not jobs:
+            return FederatedStats(0.0, 0.0, 0, self.fed_engine.name, {},
+                                  0.0, 0.0, 0.0, 0.0, n_pools=K)
+
+        times = [e.time for e in events] + [j.arrival for j in jobs]
+        t0 = min(times)
+        t_end = self.horizon if self.horizon is not None else max(times)
+
+        # single-pool, default cadence: ONE full-horizon ControlLoop —
+        # the federation layer adds nothing, so it must cost nothing
+        # (and the K=1 parity tests hold by construction)
+        if K == 1 and self.epoch_s is None:
+            return self._run_single(events, jobs, t0, t_end)
+        # rebalancing off: maximal asynchrony — every pool replays its
+        # full horizon in one un-windowed shot
+        if not self.rebalance and self.epoch_s is None:
+            return self._run_async(events, jobs, t0, t_end)
+        return self._run_epochs(events, jobs, t0, t_end)
+
+    # -- degenerate modes ----------------------------------------------
+
+    def _pool_loop(self, k: int, events: Sequence[PoolEvent],
+                   jobs: Sequence[TrainerJob], *,
+                   t_start: Optional[float] = None,
+                   initial_pool: Sequence[int] = (),
+                   horizon: Optional[float] = None) -> ControlLoop:
+        return ControlLoop(
+            events, jobs, self.fed_engine.engine(k), self.backends[k],
+            t_fwd=self.t_fwd, pj_max=self.pj_max, horizon=horizon,
+            sos2_points=self.sos2_points,
+            coalesce_window=self.coalesce_window, objective=self.objective,
+            telemetry=self._pool_tel[k], t_start=t_start,
+            initial_pool=initial_pool)
+
+    def _run_single(self, events, jobs, t0, t_end) -> FederatedStats:
+        loop = self._pool_loop(0, events, jobs, horizon=self.horizon)
+        s = loop.run()
+        ps = PoolStats(
+            pool=0, n_jobs=len(jobs),
+            events_processed=s.events_processed,
+            total_samples=s.total_samples, solver_wall=s.solver_wall_total,
+            supply_node_s=_supply_integral(0, events, t0, t_end),
+            allocated_node_s=sum(j.node_seconds for j in jobs),
+            decision_walls=[r.solver_wall for r in s.event_records
+                            if r.solver_wall > 0.0])
+        stats = self._fleet_stats([s.total_samples], [ps], jobs,
+                                  makespan=s.makespan, epochs=1)
+        self._finish_telemetry(stats)
+        return stats
+
+    def _run_async(self, events, jobs, t0, t_end) -> FederatedStats:
+        router = EventRouter(self.pool_map)
+        router.ingest(events)
+        owned = self._assign(jobs)
+
+        def one(k: int):
+            evs = router.drain(k)
+            if not evs and not owned[k]:
+                return None, evs
+            loop = self._pool_loop(k, evs, owned[k], horizon=self.horizon)
+            return loop.run(), evs
+
+        results = self._map_pools(one)
+        pools, samples = [], []
+        for k, (s, evs) in enumerate(results):
+            ps = PoolStats(pool=k, n_jobs=len(owned[k]))
+            if s is not None:
+                ps.events_processed = s.events_processed
+                ps.total_samples = s.total_samples
+                ps.solver_wall = s.solver_wall_total
+                ps.decision_walls = [r.solver_wall for r in s.event_records
+                                     if r.solver_wall > 0.0]
+                samples.append(s.total_samples)
+            start = min([e.time for e in evs]
+                        + [j.arrival for j in owned[k]], default=t_end)
+            ps.supply_node_s = _supply_integral(0, evs, start, t_end)
+            ps.allocated_node_s = sum(j.node_seconds for j in owned[k])
+            pools.append(ps)
+        stats = self._fleet_stats(samples, pools, jobs,
+                                  makespan=self._makespan(jobs, t0, t_end),
+                                  epochs=1)
+        self._finish_telemetry(stats)
+        return stats
+
+    # -- the epoch-windowed federated path -----------------------------
+
+    def _run_epochs(self, events, jobs, t0, t_end) -> FederatedStats:
+        K = self.pool_map.n_pools
+        router = EventRouter(self.pool_map)
+        router.ingest(events)
+        owned = self._assign(jobs)
+        live: Dict[int, set] = {k: set() for k in range(K)}
+        pools = [PoolStats(pool=k) for k in range(K)]
+        migrations: List[Migration] = []
+        migration_stall = 0.0
+        span = max(t_end - t0, 0.0)
+        epoch_s = self.epoch_s if self.epoch_s is not None \
+            else max(span / 16.0, 1e-9)
+
+        def one(k: int, a: float, b: float, evs: List[PoolEvent]):
+            unfinished = [j for j in owned[k] if not j.finished]
+            if not evs and not unfinished:
+                return None
+            ns_before = sum(j.node_seconds for j in owned[k])
+            loop = self._pool_loop(k, evs, owned[k], t_start=a,
+                                   initial_pool=live[k], horizon=b)
+            s = loop.run()
+            return s, sum(j.node_seconds for j in owned[k]) - ns_before
+
+        a = t0
+        epoch = 0
+        samples: List[float] = []
+        while a < t_end or epoch == 0:
+            b = min(a + epoch_s, t_end) if a < t_end else t_end
+            epoch += 1
+            drained = {k: router.drain(k, b if b < t_end else None)
+                       for k in range(K)}
+            results = self._map_pools(
+                lambda k: one(k, a, b, drained[k]))
+            for k, res in enumerate(results):
+                ps = pools[k]
+                ps.supply_node_s += _supply_integral(len(live[k]),
+                                                     drained[k], a, b)
+                live[k] = apply_events(live[k], drained[k])
+                if res is None:
+                    continue
+                s, ns_delta = res
+                ps.events_processed += s.events_processed
+                ps.total_samples += s.total_samples
+                ps.solver_wall += s.solver_wall_total
+                ps.allocated_node_s += ns_delta
+                ps.decision_walls.extend(
+                    r.solver_wall for r in s.event_records
+                    if r.solver_wall > 0.0)
+                samples.append(s.total_samples)
+
+            # cross-pool rebalance on the slow clock
+            if self.rebalance and epoch % self.rebalance_every == 0 \
+                    and b < t_end:
+                views = [PoolView(k, len(live[k]),
+                                  [j for j in owned[k] if not j.finished])
+                         for k in range(K)]
+                for m in self.rebalancer.propose(self.objective, views,
+                                                 self._t_fwd_nominal, b):
+                    migration_stall += self._apply_migration(m, owned, b)
+                    pools[m.src].migrations_out += 1
+                    pools[m.dst].migrations_in += 1
+                    migrations.append(m)
+                    if self.telemetry:
+                        self.telemetry.instant(
+                            "federation", "migrate", b, job=m.job_id,
+                            src=m.src, dst=m.dst, gain=m.gain, loss=m.loss)
+
+            if b >= t_end:
+                break
+            a = b
+            if all(j.finished for j in jobs) and \
+                    not router.pools_with_pending():
+                break
+
+        for k in range(K):
+            pools[k].n_jobs = len(owned[k])
+        stats = self._fleet_stats(
+            samples, pools, jobs,
+            makespan=self._makespan(jobs, t0, t_end), epochs=epoch,
+            migrations=migrations, migration_stall_s=migration_stall)
+        self._finish_telemetry(stats)
+        return stats
+
+    def _apply_migration(self, m: Migration, owned, now: float) -> float:
+        """Move the job between ownership lists and charge the stall:
+        teardown ``r_dw`` if it held nodes, plus the transfer cost.
+        Returns the stall seconds charged."""
+        job = next(j for j in owned[m.src] if j.id == m.job_id)
+        owned[m.src].remove(job)
+        owned[m.dst].append(job)
+        stall = self.migration_cost_s
+        if job.nodes:
+            old = len(job.nodes)
+            job.rescale_cost_s += job.r_dw
+            job.rescale_cost_samples += job.curve(old) * job.r_dw
+            job.n_rescales += 1
+            job.nodes = []
+            stall += job.r_dw
+        if stall > 0.0:
+            job.busy_until = max(job.busy_until, now) + stall
+        return stall
+
+    # -- shared plumbing -----------------------------------------------
+
+    def _assign(self, jobs) -> Dict[int, List[TrainerJob]]:
+        """Initial job→pool placement, weighted by each pool's distinct
+        node count over the whole trace (capacity proxy)."""
+        K = self.pool_map.n_pools
+        seen: Dict[int, set] = {k: set() for k in range(K)}
+        for e in self.events:
+            for n in e.joined:
+                seen[self.pool_map(n)].add(n)
+        weights = [len(seen[k]) for k in range(K)]
+        if not any(weights):
+            weights = [1.0] * K
+        placement = assign_jobs(jobs, weights)
+        owned: Dict[int, List[TrainerJob]] = {k: [] for k in range(K)}
+        for j, k in zip(jobs, placement):
+            owned[k].append(j)
+        return owned
+
+    def _map_pools(self, fn):
+        K = self.pool_map.n_pools
+        if self.parallel and K > 1:
+            workers = self.max_workers or min(K, 8)
+            with ThreadPoolExecutor(max_workers=workers) as ex:
+                return list(ex.map(fn, range(K)))
+        return [fn(k) for k in range(K)]
+
+    def _makespan(self, jobs, t0, t_end) -> float:
+        ends = [j.finished_at for j in jobs if j.finished_at is not None]
+        if any(not j.finished for j in jobs):
+            return t_end - t0
+        return (max(ends) - t0) if ends else 0.0
+
+    def _fleet_stats(self, samples, pools, jobs, *, makespan, epochs,
+                     migrations=(), migration_stall_s=0.0
+                     ) -> FederatedStats:
+        for ps in pools:
+            ps.engine = self.fed_engine.pool_stats().get(ps.pool)
+        per_rt = {j.id: (j.finished_at - j.arrival) for j in jobs
+                  if j.finished_at is not None}
+        return FederatedStats(
+            total_samples=sum(samples),
+            makespan=makespan,
+            events_processed=sum(p.events_processed for p in pools),
+            allocator=self.fed_engine.name,
+            per_trainer_runtime=per_rt,
+            rescale_cost_samples=sum(j.rescale_cost_samples for j in jobs),
+            rescale_cost_s=sum(j.rescale_cost_s for j in jobs),
+            preempt_cost_s=sum(j.preempt_cost_s for j in jobs),
+            solver_wall_total=sum(p.solver_wall for p in pools),
+            unfinished=sum(1 for j in jobs if not j.finished),
+            n_failures=sum(j.n_failures for j in jobs),
+            lost_progress=sum(j.lost_progress for j in jobs),
+            restart_cost_s=sum(j.restart_cost_s for j in jobs),
+            n_pools=self.pool_map.n_pools,
+            epochs=epochs,
+            migrations=list(migrations),
+            migration_stall_s=migration_stall_s,
+            pools=pools,
+        )
+
+    def _finish_telemetry(self, stats: FederatedStats) -> None:
+        """Fold per-pool hubs into the fleet hub: namespaced per-pool
+        metrics + merged fleet decision-latency histograms + federation
+        gauges.  Pool order, so fleet traces are deterministic."""
+        tel = self.telemetry
+        if not tel:
+            return
+        for k in range(self.pool_map.n_pools):
+            sub = self._pool_tel[k]
+            tel.merge_from(sub, prefix=f"pool{k}.")
+            for src, dst in (("loop.decision_ms", "fleet.decision_ms"),
+                             ("engine.decision_ms",
+                              "fleet.engine.decision_ms")):
+                h = sub.histograms.get(src)
+                if h is not None:
+                    mine = tel.histograms.get(dst)
+                    if mine is None:
+                        mine = tel.histograms[dst] = Histogram(tel.exact_cap)
+                    mine.merge(h)
+        tel.gauge("fleet.n_pools", self.pool_map.n_pools)
+        tel.gauge("fleet.epochs", stats.epochs)
+        tel.gauge("fleet.migrations", len(stats.migrations))
+        tel.gauge("fleet.migration_stall_s", stats.migration_stall_s)
+        tel.gauge("fleet.total_samples", stats.total_samples)

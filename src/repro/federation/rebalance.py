@@ -1,0 +1,199 @@
+"""Cross-pool rebalancer: slow-cadence job migration (DESIGN.md §14).
+
+Pools solve independently at event cadence; imbalance between them —
+one pool starved of nodes while another has spare capacity — is
+corrected on a much slower clock by migrating whole *jobs* (never
+nodes: node ownership is static, see ``sharding.PoolMap``).
+
+Detection uses the policy's own cheap relaxation,
+``Objective.upper_bound``: a pool's *deficit* is the bound evaluated at
+unconstrained capacity minus the bound at its actual node count — how
+much objective the pool's demand leaves on the table because the pool
+is too small.  A pool must stay starved for ``patience`` consecutive
+rebalance rounds before it sheds load (transient churn heals itself at
+event cadence; migration must not chase it).
+
+A migration is proposed only when the projected gain at the destination
+exceeds the projected loss at the source plus the amortized migration
+cost — moves pay ``r_dw`` (source teardown) + ``migration_cost_s``
+(state transfer) in real stall, so marginal wins are not worth taking.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.objectives import resolve_objective
+
+
+@dataclass(frozen=True)
+class Migration:
+    """One accepted job move, with the projections that justified it."""
+    job_id: int
+    src: int
+    dst: int
+    time: float
+    gain: float       # projected objective gain at dst (bound units)
+    loss: float       # projected objective loss at src (bound units)
+
+
+@dataclass
+class PoolView:
+    """What the rebalancer sees of one pool: live node count + the
+    unfinished jobs it owns (active and queued — queued jobs are demand
+    too, and the cheapest to migrate)."""
+    pool: int
+    n_nodes: int
+    jobs: List = field(default_factory=list)
+
+
+class Rebalancer:
+    """Upper-bound-driven migration policy.
+
+    Parameters
+    ----------
+    patience : int
+        Consecutive starved rounds before a pool may shed a job.
+    starve_rel : float
+        Relative deficit (deficit / unconstrained bound) above which a
+        pool counts as starved.
+    max_moves : int
+        Migration cap per rebalance round (bounds cascade churn).
+    migration_cost_s : float
+        State-transfer stall (seconds) charged to a migrated job on top
+        of its ``r_dw`` teardown; also amortized into the accept test.
+    min_net_gain_rel : float
+        Minimum net gain, relative to the fleet bound, for a move to be
+        worth its churn.
+    """
+
+    def __init__(self, *, patience: int = 2, starve_rel: float = 0.05,
+                 max_moves: int = 2, migration_cost_s: float = 0.0,
+                 min_net_gain_rel: float = 1e-6, sos2_points: int = 8):
+        self.patience = patience
+        self.starve_rel = starve_rel
+        self.max_moves = max_moves
+        self.migration_cost_s = migration_cost_s
+        self.min_net_gain_rel = min_net_gain_rel
+        self.sos2_points = sos2_points
+        self.rounds = 0
+        self._streak: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+
+    def _bound(self, obj, specs, counts, n_nodes, t_fwd) -> Optional[float]:
+        if not specs:
+            return 0.0
+        return obj.upper_bound(specs, counts, n_nodes, t_fwd)
+
+    def propose(self, objective, views: Sequence[PoolView], t_fwd: float,
+                now: float) -> List[Migration]:
+        """One rebalance round: update starvation streaks, and for every
+        persistently starved pool propose the best net-gain migration.
+        Accepted moves update the working views, so multiple moves in
+        one round are mutually consistent.  Pure — applying the returned
+        migrations (ownership change + stall charge) is the caller's
+        job (``FederatedLoop``)."""
+        self.rounds += 1
+        obj = resolve_objective(objective)
+        specs = {v.pool: [j.spec(self.sos2_points, now=now) for j in v.jobs]
+                 for v in views}
+        counts = {v.pool: [len(j.nodes) for j in v.jobs] for v in views}
+        by_pool = {v.pool: v for v in views}
+
+        def cap_bound(k: int) -> Optional[float]:
+            return self._bound(obj, specs[k], counts[k],
+                               by_pool[k].n_nodes, t_fwd)
+
+        def demand_bound(k: int) -> Optional[float]:
+            demand = sum(t.n_max for t in specs[k])
+            return self._bound(obj, specs[k], counts[k], demand, t_fwd)
+
+        # -- starvation detection (with patience) ----------------------
+        deficits: Dict[int, float] = {}
+        fleet_scale = 0.0
+        bounded = True
+        for v in views:
+            cb, db = cap_bound(v.pool), demand_bound(v.pool)
+            if cb is None or db is None:
+                bounded = False
+                break
+            fleet_scale = max(fleet_scale, abs(db))
+            deficits[v.pool] = max(0.0, db - cb)
+        if not bounded:
+            # policy without a cheap bound: fall back to pure node
+            # arithmetic — starved means demand floor exceeds supply
+            fleet_scale = 1.0
+            deficits = {
+                v.pool: float(max(0, sum(j.n_min for j in v.jobs)
+                                  - v.n_nodes))
+                for v in views}
+        for v in views:
+            starved = deficits[v.pool] > self.starve_rel * max(fleet_scale,
+                                                               1e-12)
+            self._streak[v.pool] = (self._streak.get(v.pool, 0) + 1
+                                    if starved else 0)
+
+        ready = sorted((k for k, s in self._streak.items()
+                        if s >= self.patience and k in by_pool),
+                       key=lambda k: -deficits.get(k, 0.0))
+        if not ready:
+            return []
+
+        # -- candidate moves -------------------------------------------
+        moves: List[Migration] = []
+        for src in ready:
+            if len(moves) >= self.max_moves:
+                break
+            v = by_pool[src]
+            if not v.jobs:
+                continue
+            src_cb = cap_bound(src)
+            best = None
+            for ji, job in enumerate(v.jobs):
+                # loss at src: bound with the job removed
+                s_wo = specs[src][:ji] + specs[src][ji + 1:]
+                c_wo = counts[src][:ji] + counts[src][ji + 1:]
+                src_wo = self._bound(obj, s_wo, c_wo, v.n_nodes, t_fwd)
+                if src_cb is None or src_wo is None:
+                    loss = 0.0 if not job.nodes else float("inf")
+                else:
+                    loss = src_cb - src_wo
+                # amortized churn: teardown + transfer stall expressed in
+                # bound units over one forward window
+                stall = (job.r_dw if job.nodes else 0.0) \
+                    + self.migration_cost_s
+                churn = (stall / max(t_fwd, 1e-9)) * specs[src][ji].values[-1]
+                for dst in by_pool:
+                    if dst == src:
+                        continue
+                    dst_cb = cap_bound(dst)
+                    s_w = specs[dst] + [specs[src][ji]]
+                    c_w = counts[dst] + [0]
+                    dst_w = self._bound(obj, s_w, c_w,
+                                        by_pool[dst].n_nodes, t_fwd)
+                    if dst_cb is None or dst_w is None:
+                        # unbounded policy: accept only free moves into
+                        # pools with uncommitted headroom
+                        spare = by_pool[dst].n_nodes \
+                            - sum(j.n_min for j in by_pool[dst].jobs)
+                        gain = 1.0 if spare >= job.n_min else 0.0
+                    else:
+                        gain = dst_w - dst_cb
+                    net = gain - loss - churn
+                    if net > self.min_net_gain_rel * max(fleet_scale, 1e-12) \
+                            and (best is None or net > best[0]):
+                        best = (net, ji, dst, gain, loss)
+            if best is None:
+                continue
+            net, ji, dst, gain, loss = best
+            job = v.jobs[ji]
+            moves.append(Migration(job_id=job.id, src=src, dst=dst,
+                                   time=now, gain=gain, loss=loss))
+            # keep the working views consistent for further moves
+            specs[dst].append(specs[src][ji])
+            counts[dst].append(0)
+            del specs[src][ji], counts[src][ji], v.jobs[ji]
+            by_pool[dst].jobs.append(job)
+            self._streak[src] = 0
+        return moves

@@ -1,0 +1,105 @@
+"""Fleet sharding: node → pool ownership (DESIGN.md §14).
+
+A federated fleet is K *pools*, each an independent allocation domain:
+one ``AllocationEngine`` (or any ``Allocator``) per pool, one event
+queue per pool, no shared solver state.  ``PoolMap`` is the static
+ownership function — every node id belongs to exactly one pool for the
+lifetime of the run, so a pool's sub-problems never overlap and the
+per-pool solves are embarrassingly parallel.
+
+Three ownership layouts cover the real deployments:
+
+* ``stride``     — ``node % K``: id-agnostic, balances any id domain;
+* ``contiguous`` — ``node // block``: rack/row-aligned blocks, the
+  natural layout when node ids encode physical placement;
+* ``bounds``     — explicit sub-cluster boundaries, for heterogeneous
+  fleets composed of differently sized machines (the ``fleet``
+  scenario profile in ``repro.sched.scenarios``).
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.events import PoolEvent, split_events_by_pool
+
+
+@dataclass(frozen=True)
+class PoolMap:
+    """Static node → pool ownership function.
+
+    Construct via :meth:`stride`, :meth:`contiguous` or
+    :meth:`from_bounds`; call it (or :meth:`pool_of`) with a node id.
+    """
+
+    n_pools: int
+    #: contiguous block width (``node // block``); ``None`` = stride
+    block: Optional[int] = None
+    #: explicit ascending pool-start offsets (overrides ``block``)
+    bounds: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.n_pools < 1:
+            raise ValueError(f"n_pools must be >= 1, got {self.n_pools}")
+        if self.bounds and len(self.bounds) != self.n_pools:
+            raise ValueError(
+                f"bounds ({len(self.bounds)}) must have one entry per pool "
+                f"({self.n_pools})")
+
+    @classmethod
+    def stride(cls, n_pools: int) -> "PoolMap":
+        """``node % n_pools`` — id-agnostic round-robin ownership."""
+        return cls(n_pools=n_pools)
+
+    @classmethod
+    def contiguous(cls, n_nodes: int, n_pools: int) -> "PoolMap":
+        """Equal contiguous blocks over ``[0, n_nodes)`` (last pool takes
+        the remainder; ids beyond ``n_nodes`` clamp to the last pool)."""
+        block = max(1, -(-n_nodes // n_pools))
+        return cls(n_pools=n_pools, block=block)
+
+    @classmethod
+    def from_bounds(cls, bounds: Sequence[int]) -> "PoolMap":
+        """Explicit sub-cluster start offsets (ascending, first must be
+        the fleet's lowest id); pool k owns ``[bounds[k], bounds[k+1])``."""
+        b = tuple(int(x) for x in bounds)
+        if list(b) != sorted(b):
+            raise ValueError(f"bounds must be ascending, got {b}")
+        return cls(n_pools=len(b), bounds=b)
+
+    def pool_of(self, node: int) -> int:
+        if self.bounds:
+            return max(0, bisect.bisect_right(self.bounds, node) - 1)
+        if self.block is not None:
+            return min(self.n_pools - 1, node // self.block)
+        return node % self.n_pools
+
+    __call__ = pool_of
+
+    def split(self, events: Sequence[PoolEvent]
+              ) -> Dict[int, List[PoolEvent]]:
+        """Per-pool, pool-tagged substreams (``split_events_by_pool``)."""
+        return split_events_by_pool(events, self.pool_of)
+
+
+def assign_jobs(jobs: Sequence, weights: Sequence[float]) -> List[int]:
+    """Initial job → pool placement: capacity-weighted round-robin.
+
+    Jobs are placed in FCFS order (the same ``(arrival, id)`` order the
+    loop admits them in); each goes to the pool with the largest
+    remaining capacity-per-job ratio, ties to the lowest pool id —
+    deterministic, and proportional to pool size in the steady state.
+    The cross-pool rebalancer corrects any drift at run time.
+    """
+    w = [max(float(x), 1e-9) for x in weights]
+    counts = [0] * len(w)
+    out = []
+    for _ in sorted(jobs, key=lambda j: (j.arrival, j.id)):
+        k = max(range(len(w)), key=lambda i: (w[i] / (counts[i] + 1), -i))
+        counts[k] += 1
+        out.append(k)
+    order = sorted(range(len(jobs)),
+                   key=lambda i: (jobs[i].arrival, jobs[i].id))
+    by_pos = {order[p]: out[p] for p in range(len(order))}
+    return [by_pos[i] for i in range(len(jobs))]

@@ -110,6 +110,34 @@ class Histogram:
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 
+    def merge(self, other: "Histogram") -> None:
+        """Fold ``other``'s samples into this histogram (federated
+        per-pool → fleet composition, DESIGN.md §14).  Exact+exact stays
+        exact until the cap; any bucketed operand degrades the result to
+        buckets (the percentile error stays the ~7% bucket resolution)."""
+        if other.count == 0:
+            return
+        self.count += other.count
+        self.total += other.total
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        if self._exact is not None and other._exact is not None \
+                and len(self._exact) + len(other._exact) <= self.exact_cap:
+            for v in other._exact:
+                bisect.insort(self._exact, v)
+            return
+        if self._exact is not None:
+            for v in self._exact:
+                self._bucket(v)
+            self._exact = None
+        if other._exact is not None:
+            for v in other._exact:
+                self._bucket(v)
+        else:
+            self._zero += other._zero
+            for idx, n in other._buckets.items():
+                self._buckets[idx] = self._buckets.get(idx, 0) + n
+
     def summary(self) -> Dict[str, float]:
         return {
             "count": self.count,
@@ -176,6 +204,26 @@ class Telemetry:
                                      float(t), float(t),
                                      value=float(value)))
 
+    def merge_from(self, other: "Telemetry", *, prefix: str = "") -> None:
+        """Fold another hub into this one, optionally namespacing every
+        metric with ``prefix`` (e.g. ``"pool3."``).  Counters and gauges
+        add/overwrite, histograms merge sample-exactly where possible,
+        and span events append in order — the federated layer calls this
+        once per pool, in pool order, so fleet traces stay deterministic
+        (DESIGN.md §14)."""
+        for name, v in other.counters.items():
+            key = prefix + name
+            self.counters[key] = self.counters.get(key, 0.0) + v
+        for name, v in other.gauges.items():
+            self.gauges[prefix + name] = v
+        for name, h in other.histograms.items():
+            mine = self.histograms.get(prefix + name)
+            if mine is None:
+                mine = self.histograms[prefix + name] = \
+                    Histogram(self.exact_cap)
+            mine.merge(h)
+        self.events.extend(other.events)
+
     # -- exports -------------------------------------------------------
 
     def hist_summary(self) -> Dict[str, Dict[str, float]]:
@@ -233,6 +281,9 @@ class NullTelemetry(Telemetry):
         pass
 
     def sample(self, name, t, value):
+        pass
+
+    def merge_from(self, other, *, prefix=""):
         pass
 
 

@@ -41,6 +41,18 @@ class Scenario:
     # fault-free profiles — set only by the CHAOS_SCENARIOS builders so
     # existing sweeps over SCENARIOS are untouched
     chaos: Optional[object] = None
+    # federated profiles (FLEET_SCENARIOS): ascending node-id offsets of
+    # each pool's sub-cluster, and the composed sub-scenarios themselves.
+    # None/empty on single-pool profiles (DESIGN.md §14)
+    pool_bounds: Optional[Tuple[int, ...]] = None
+    subs: List["Scenario"] = field(default_factory=list)
+
+    def pool_map(self):
+        """``repro.federation.PoolMap`` for a fleet profile (or None)."""
+        if not self.pool_bounds:
+            return None
+        from repro.federation import PoolMap
+        return PoolMap.from_bounds(self.pool_bounds)
 
 
 def _interarrival(load: float, mean_nodes: float, mean_runtime: float,
@@ -264,12 +276,61 @@ CHAOS_SCENARIOS: Dict[str, Callable[..., Scenario]] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Federated profiles (DESIGN.md §14): several sub-clusters composed into
+# one fleet on disjoint node-id ranges, each a natural pool shard.
+# ---------------------------------------------------------------------------
+
+#: sub-cluster profiles a fleet cycles through (day-scale, equal duration)
+_FLEET_MIX: Tuple[Callable[..., Scenario], ...] = (
+    capacity, bursty, capability, maintenance)
+
+
+def fleet(scale: float = 1.0, seed: int = 0, *, pools: int = 4) -> Scenario:
+    """A federated fleet: ``pools`` sub-clusters with disjoint node-id
+    ranges, cycling through the day-scale profiles (capacity, bursty,
+    capability, maintenance) with per-pool seeds.  ``pool_bounds`` gives
+    the natural ``PoolMap`` (``Scenario.pool_map()``); the fragments are
+    the union of the sub-traces shifted onto each pool's id range."""
+    subs: List[Scenario] = []
+    bounds: List[int] = []
+    frags: List[Fragment] = []
+    offset = 0
+    for k in range(pools):
+        builder = _FLEET_MIX[k % len(_FLEET_MIX)]
+        sub = builder(scale=scale, seed=seed + k)
+        bounds.append(offset)
+        frags.extend(Fragment(node=f.node + offset, start=f.start,
+                              end=f.end) for f in sub.fragments)
+        subs.append(sub)
+        offset += sub.n_nodes
+    duration = max(s.duration for s in subs)
+    frags.sort(key=lambda f: (f.start, f.node))
+    return Scenario(
+        name="fleet",
+        description=(f"{pools}-pool fleet: "
+                     + " + ".join(s.name for s in subs)),
+        n_nodes=offset, duration=duration, fragments=frags,
+        stats=trace_stats(frags, offset, duration),
+        # scheduler-side stats are per-sub-cluster (each ran its own
+        # batch scheduler); the fleet keeps the first as representative
+        # and the full per-pool set in ``subs``
+        sched=subs[0].sched, result=subs[0].result,
+        pool_bounds=tuple(bounds), subs=subs)
+
+
+FLEET_SCENARIOS: Dict[str, Callable[..., Scenario]] = {
+    "fleet": fleet,
+}
+
+
 def build_scenario(name: str, scale: float = 1.0, seed: int = 0) -> Scenario:
     try:
-        builder = SCENARIOS.get(name) or CHAOS_SCENARIOS[name]
+        builder = (SCENARIOS.get(name) or CHAOS_SCENARIOS.get(name)
+                   or FLEET_SCENARIOS[name])
     except KeyError:
         raise KeyError(f"unknown scenario {name!r}; available: "
-                       f"{sorted(SCENARIOS) + sorted(CHAOS_SCENARIOS)}"
+                       f"{sorted(SCENARIOS) + sorted(CHAOS_SCENARIOS) + sorted(FLEET_SCENARIOS)}"
                        ) from None
     return builder(scale=scale, seed=seed)
 

@@ -1,0 +1,453 @@
+"""Federated multi-pool allocation tests (DESIGN.md §14).
+
+Tier groups:
+
+* **K=1 parity** — the federated loop with one pool is bit-identical to
+  the single-pool ``Simulator`` across the 6-scenario × 5-policy sweep
+  (the federation layer must cost nothing when it adds nothing).
+* **Conservation** — allocated node-time never exceeds the pool's idle
+  supply, per pool and fleet-wide, including under random event streams
+  (hypothesis property) and under migrations.
+* **Rebalancer accounting** — every migration changes ownership exactly
+  once, charges the teardown + transfer stall, and is reflected in
+  both pools' counters.
+* **Recovery** — fleet snapshot/restore round-trips; federated chaos
+  runs restart per-pool allocators warm.
+"""
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.core import AllocationEngine, Simulator
+from repro.core.engine import EngineStats
+from repro.core.events import (
+    PoolEvent,
+    apply_events,
+    fragments_to_events,
+    merge_events,
+    split_events_by_pool,
+)
+from repro.core.loop import TrainerJob
+from repro.core.scaling import TAB2, tab2_curve
+from repro.federation import (
+    FEDERATION_SNAPSHOT_SCHEMA,
+    EventRouter,
+    FederatedEngine,
+    FederatedLoop,
+    PoolMap,
+    PoolView,
+    Rebalancer,
+    assign_jobs,
+)
+from repro.sched.scenarios import build_scenario
+
+_SWEEP_SCENARIOS = ["capability", "capacity", "bursty", "maintenance",
+                    "weekend", "overestimate"]
+_SWEEP_POLICIES = ["throughput", "weighted", "maxmin", "deadline", "costcap"]
+
+
+def _policy_jobs(policy="throughput", n=6):
+    names = list(TAB2)
+    out = []
+    for i in range(n):
+        j = TrainerJob(id=i, curve=tab2_curve(names[i % len(names)]),
+                       work=2e8, n_min=1, n_max=16, r_up=20.0, r_dw=5.0)
+        if policy == "weighted":
+            j.weight = 1.0 + (i % 3)
+        if policy == "deadline":
+            j.deadline = 3600.0 * (4 + i)
+        if policy == "costcap":
+            j.budget = 3.0e5
+        out.append(j)
+    return out
+
+
+def _det_engine(k=None):
+    # time_budget=0: greedy+cache only — no MILP, so identical replays
+    # are bit-identical regardless of machine load
+    return AllocationEngine(time_budget=0.0)
+
+
+# ---------------------------------------------------------------------------
+# sharding / ingestion primitives
+# ---------------------------------------------------------------------------
+
+
+def test_pool_map_layouts():
+    assert [PoolMap.stride(3)(n) for n in range(6)] == [0, 1, 2, 0, 1, 2]
+    cm = PoolMap.contiguous(10, 3)          # blocks of 4
+    assert [cm(n) for n in (0, 3, 4, 7, 8, 9, 99)] == [0, 0, 1, 1, 2, 2, 2]
+    bm = PoolMap.from_bounds([0, 16, 40])
+    assert [bm(n) for n in (0, 15, 16, 39, 40, 1000)] == [0, 0, 1, 1, 2, 2]
+    with pytest.raises(ValueError):
+        PoolMap.from_bounds([10, 5])
+    with pytest.raises(ValueError):
+        PoolMap(n_pools=0)
+
+
+def test_split_events_by_pool_partitions_and_tags():
+    events = [
+        PoolEvent(0.0, joined=(0, 1, 2, 3)),
+        PoolEvent(5.0, left=(1,), joined=(4,)),
+        PoolEvent(9.0, failed=(2, 3)),
+    ]
+    per = split_events_by_pool(events, PoolMap.stride(2))
+    # every node lands in exactly one pool's substream, tagged
+    seen = set()
+    for k, evs in per.items():
+        for e in evs:
+            assert e.pool == k
+            for n in e.joined + e.left + e.failed:
+                assert PoolMap.stride(2)(n) == k
+                seen.add((e.time, n))
+    total = sum(len(e.joined) + len(e.left) + len(e.failed) for e in events)
+    assert len(seen) == total
+
+
+def test_apply_events_folds_membership():
+    live = apply_events(set(), [PoolEvent(0.0, joined=(1, 2, 3)),
+                                PoolEvent(1.0, left=(2,)),
+                                PoolEvent(2.0, failed=(3,))])
+    assert live == {1}
+
+
+def test_event_router_drains_fifo_per_epoch():
+    pm = PoolMap.stride(2)
+    r = EventRouter(pm)
+    r.ingest([PoolEvent(t, joined=(int(t) % 2,)) for t in (0.0, 1.0, 2.0,
+                                                           3.0, 4.0)])
+    assert r.pending(0) == 3 and r.pending(1) == 2
+    # half-open window [0, 2): event at exactly 2.0 stays queued
+    got = r.drain(0, 2.0)
+    assert [e.time for e in got] == [0.0]
+    assert r.next_time(0) == 2.0
+    assert [e.time for e in r.drain(0)] == [2.0, 4.0]
+    assert r.pending(0) == 0
+    with pytest.raises(ValueError):
+        r.push(PoolEvent(9.0, joined=(1,)))     # untagged
+
+
+def test_assign_jobs_is_capacity_weighted_and_deterministic():
+    jobs = _policy_jobs(n=8)
+    p1 = assign_jobs(jobs, [3.0, 1.0])
+    assert p1 == assign_jobs(jobs, [3.0, 1.0])
+    # 3:1 weights → ~6:2 split
+    assert p1.count(0) == 6 and p1.count(1) == 2
+
+
+# ---------------------------------------------------------------------------
+# K=1 parity: the federation layer must add nothing at K=1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", _SWEEP_SCENARIOS)
+def test_federated_k1_parity_sweep(scenario):
+    """Acceptance sweep (ISSUE 8): K=1 federated replay matches the
+    single-pool engine within 1e-12 relative on every scenario × policy
+    combination."""
+    sc = build_scenario(scenario, scale=0.25)
+    events = fragments_to_events(sc.fragments)
+    for policy in _SWEEP_POLICIES:
+        base = Simulator(events, _policy_jobs(policy), _det_engine(),
+                         t_fwd=120.0, pj_max=10, horizon=sc.duration,
+                         objective=policy).run()
+        fed = FederatedLoop(events, _policy_jobs(policy), n_pools=1,
+                            allocator_factory=_det_engine, t_fwd=120.0,
+                            pj_max=10, horizon=sc.duration,
+                            objective=policy).run()
+        ref = max(1.0, abs(base.total_samples))
+        gap = abs(base.total_samples - fed.total_samples) / ref
+        assert gap <= 1e-12, f"{scenario}/{policy}: parity gap {gap:.2e}"
+        assert fed.makespan == base.makespan
+        assert fed.events_processed == base.events_processed
+        assert fed.rescale_cost_s == base.rescale_cost_s
+        assert fed.preempt_cost_s == base.preempt_cost_s
+        assert fed.unfinished == base.unfinished
+
+
+def test_federated_k1_forced_epochs_matches_throughput():
+    """Windowed K=1 replay (explicit epoch_s) matches the single-shot
+    run within 1e-12 relative under the progress-insensitive throughput
+    policy: cached decisions are identical across window boundaries and
+    reconstruct_map keeps node sets stable, so chunking the horizon
+    changes nothing but float-summation order in the integrator (the
+    epoch-boundary heartbeat solves are cache hits, not rescales)."""
+    sc = build_scenario("bursty", scale=0.25, seed=1)
+    events = fragments_to_events(sc.fragments)
+    base = FederatedLoop(events, _policy_jobs(), n_pools=1,
+                         allocator_factory=_det_engine,
+                         horizon=sc.duration).run()
+    chunked = FederatedLoop(events, _policy_jobs(), n_pools=1,
+                            allocator_factory=_det_engine,
+                            horizon=sc.duration,
+                            epoch_s=sc.duration / 7.0).run()
+    gap = abs(chunked.total_samples - base.total_samples) \
+        / max(1.0, abs(base.total_samples))
+    assert gap <= 1e-12
+    # windowing must not introduce a single extra rescale
+    assert chunked.rescale_cost_s == base.rescale_cost_s
+    assert chunked.unfinished == base.unfinished
+    assert chunked.epochs == 7
+
+
+def test_parallel_serial_and_telemetry_runs_identical():
+    from repro.obs import Telemetry
+
+    sc = build_scenario("capacity", scale=0.25, seed=3)
+    events = fragments_to_events(sc.fragments)
+
+    def run(parallel, tel):
+        s = FederatedLoop(events, _policy_jobs(n=8), n_pools=4,
+                          allocator_factory=_det_engine,
+                          horizon=sc.duration, parallel=parallel,
+                          telemetry=tel, migration_cost_s=10.0).run()
+        return (s.total_samples, s.events_processed, s.rescale_cost_s,
+                s.preempt_cost_s, len(s.migrations), s.unfinished)
+
+    assert run(False, None) == run(True, None) == run(True, Telemetry())
+
+
+# ---------------------------------------------------------------------------
+# conservation: allocated node-time <= idle supply, per pool + fleet
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pools", [2, 4])
+def test_node_time_conservation_per_pool_and_fleet(pools):
+    sc = build_scenario("fleet", scale=0.25, seed=2)
+    events = fragments_to_events(sc.fragments)
+    s = FederatedLoop(events, _policy_jobs(n=2 * pools),
+                      pool_map=PoolMap.contiguous(sc.n_nodes, pools),
+                      allocator_factory=_det_engine, horizon=sc.duration,
+                      migration_cost_s=15.0).run()
+    assert s.pools, "no per-pool stats"
+    for p in s.pools:
+        assert p.allocated_node_s <= p.supply_node_s + 1e-6, \
+            f"pool {p.pool}: allocated {p.allocated_node_s} > " \
+            f"supply {p.supply_node_s}"
+    fleet_alloc = sum(p.allocated_node_s for p in s.pools)
+    fleet_supply = sum(p.supply_node_s for p in s.pools)
+    assert fleet_alloc <= fleet_supply + 1e-6
+
+
+def test_conservation_property_random_streams():
+    """Hypothesis property: on arbitrary join/leave streams, per-pool
+    allocated node-time never exceeds the pool's supply integral."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(st.tuples(st.floats(0.0, 4000.0),
+                              st.integers(0, 15),
+                              st.booleans()),
+                    min_size=4, max_size=40),
+           st.integers(2, 3))
+    def prop(raw, pools):
+        live = set()
+        events = []
+        for t, node, join in sorted(raw, key=lambda x: x[0]):
+            if join and node not in live:
+                live.add(node)
+                events.append(PoolEvent(t, joined=(node,)))
+            elif not join and node in live:
+                live.remove(node)
+                events.append(PoolEvent(t, left=(node,)))
+        if not events:
+            return
+        s = FederatedLoop(events, _policy_jobs(n=3),
+                          pool_map=PoolMap.stride(pools),
+                          allocator_factory=_det_engine,
+                          horizon=4000.0, epoch_s=997.0).run()
+        for p in s.pools:
+            assert p.allocated_node_s <= p.supply_node_s + 1e-6
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# rebalancer
+# ---------------------------------------------------------------------------
+
+
+def _starved_views():
+    # pool 0: 4 jobs on 2 nodes (starved); pool 1: 12 nodes, no jobs
+    jobs = _policy_jobs(n=4)
+    return [PoolView(0, 2, list(jobs)), PoolView(1, 12, [])]
+
+
+def test_rebalancer_respects_patience():
+    rb = Rebalancer(patience=3, starve_rel=0.01)
+    assert rb.propose(None, _starved_views(), 120.0, 0.0) == []
+    assert rb.propose(None, _starved_views(), 120.0, 1.0) == []
+    moves = rb.propose(None, _starved_views(), 120.0, 2.0)
+    assert moves and all(m.src == 0 and m.dst == 1 for m in moves)
+
+
+def test_rebalancer_stands_still_when_balanced():
+    rb = Rebalancer(patience=1)
+    jobs = _policy_jobs(n=2)
+    views = [PoolView(0, 32, [jobs[0]]), PoolView(1, 32, [jobs[1]])]
+    for t in range(4):
+        assert rb.propose(None, views, 120.0, float(t)) == []
+
+
+def test_migration_accounting_charges_stall_and_moves_ownership():
+    sc = build_scenario("fleet", scale=0.25, seed=4)
+    events = fragments_to_events(sc.fragments)
+    jobs = _policy_jobs(n=8)
+    loop = FederatedLoop(events, jobs, pool_map=sc.pool_map(),
+                         allocator_factory=_det_engine,
+                         horizon=sc.duration, migration_cost_s=25.0,
+                         rebalancer=Rebalancer(patience=1, starve_rel=0.01,
+                                               max_moves=2,
+                                               migration_cost_s=25.0))
+    s = loop.run()
+    # in/out tallies match the migration list exactly
+    assert sum(p.migrations_out for p in s.pools) == len(s.migrations)
+    assert sum(p.migrations_in for p in s.pools) == len(s.migrations)
+    for m in s.migrations:
+        assert m.src != m.dst
+        assert s.pools[m.src].migrations_out >= 1
+        assert s.pools[m.dst].migrations_in >= 1
+    # each migration charged at least the transfer stall
+    if s.migrations:
+        assert s.migration_stall_s >= 25.0 * len(s.migrations) - 1e-9
+
+
+def test_migration_of_running_job_pays_teardown():
+    from repro.federation.rebalance import Migration
+
+    loop = FederatedLoop([PoolEvent(0.0, joined=(0,))], [], n_pools=2,
+                         migration_cost_s=40.0)
+    jobs = _policy_jobs(n=2)
+    running, queued = jobs
+    running.nodes = [0, 1]
+    owned = {0: [running, queued], 1: []}
+
+    stall = loop._apply_migration(
+        Migration(job_id=running.id, src=0, dst=1, time=100.0,
+                  gain=1.0, loss=0.0), owned, 100.0)
+    assert running in owned[1] and running not in owned[0]
+    assert running.nodes == []                      # torn down at source
+    assert stall == 40.0 + running.r_dw             # transfer + teardown
+    assert running.rescale_cost_s == running.r_dw
+    assert running.n_rescales == 1
+    assert running.busy_until == 100.0 + stall
+
+    stall_q = loop._apply_migration(
+        Migration(job_id=queued.id, src=0, dst=1, time=100.0,
+                  gain=1.0, loss=0.0), owned, 100.0)
+    assert stall_q == 40.0                          # no nodes → no teardown
+    assert queued.n_rescales == 0
+
+
+# ---------------------------------------------------------------------------
+# fleet snapshot / recovery
+# ---------------------------------------------------------------------------
+
+
+def test_federated_snapshot_roundtrip_json():
+    sc = build_scenario("capacity", scale=0.25, seed=5)
+    events = fragments_to_events(sc.fragments)
+    loop = FederatedLoop(events, _policy_jobs(n=6), n_pools=3,
+                         allocator_factory=_det_engine,
+                         horizon=sc.duration)
+    loop.run()
+    snap = loop.fed_engine.snapshot()
+    assert snap["schema"] == FEDERATION_SNAPSHOT_SCHEMA
+    blob = json.dumps(snap)
+    fe2 = FederatedEngine.from_snapshot(json.loads(blob),
+                                        PoolMap.stride(3),
+                                        lambda k: _det_engine())
+    # every pool's cache came back entry-for-entry
+    for k, eng in loop.fed_engine.engines.items():
+        assert fe2.engines[k]._cache.keys() == eng._cache.keys()
+    # schema / shape guards
+    with pytest.raises(ValueError):
+        FederatedEngine(PoolMap.stride(3)).restore({"schema": "nope"})
+    with pytest.raises(ValueError):
+        FederatedEngine(PoolMap.stride(2)).restore(json.loads(blob))
+
+
+def test_federated_engine_stats_compose():
+    a, b = EngineStats(), EngineStats()
+    a.events, a.cache_hits = 5, 2
+    b.events, b.wall_time = 3, 1.5
+    tot = EngineStats.sum_of([a, b])
+    assert tot.events == 8 and tot.cache_hits == 2 and tot.wall_time == 1.5
+    sc = build_scenario("bursty", scale=0.25, seed=6)
+    events = fragments_to_events(sc.fragments)
+    loop = FederatedLoop(events, _policy_jobs(n=6), n_pools=2,
+                         allocator_factory=_det_engine,
+                         horizon=sc.duration)
+    loop.run()
+    fleet = loop.fed_engine.stats()
+    per = loop.fed_engine.pool_stats()
+    assert fleet.events == sum(s.events for s in per.values()) > 0
+
+
+def test_federated_chaos_recovers_warm_per_pool():
+    from repro.chaos import ChaosSpec, run_federated_chaos
+
+    sc = build_scenario("fleet", scale=0.25, seed=7)
+    events = fragments_to_events(sc.fragments)
+    spec = ChaosSpec(seed=11, mtbf=4 * 3600.0,
+                     crash_every=sc.duration / 3.0, snapshot_every=600.0,
+                     restart_penalty=30.0)
+    rep = run_federated_chaos(events, _policy_jobs(n=8), spec,
+                              pool_map=sc.pool_map(), horizon=sc.duration,
+                              engine_factory=_det_engine)
+    assert rep.allocator_restarts > 0, "no restarts exercised"
+    assert rep.recovered_cache_entries > 0, "restarts never restored warm"
+    assert rep.stats.n_failures > 0
+    assert rep.allocated_node_seconds <= rep.pool_node_seconds + 1e-6
+    for p in rep.stats.pools:
+        assert p.allocated_node_s <= p.supply_node_s + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# telemetry composition
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_telemetry_merges_pool_hubs():
+    from repro.obs import Telemetry
+
+    sc = build_scenario("capacity", scale=0.25, seed=8)
+    events = fragments_to_events(sc.fragments)
+    tel = Telemetry()
+    s = FederatedLoop(events, _policy_jobs(n=6), n_pools=2,
+                      allocator_factory=None, horizon=sc.duration,
+                      telemetry=tel).run()
+    # fleet decision histogram aggregates exactly the per-pool solves
+    h = tel.histograms["fleet.decision_ms"]
+    assert h.count == s.events_processed
+    # per-pool namespaced counters present and summing to engine totals
+    ev = sum(v for k, v in tel.counters.items()
+             if k.endswith(".engine.events"))
+    assert ev == s.events_processed
+    assert tel.gauges["fleet.n_pools"] == 2
+
+
+def test_histogram_merge_exact_and_bucketed():
+    from repro.obs.telemetry import Histogram
+
+    a, b = Histogram(exact_cap=8), Histogram(exact_cap=8)
+    for v in (1.0, 2.0, 3.0):
+        a.observe(v)
+    for v in (4.0, 5.0):
+        b.observe(v)
+    a.merge(b)
+    assert a.count == 5 and a.percentile(50) == 3.0 and a.max == 5.0
+    # overflow: merged histogram degrades to buckets but keeps count/sum
+    big = Histogram(exact_cap=4)
+    for v in range(1, 9):
+        big.observe(float(v))
+    c = Histogram(exact_cap=4)
+    c.observe(10.0)
+    c.merge(big)
+    assert c.count == 9
+    assert c.total == pytest.approx(sum(range(1, 9)) + 10.0)
+    assert c.percentile(99) > 5.0
