@@ -1,0 +1,105 @@
+"""Elastic serving on harvested holes vs dedicated nodes (DESIGN.md §15).
+
+Replays each serving scenario (a node-hole trace paired with request
+demand, ``repro.sched.scenarios.SERVING_SCENARIOS``) through the
+ControlLoop under the ``latency_slo`` policy and reports requests/s,
+p50/p95/p99 request latency and SLO attainment — then serves the *same*
+request traces on a static, peak-provisioned pool
+(``repro.serving.dedicated_baseline``) and reports the attainment ratio
+``attainment_vs_dedicated``.  The headline acceptance bar, mirroring
+the chaos tier's U floor, is ``attainment_vs_dedicated >= 0.9`` on the
+smoke configuration: harvested holes must deliver at least 90% of the
+SLO attainment an always-on dedicated deployment would.
+
+``--smoke`` (or ``BENCH_SMOKE=1``) shrinks the traces for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Sequence
+
+import numpy as np
+
+from benchmarks.common import FULL, emit, maybe_write_json
+from benchmarks.schema import SERVING_SCHEMA, bench_payload
+from repro.core import AllocationEngine, fragments_to_events
+from repro.sched.scenarios import SERVING_SCENARIOS, build_scenario
+from repro.serving import dedicated_baseline, run_serving
+
+
+def _decision_ms(stats):
+    """(p50, p95, p99) decision latency in ms from the replay's records."""
+    walls = np.array([r.solver_wall for r in stats.event_records
+                      if r.solver_wall > 0.0]) * 1e3
+    if not len(walls):
+        return 0.0, 0.0, 0.0
+    return tuple(float(np.percentile(walls, q)) for q in (50, 95, 99))
+
+
+def run_sweep(scale: float, seed: int = 7) -> None:
+    payload = bench_payload(SERVING_SCHEMA)
+    payload.update(scale=scale, seed=seed, scenarios=[])
+    for name in sorted(SERVING_SCENARIOS):
+        sc = build_scenario(name, scale=scale, seed=seed)
+        rep = run_serving(sc, seed=seed, allocator=AllocationEngine())
+        ded = dedicated_baseline(sc, seed=seed)
+        ratio = (rep.slo_attainment / ded.slo_attainment
+                 if ded.slo_attainment > 0 else 1.0)
+        p50, p95, p99 = _decision_ms(rep.stats)
+        row = {
+            "scenario": name,
+            "n_nodes": sc.n_nodes,
+            "hours": sc.duration / 3600.0,
+            "services": len(sc.requests),
+            "requests": rep.requests,
+            "requests_per_sec": rep.requests_per_sec,
+            "served_frac": rep.served_frac,
+            "dropped_frac": rep.dropped_frac,
+            "latency_ms_p50": rep.latency_ms_p50,
+            "latency_ms_p95": rep.latency_ms_p95,
+            "latency_ms_p99": rep.latency_ms_p99,
+            "slo_attainment": rep.slo_attainment,
+            "dedicated_nodes": ded.summary["dedicated_nodes"],
+            "dedicated_slo_attainment": ded.slo_attainment,
+            "attainment_vs_dedicated": ratio,
+            "events": rep.stats.events_processed,
+            "decision_ms_p50": p50,
+            "decision_ms_p95": p95,
+            "decision_ms_p99": p99,
+        }
+        payload["scenarios"].append(row)
+        tag = f"serving/{name}"
+        emit(f"{tag}/n_nodes", sc.n_nodes)
+        emit(f"{tag}/hours", f"{sc.duration / 3600.0:.1f}")
+        emit(f"{tag}/requests", rep.requests)
+        emit(f"{tag}/requests_per_sec", f"{rep.requests_per_sec:.3f}")
+        emit(f"{tag}/served_frac", f"{rep.served_frac:.3f}")
+        emit(f"{tag}/latency_ms_p50", f"{rep.latency_ms_p50:.0f}")
+        emit(f"{tag}/latency_ms_p95", f"{rep.latency_ms_p95:.0f}")
+        emit(f"{tag}/latency_ms_p99", f"{rep.latency_ms_p99:.0f}")
+        emit(f"{tag}/slo_attainment", f"{rep.slo_attainment:.3f}",
+             "on harvested holes under latency_slo")
+        emit(f"{tag}/dedicated_nodes", ded.summary["dedicated_nodes"])
+        emit(f"{tag}/dedicated_slo_attainment",
+             f"{ded.slo_attainment:.3f}", "static peak-provisioned pool")
+        emit(f"{tag}/attainment_vs_dedicated", f"{ratio:.3f}",
+             "elastic / dedicated; CI floor 0.9")
+    maybe_write_json("BENCH_serving.json", payload)
+
+
+def main(argv: Sequence[str] = ()) -> None:
+    # default () — benchmarks.run calls main() with section names still in
+    # sys.argv, so only the __main__ guard forwards the real CLI args
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny traces for CI smoke runs")
+    args = ap.parse_args(argv)
+    smoke = args.smoke or bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    scale = 0.15 if smoke else (1.0 if FULL else 0.5)
+    run_sweep(scale)
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

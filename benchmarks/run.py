@@ -8,7 +8,8 @@ paper-scale variants, BENCH_SMOKE=1 (or ``--smoke``) for CI-scale runs.
 (``BENCH_week.json`` from the ``week`` section, ``BENCH_allocator.json``
 from ``scale``, ``BENCH_chaos.json`` from ``chaos``,
 ``BENCH_objectives.json`` from ``objectives``,
-``BENCH_scalability.json`` from ``scalability``) into DIR (default:
+``BENCH_scalability.json`` from ``scalability``,
+``BENCH_serving.json`` from ``serving``) into DIR (default:
 the current directory), validated
 against ``benchmarks.schema`` — the artifacts CI uploads per commit
 and ``scripts/bench_compare.py`` diffs against the committed baselines
@@ -38,6 +39,8 @@ SECTIONS = [
      "benchmarks.bench_runtime"),
     ("chaos", "Chaos resilience: efficiency retention under injected faults",
      "benchmarks.bench_chaos"),
+    ("serving", "Elastic serving: SLO attainment on harvested holes vs "
+     "dedicated nodes", "benchmarks.bench_serving"),
     ("pjmax", "Fig 14: max parallel Trainers", "benchmarks.bench_pjmax"),
     ("scalability", "Fig 15: per-DNN scalability", "benchmarks.bench_scalability"),
     ("rescale_cost", "Fig 16: rescale-cost sweep", "benchmarks.bench_rescale_cost"),

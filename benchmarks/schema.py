@@ -20,6 +20,7 @@ ALLOCATOR_SCHEMA = "bftrainer-bench-allocator/3"
 CHAOS_SCHEMA = "bftrainer-bench-chaos/2"
 OBJECTIVES_SCHEMA = "bftrainer-bench-objectives/1"
 SCALABILITY_SCHEMA = "bftrainer-bench-scalability/1"
+SERVING_SCHEMA = "bftrainer-bench-serving/1"
 
 #: BENCH_week.json — one week-trace replay, engine vs the PR-4 baseline
 #: (per-event aggregate MILP), both measured in the same run.
@@ -85,6 +86,21 @@ OBJECTIVES_METRIC_ROW_KEYS = ["metric", "total_samples",
 SCALABILITY_KEYS = ["schema", "generated_unix", "trace", "rows"]
 SCALABILITY_TRACE_KEYS = ["n_nodes", "hours", "seed"]
 SCALABILITY_ROW_KEYS = ["dnn", "efficiency_u"]
+
+#: BENCH_serving.json — the elastic serving tier (DESIGN.md §15): each
+#: serving scenario replayed on harvested holes under the latency_slo
+#: policy vs the same demand on a static, peak-provisioned dedicated
+#: pool.  ``attainment_vs_dedicated`` (elastic SLO attainment /
+#: dedicated SLO attainment) is the headline; the CI floor is >= 0.9.
+SERVING_KEYS = ["schema", "generated_unix", "scale", "seed", "scenarios"]
+SERVING_ROW_KEYS = ["scenario", "n_nodes", "hours", "services",
+                    "requests", "requests_per_sec", "served_frac",
+                    "dropped_frac", "latency_ms_p50", "latency_ms_p95",
+                    "latency_ms_p99", "slo_attainment",
+                    "dedicated_nodes", "dedicated_slo_attainment",
+                    "attainment_vs_dedicated", "events",
+                    "decision_ms_p50", "decision_ms_p95",
+                    "decision_ms_p99"]
 
 
 def bench_payload(schema: str) -> Dict:
@@ -168,10 +184,19 @@ def validate_bench_payload(payload: Dict) -> List[str]:
         else:
             for i, row in enumerate(rows):
                 need(row, CHAOS_ROW_KEYS, f"chaos.sweep[{i}]")
+    elif schema == SERVING_SCHEMA:
+        need(payload, SERVING_KEYS, "serving")
+        rows = payload.get("scenarios", [])
+        if not isinstance(rows, list) or not rows:
+            errors.append("serving.scenarios: expected a non-empty list")
+        else:
+            for i, row in enumerate(rows):
+                need(row, SERVING_ROW_KEYS, f"serving.scenarios[{i}]")
     else:
         errors.append(f"unknown schema {schema!r} (expected {WEEK_SCHEMA!r}, "
                       f"{ALLOCATOR_SCHEMA!r}, {CHAOS_SCHEMA!r}, "
-                      f"{OBJECTIVES_SCHEMA!r} or {SCALABILITY_SCHEMA!r})")
+                      f"{OBJECTIVES_SCHEMA!r}, {SCALABILITY_SCHEMA!r} or "
+                      f"{SERVING_SCHEMA!r})")
     return errors
 
 

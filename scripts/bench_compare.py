@@ -50,6 +50,7 @@ ROW_KEYS = {
     ("objectives", "policies"): ("scenario", "policy"),
     ("objectives", "metrics"): ("metric",),
     ("scalability", "rows"): ("dnn",),
+    ("serving", "scenarios"): ("scenario",),
 }
 
 #: top-level keys that are never compared numerically
@@ -65,7 +66,7 @@ def _classify(field: str) -> str:
         return "time"
     if ("rate" in f or "fairness" in f or "progress" in f
             or f.startswith("u_") or f.endswith("_u") or f == "u"
-            or "spread" in f or "frac" in f):
+            or "spread" in f or "frac" in f or "attainment" in f):
         return "quality"
     return "info"
 

@@ -98,6 +98,8 @@ def check_bench_schema(root: Path) -> list:
             schema.OBJECTIVES_METRIC_ROW_KEYS,
         "BENCH_scalability.json": schema.SCALABILITY_KEYS,
         "BENCH_scalability.json rows[]": schema.SCALABILITY_ROW_KEYS,
+        "BENCH_serving.json": schema.SERVING_KEYS,
+        "BENCH_serving.json scenarios[]": schema.SERVING_ROW_KEYS,
     }
     failures = []
     exp = root / "EXPERIMENTS.md"
@@ -123,7 +125,7 @@ def check_bench_schema(root: Path) -> list:
                 f"benchmarks.schema {sorted(keys)}")
     for artifact in ("BENCH_week.json", "BENCH_allocator.json",
                      "BENCH_chaos.json", "BENCH_objectives.json",
-                     "BENCH_scalability.json"):
+                     "BENCH_scalability.json", "BENCH_serving.json"):
         p = root / artifact
         if p.exists():
             failures.extend(schema.validate_bench_file(str(p)))

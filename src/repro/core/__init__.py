@@ -2,7 +2,12 @@
 # for DNN Trainers on unfillable idle nodes, plus the event-driven
 # BFTrainer scheduler/simulator around it.
 from repro.core.allocator import Allocator, EqualShareAllocator, MILPAllocator
-from repro.core.backend import AnalyticBackend, ExecutionBackend, LiveBackend
+from repro.core.backend import (
+    AnalyticBackend,
+    ExecutionBackend,
+    LiveBackend,
+    ServingBackend,
+)
 from repro.core.engine import AllocationEngine, EngineStats, problem_signature
 from repro.core.events import (
     Fragment,
@@ -37,6 +42,7 @@ from repro.core.objectives import (
     OBJECTIVES,
     CostCap,
     DeadlineAware,
+    LatencySLO,
     MaxMinFairness,
     Objective,
     Throughput,
@@ -51,7 +57,7 @@ from repro.core.trace import TraceStats, clip_fragments, generate_summit_like, l
 
 __all__ = [
     "Allocator", "EqualShareAllocator", "MILPAllocator",
-    "AnalyticBackend", "ExecutionBackend", "LiveBackend",
+    "AnalyticBackend", "ExecutionBackend", "LiveBackend", "ServingBackend",
     "ControlLoop", "EventRecord", "LoopStats",
     "AllocationEngine", "EngineStats", "problem_signature", "solve_greedy",
     "PAIR_REPAIR_MAX_TRAINERS", "cached_value_table",
@@ -63,8 +69,8 @@ __all__ = [
     "AllocationProblem", "AllocationResult", "TrainerSpec",
     "project_current", "solve_node_milp",
     "reconstruct_map", "solve_fast_milp",
-    "OBJECTIVES", "CostCap", "DeadlineAware", "MaxMinFairness", "Objective",
-    "Throughput", "WeightedPriority", "resolve_objective",
+    "OBJECTIVES", "CostCap", "DeadlineAware", "LatencySLO", "MaxMinFairness",
+    "Objective", "Throughput", "WeightedPriority", "resolve_objective",
     "ScalingCurve", "all_tab2_curves", "amdahl_curve", "model_zoo_curves", "tab2_curve",
     "SimReport", "Simulator", "TrainerJob", "static_outcome",
     "TfwdEstimator", "resolve_tfwd",

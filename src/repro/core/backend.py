@@ -111,6 +111,75 @@ class AnalyticBackend(ExecutionBackend):
         return delta
 
 
+class ServingBackend(AnalyticBackend):
+    """Analytic substrate plus request-level serving (DESIGN.md §15).
+
+    Jobs carrying a ``replica`` (``repro.serving.ServingJob`` — duck-
+    typed so core/ never imports the serving package) advance through
+    their :class:`~repro.serving.replica.ReplicaSet` discrete-event
+    simulation instead of the scaling-curve integral: ``advance``
+    ingests arrivals, batches queued requests at the capacity the
+    current allocation provides, and returns requests served; ``done``
+    counts served requests.  Training jobs in the same loop fall through
+    to :class:`AnalyticBackend` untouched, so a mixed pool — and, in
+    particular, a pool with *zero* serving jobs — behaves bit-identically
+    to the analytic path (the zero-serving parity test pins this down).
+
+    Per decision, ``refresh`` re-estimates the job's offered request
+    rate over its forward ``rate_window`` and publishes it via
+    ``job.rate`` — the demand signal ``LatencySLO`` provisions for.
+    Drain semantics live in the replica: a graceful shrink/preemption
+    never discards the in-flight batch; a hard failure (``on_fail``)
+    drops exactly that batch and nothing else.
+    """
+
+    name = "serving"
+
+    @staticmethod
+    def _replica(job: TrainerJob):
+        return getattr(job, "replica", None)
+
+    def bind(self, jobs: Sequence[TrainerJob]) -> None:
+        for job in jobs:
+            ensure = getattr(job, "ensure_replica", None)
+            if callable(ensure):
+                ensure()
+            rep = self._replica(job)
+            if rep is not None:
+                rep.telemetry = self.telemetry
+
+    def refresh(self, job: TrainerJob, now: float) -> None:
+        rep = self._replica(job)
+        if rep is None:
+            return super().refresh(job, now)
+        window = float(getattr(job, "rate_window", 120.0))
+        job.rate = rep.offered_rate(now, now + window)
+
+    def eta(self, job: TrainerJob, now: float,
+            horizon: float) -> Optional[float]:
+        if self._replica(job) is not None:
+            return None                  # a service never finishes
+        return super().eta(job, now, horizon)
+
+    def advance(self, job: TrainerJob, start: float, end: float) -> float:
+        rep = self._replica(job)
+        if rep is None:
+            return super().advance(job, start, end)
+        served = rep.run(start, end, rate=job.throughput(),
+                         n_nodes=len(job.nodes),
+                         busy_until=job.busy_until)
+        job.done += float(served)
+        return float(served)
+
+    def on_fail(self, job: TrainerJob, failed: List[int],
+                now: float) -> Optional[float]:
+        rep = self._replica(job)
+        if rep is None:
+            return super().on_fail(job, failed, now)
+        rep.drop_inflight(now)
+        return None                      # served requests never roll back
+
+
 class LiveBackend(ExecutionBackend):
     """Real elastic training — the deployable substrate (paper §4.3).
 

@@ -50,10 +50,11 @@ class TrainerJob:
     (``arrival``, ``deadline``, ``r_up``/``r_dw``) are in trace-clock
     seconds; ``budget`` is in node-seconds.
 
-    The optional policy fields (``weight``, ``deadline``, ``budget``)
-    are read by the matching objectives in ``repro.core.objectives``
-    (WeightedPriority / DeadlineAware / CostCap) and are inert under the
-    default Throughput policy.
+    The optional policy fields (``weight``, ``deadline``, ``budget``,
+    ``rate``/``slo``) are read by the matching objectives in
+    ``repro.core.objectives`` (WeightedPriority / DeadlineAware /
+    CostCap / LatencySLO) and are inert under the default Throughput
+    policy.
     """
 
     id: int
@@ -69,6 +70,10 @@ class TrainerJob:
     weight: float = 1.0             # admin priority weight (dimensionless)
     deadline: Optional[float] = None  # absolute trace-clock soft deadline (s)
     budget: Optional[float] = None    # node-seconds the job may consume
+    # offered request rate (requests/s), None for training jobs; kept
+    # fresh by ServingBackend.refresh and read by LatencySLO
+    rate: Optional[float] = None
+    slo: Optional[float] = None       # request-latency SLO target (s)
     # --- fault model (DESIGN.md §12) ---
     # checkpoint interval in progress units: a hard node failure rolls
     # ``done`` back to the last multiple of ``ckpt_every``.  The default
@@ -125,7 +130,10 @@ class TrainerJob:
                       if self.deadline is not None else None),
             budget=(max(self.budget - self.node_seconds, 0.0)
                     if self.budget is not None else None),
-            work=finite_work, progress=progress)
+            work=finite_work, progress=progress,
+            rate=(round(max(self.rate, 0.0), 6)
+                  if self.rate is not None else None),
+            slo=self.slo)
 
     @property
     def finished(self) -> bool:

@@ -52,6 +52,14 @@ class TrainerSpec:
     progress : float
         Completed fraction of ``work`` in [0, 1] (0.0 when unknown);
         read by progress-aware policies (max-min fairness, deadlines).
+    rate : float, optional
+        Offered request rate (requests/second) for serving jobs,
+        ``None`` for training jobs; read by
+        :class:`repro.core.objectives.LatencySLO`.
+    slo : float, optional
+        Request-latency SLO target (seconds).  Informational at the
+        allocator level (the replica simulation measures attainment);
+        excluded from every objective's ``spec_key``.
     """
 
     id: int
@@ -67,6 +75,8 @@ class TrainerSpec:
     budget: Optional[float] = None
     work: Optional[float] = None
     progress: float = 0.0
+    rate: Optional[float] = None
+    slo: Optional[float] = None
 
     def value_at(self, n: int) -> float:
         """Interpolated objective metric ``O_j(n)`` (progress units / s)

@@ -221,7 +221,9 @@ class Objective:
                 None if t.deadline is None else round(t.deadline, 9),
                 None if t.budget is None else round(t.budget, 9),
                 None if t.work is None else round(t.work, 9),
-                round(t.progress, 9))
+                round(t.progress, 9),
+                None if t.rate is None else round(t.rate, 9),
+                None if t.slo is None else round(t.slo, 9))
 
     # -- constraints ----------------------------------------------------
 
@@ -716,6 +718,135 @@ class CostCap(Throughput):
         return cap if cap >= t.n_min else 0
 
 
+class LatencySLO(Objective):
+    """SLO-attainment-weighted goodput for elastic serving Trainers.
+
+    A serving Trainer advertises its *offered request rate* via
+    ``spec.rate`` (requests/second, measured over a trailing window by
+    :class:`repro.core.backend.ServingBackend`).  Requests served beyond
+    the offered load are worthless (nobody is asking), and capacity
+    shortfall is what queues requests past their latency SLO — so the
+    per-Trainer value saturates at the *required capacity*
+
+        req_j = headroom * rate_j      (requests / second)
+
+    and shortfall below it is charged ``miss_weight`` times what surplus
+    capacity earns:
+
+        v_j(N) = t_fwd * (min(O_j, req_j) - miss_weight * max(0, req_j - O_j)
+                          + tie_eps * O_j) - rescale_penalty
+
+    where ``O_j = O_j(N_j)`` is the replica capacity curve
+    (requests/second at N nodes).  ``headroom`` buys queueing slack: a
+    replica running exactly at the arrival rate has unbounded queues
+    (utilization 1), so the policy provisions ``headroom``× the offered
+    load, which is what keeps p99 latency under the SLO.  ``req_j`` is
+    clamped to ``2 * O_j(n_max)`` exactly like
+    :class:`DeadlineAware`: unreachable demand contributes a bounded
+    (sunk) penalty instead of drowning the objective.  ``tie_eps`` adds a
+    vanishing throughput slope past saturation so the MILP is never
+    indifferent between node counts the saturated term cannot separate
+    (and the greedy/MILP views stay in exact parity — both include it).
+
+    Trainers with ``rate is None`` (training jobs sharing the pool)
+    score the plain Eqn-16 throughput objective, so mixed
+    serving+training pools work out of the box.  ``spec.slo`` (the
+    latency target itself) is *not* read here — attainment against it is
+    measured by the replica simulation (``repro.serving``); the
+    allocator only sees its capacity-rate proxy.
+
+    In the MILPs the saturating hinge is one slack variable per serving
+    Trainer, via the identity (``s_j = max(0, req_j - O_j)``):
+
+        min(O_j, req_j) - miss_weight * max(0, req_j - O_j)
+            = req_j - (1 + miss_weight) * s_j
+
+    with ``s_j >= req_j - O_j(N_j), s_j >= 0`` and the constant
+    ``t_fwd * req_j`` returned as the build offset.
+
+    Parameters
+    ----------
+    headroom : float
+        Capacity provisioned per unit of offered load (dimensionless,
+        default 1.25 — 25% queueing slack).
+    miss_weight : float
+        Penalty per unit of capacity shortfall relative to what surplus
+        earns (dimensionless, default 4.0: an under-provisioned replica
+        outbids any tie_eps surplus elsewhere).
+    tie_eps : float
+        Residual throughput slope past saturation (dimensionless,
+        default 1e-6).
+    """
+
+    name = "latency_slo"
+
+    def __init__(self, headroom: float = 1.25, miss_weight: float = 4.0,
+                 tie_eps: float = 1e-6):
+        self.headroom = float(headroom)
+        self.miss_weight = float(miss_weight)
+        self.tie_eps = float(tie_eps)
+
+    def cache_key(self):
+        return (self.name, round(self.headroom, 12),
+                round(self.miss_weight, 12), round(self.tie_eps, 12))
+
+    def spec_key(self, t):
+        return (None if t.rate is None else round(t.rate, 9),)
+
+    def _req_rate(self, t: "TrainerSpec") -> Optional[float]:
+        """Required capacity (requests/s) for Trainer ``t``, or ``None``
+        when it is not a serving job."""
+        if t.rate is None:
+            return None
+        req = self.headroom * max(0.0, float(t.rate))
+        return min(req, 2.0 * t.value_at(t.n_max))
+
+    def job_value(self, t, n, cj, t_fwd):
+        o = t.value_at(n)
+        req = self._req_rate(t)
+        if req is None:
+            return t_fwd * o - _rescale_penalty(t, n, cj)
+        v = (min(o, req) - self.miss_weight * max(0.0, req - o)
+             + self.tie_eps * o)
+        return t_fwd * v - _rescale_penalty(t, n, cj)
+
+    def value_table(self, t, cj, t_fwd):
+        o = _interp_table(t, t.n_max)
+        pen = _penalty_table(t, cj, t.n_max)
+        req = self._req_rate(t)
+        if req is None:
+            return t_fwd * o - pen
+        v = (np.minimum(o, req)
+             - self.miss_weight * np.maximum(0.0, req - o)
+             + self.tie_eps * o)
+        return t_fwd * v - pen
+
+    def build(self, b, jobs, t_fwd):
+        offset = 0.0
+        for jt in jobs:
+            req = self._req_rate(jt.spec)
+            if req is None:
+                _eqn16_terms(b, jt, t_fwd)
+                continue
+            # rescale-cost terms, identical to Eqn 16's
+            o_cj = jt.spec.value_at(jt.cj)
+            b.set_obj(jt.z_up, -o_cj * jt.spec.r_up)
+            b.set_obj(jt.z_dw, -o_cj * jt.spec.r_dw)
+            # saturating hinge: s >= req - O(N), s >= 0, objective
+            # t_fwd * (req - (1 + miss_weight) * s + tie_eps * O(N))
+            s = b.add_var(f"slo_slack[{jt.spec.id}]", lb=0.0,
+                          ub=float("inf"))
+            row = {s: 1.0}
+            for var, coef in jt.value_expr.items():
+                row[var] = row.get(var, 0.0) + coef
+            b.add_row(row, lb=req)
+            b.set_obj(s, -(1.0 + self.miss_weight) * t_fwd)
+            for var, coef in jt.value_expr.items():
+                b.set_obj(var, self.tie_eps * t_fwd * coef)
+            offset += t_fwd * req
+        return offset
+
+
 #: Registry of named policies (string -> zero-arg constructor); strings
 #: are accepted anywhere an Objective is (``resolve_objective``).
 OBJECTIVES = {
@@ -724,6 +855,7 @@ OBJECTIVES = {
     "maxmin": MaxMinFairness,
     "deadline": DeadlineAware,
     "costcap": CostCap,
+    "latency_slo": LatencySLO,
 }
 
 

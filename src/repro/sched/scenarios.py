@@ -46,6 +46,10 @@ class Scenario:
     # None/empty on single-pool profiles (DESIGN.md §14)
     pool_bounds: Optional[Tuple[int, ...]] = None
     subs: List["Scenario"] = field(default_factory=list)
+    # serving profiles (SERVING_SCENARIOS): request demand co-occurring
+    # with the hole trace — a list of repro.serving.RequestSpec; None on
+    # training-only profiles (DESIGN.md §15)
+    requests: Optional[List] = None
 
     def pool_map(self):
         """``repro.federation.PoolMap`` for a fleet profile (or None)."""
@@ -324,13 +328,72 @@ FLEET_SCENARIOS: Dict[str, Callable[..., Scenario]] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Serving profiles (DESIGN.md §15): a hole trace + the request demand
+# that co-occurs with it.  Demand is sized against the trace's mean
+# idle-pool capacity (eq_nodes × per-node request rate), so the profiles
+# stay servable — and scale-invariant in character — at any ``scale``.
+# ---------------------------------------------------------------------------
+
+#: per-node request capacity (requests/s) of the serving curves below
+_SERVE_THR1 = 2.0
+
+
+def serve_diurnal(scale: float = 1.0, seed: int = 0) -> Scenario:
+    """Capacity-cluster holes serving diurnal user traffic: a midday-
+    peaked chat-style service plus a steady background API, sized to
+    ~35% of the mean hole capacity."""
+    from repro.serving.workload import RequestSpec
+    sc = capacity(scale=scale, seed=seed)
+    sc.name, sc.description = "serve_diurnal", \
+        "capacity holes + diurnal chat service + steady API"
+    cap = sc.stats.eq_nodes * _SERVE_THR1        # mean hole capacity, req/s
+    sc.requests = [
+        RequestSpec(profile="diurnal", base_rate=0.25 * cap, slo=4.0,
+                    thr1=_SERVE_THR1, max_batch=4, max_queue=64,
+                    queue_timeout=8.0),
+        RequestSpec(profile="steady", base_rate=0.10 * cap, slo=4.0,
+                    thr1=_SERVE_THR1, max_batch=4, max_queue=64,
+                    queue_timeout=8.0),
+    ]
+    return sc
+
+
+def serve_bursty(scale: float = 1.0, seed: int = 0) -> Scenario:
+    """Bursty submission-storm holes serving flash-crowd traffic: the
+    hardest pairing — demand spikes 10x while the hole supply itself is
+    churning."""
+    from repro.serving.workload import RequestSpec
+    sc = bursty(scale=scale, seed=seed)
+    sc.name, sc.description = "serve_bursty", \
+        "bursty holes + flash-crowd service + bursty background"
+    cap = sc.stats.eq_nodes * _SERVE_THR1
+    # flash peaks hit 10x base, so demand is sized well below the mean
+    # hole capacity — the spikes, not the averages, are the stressor
+    sc.requests = [
+        RequestSpec(profile="flash", base_rate=0.08 * cap, slo=4.0,
+                    thr1=_SERVE_THR1, max_batch=4, max_queue=64,
+                    queue_timeout=6.0),
+        RequestSpec(profile="bursty", base_rate=0.06 * cap, slo=4.0,
+                    thr1=_SERVE_THR1, max_batch=4, max_queue=64,
+                    queue_timeout=6.0),
+    ]
+    return sc
+
+
+SERVING_SCENARIOS: Dict[str, Callable[..., Scenario]] = {
+    "serve_diurnal": serve_diurnal,
+    "serve_bursty": serve_bursty,
+}
+
+
 def build_scenario(name: str, scale: float = 1.0, seed: int = 0) -> Scenario:
     try:
         builder = (SCENARIOS.get(name) or CHAOS_SCENARIOS.get(name)
-                   or FLEET_SCENARIOS[name])
+                   or FLEET_SCENARIOS.get(name) or SERVING_SCENARIOS[name])
     except KeyError:
         raise KeyError(f"unknown scenario {name!r}; available: "
-                       f"{sorted(SCENARIOS) + sorted(CHAOS_SCENARIOS) + sorted(FLEET_SCENARIOS)}"
+                       f"{sorted(SCENARIOS) + sorted(CHAOS_SCENARIOS) + sorted(FLEET_SCENARIOS) + sorted(SERVING_SCENARIOS)}"
                        ) from None
     return builder(scale=scale, seed=seed)
 

@@ -1,3 +1,40 @@
-from repro.serving.engine import GenerationResult, ServeEngine
+"""Elastic serving on unfillable holes (DESIGN.md §15).
 
-__all__ = ["GenerationResult", "ServeEngine"]
+Numpy-only pieces (request traces, the continuous-batching replica
+model, ServingJob, the scenario harness) import eagerly; the JAX
+batched-generation engine (``ServeEngine``/``GenerationResult``) is
+lazy so the control-plane path works on hosts without an accelerator
+stack.
+"""
+from repro.serving.job import ServingJob, make_serving_jobs, serving_curve
+from repro.serving.replica import Batch, ReplicaSet
+from repro.serving.sim import (
+    ServingReport,
+    dedicated_baseline,
+    run_serving,
+    summarize_serving,
+)
+from repro.serving.workload import (
+    REQUEST_PROFILES,
+    RequestSpec,
+    RequestTrace,
+    profile_rate,
+    synthesize_requests,
+)
+
+__all__ = [
+    "Batch", "ReplicaSet",
+    "ServingJob", "make_serving_jobs", "serving_curve",
+    "ServingReport", "dedicated_baseline", "run_serving",
+    "summarize_serving",
+    "REQUEST_PROFILES", "RequestSpec", "RequestTrace", "profile_rate",
+    "synthesize_requests",
+    "GenerationResult", "ServeEngine",           # lazy (JAX)
+]
+
+
+def __getattr__(name):
+    if name in ("GenerationResult", "ServeEngine"):
+        from repro.serving import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,91 @@
+"""ServingJob: an elastic inference service as a ControlLoop Trainer.
+
+A serving job is a ``TrainerJob`` whose "scaling curve" is replica
+capacity (requests/second at N nodes), whose "progress" is requests
+served, and whose work is open-ended (``work = inf`` — a service never
+finishes).  Request-level behavior (queueing, batching, latency, drain)
+lives in the attached :class:`repro.serving.replica.ReplicaSet`, driven
+by :class:`repro.core.backend.ServingBackend`; the allocator sees only
+the capacity curve plus the ``rate``/``slo`` policy fields that
+:class:`repro.core.objectives.LatencySLO` reads.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from repro.core.loop import TrainerJob
+from repro.core.scaling import ScalingCurve, amdahl_curve
+from repro.serving.replica import ReplicaSet
+from repro.serving.workload import RequestSpec, RequestTrace
+
+__all__ = ["ServingJob", "make_serving_jobs", "serving_curve"]
+
+
+def serving_curve(name: str, thr1: float, comm_frac: float,
+                  n_max: int) -> ScalingCurve:
+    """Replica capacity curve (requests/s at N nodes): Amdahl speedup
+    over the single-node capacity ``thr1`` — batching/routing overhead
+    plays the role of the serial fraction."""
+    return amdahl_curve(name, thr1, comm_frac, max_nodes=max(n_max, 1))
+
+
+@dataclass
+class ServingJob(TrainerJob):
+    """One elastic service inside the ControlLoop (see module docstring).
+
+    ``work`` defaults to ``inf`` (open-ended); ``done`` counts requests
+    served.  ``slo`` (inherited, seconds) is the latency target the
+    replica simulation measures attainment against; ``rate`` (inherited)
+    is refreshed each solve by ``ServingBackend`` from the trace's
+    forward window and starts at 0.0 so the job is a *serving* job to
+    the ``LatencySLO`` policy from the first decision on.
+    """
+
+    work: float = math.inf
+    slo: Optional[float] = 0.5
+    trace: Optional[RequestTrace] = None
+    max_batch: int = 8
+    max_queue: int = 256
+    queue_timeout: Optional[float] = None
+    # forward window (seconds) over which refresh estimates offered rate
+    rate_window: float = 120.0
+    replica: Optional[ReplicaSet] = field(default=None, repr=False)
+
+    def __post_init__(self):
+        if self.rate is None:
+            self.rate = 0.0
+
+    def ensure_replica(self, *, audit: bool = False) -> ReplicaSet:
+        """Build (once) the request-level simulation for this service."""
+        if self.replica is None:
+            if self.trace is None:
+                raise ValueError(f"ServingJob {self.id} has no RequestTrace")
+            self.replica = ReplicaSet(
+                self.trace, slo=self.slo, max_batch=self.max_batch,
+                max_queue=self.max_queue, queue_timeout=self.queue_timeout,
+                job_id=self.id, audit=audit)
+        return self.replica
+
+
+def make_serving_jobs(requests: Sequence[RequestSpec], duration: float,
+                      *, seed: int = 0, id_offset: int = 0,
+                      r_up: float = 20.0, r_dw: float = 5.0,
+                      audit: bool = False) -> List[ServingJob]:
+    """Materialize a scenario's ``RequestSpec`` list into ServingJobs
+    (deterministic in ``seed``; ids ``id_offset + k``)."""
+    jobs: List[ServingJob] = []
+    for k, spec in enumerate(requests):
+        trace = RequestTrace.synthesize(spec.profile, duration,
+                                        spec.base_rate, seed=seed + k)
+        job = ServingJob(
+            id=id_offset + k,
+            curve=serving_curve(f"serve-{spec.profile}", spec.thr1,
+                                spec.comm_frac, spec.n_max),
+            n_min=spec.n_min, n_max=spec.n_max, r_up=r_up, r_dw=r_dw,
+            slo=spec.slo, trace=trace, max_batch=spec.max_batch,
+            max_queue=spec.max_queue, queue_timeout=spec.queue_timeout)
+        job.ensure_replica(audit=audit)
+        jobs.append(job)
+    return jobs

@@ -1,0 +1,241 @@
+"""Continuous-batching replica model with admission control and drain
+semantics (DESIGN.md §15).
+
+``ReplicaSet`` is the serving analogue of ``AnalyticBackend``'s scaling-
+curve integral: a discrete-event simulation of one elastic service's
+replicas over the node allocation the ControlLoop grants it.  State is a
+bounded FIFO queue of request arrival times plus at most one in-flight
+batch; the event loop interleaves request arrivals (from a
+``RequestTrace``) with batch completions, so per-request latency — and
+therefore SLO attainment — is exact, not an M/M/1 approximation.
+
+Semantics the serving test tier pins down (tests/test_serving_loop.py):
+
+* **conservation** — at every instant, arrivals ingested ==
+  served + dropped (queue overflow) + dropped (kill) + queued +
+  in-flight;
+* **no stolen node-seconds** — a batch only *starts* when the current
+  allocation has nodes and the rescale stall (``busy_until``) has
+  passed; its start is recorded in ``audit``;
+* **drain on shrink** — a graceful shrink (or full preemption) never
+  discards the in-flight batch: it completes at the service rate it was
+  started with, the replica-side mirror of a checkpointed scale-down
+  (new batches are what wait out the stall);
+* **kill loses at most one batch** — a hard node failure drops only the
+  in-flight batch (``drop_inflight``), never the queue.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, List, Optional, Tuple
+
+from repro.obs.telemetry import Histogram, NULL_TELEMETRY
+
+__all__ = ["Batch", "ReplicaSet"]
+
+
+@dataclass
+class Batch:
+    """One in-flight batch: completion time, member arrival times, and
+    the allocation it started on (for the audit trail)."""
+
+    done_at: float
+    arrivals: List[float]
+    started_at: float
+    n_nodes: int
+
+
+class ReplicaSet:
+    """Event-driven continuous-batching simulation of one service.
+
+    Parameters
+    ----------
+    trace : RequestTrace
+        The arrival stream (sorted times, seconds).
+    slo : float
+        Per-request latency target (seconds); a served request attains
+        the SLO iff ``finish - arrival <= slo``.
+    max_batch : int
+        Largest batch a replica forms per service cycle.
+    max_queue : int
+        Admission bound: arrivals beyond a full queue are dropped
+        (counted in ``dropped_queue``), never queued unboundedly.
+    queue_timeout : float, optional
+        Client patience (seconds): a queued request that has waited
+        longer by the time a batch forms is abandoned (counted in
+        ``dropped_timeout``) instead of being served hopelessly late —
+        the time-axis half of admission control.  ``None`` disables.
+    job_id : int
+        Owning ``ServingJob`` id (telemetry labels).
+    audit : bool
+        Record every batch start as ``(start_t, batch_size, n_nodes)``
+        — the evidence the conservation/no-stolen-nodes tests check.
+    """
+
+    #: observation sink; ``ServingBackend.bind`` swaps in the loop's hub
+    telemetry = NULL_TELEMETRY
+
+    def __init__(self, trace, *, slo: float = 0.5, max_batch: int = 8,
+                 max_queue: int = 256, queue_timeout: Optional[float] = None,
+                 job_id: int = -1, audit: bool = False):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        self.trace = trace
+        self.slo = float(slo)
+        self.max_batch = int(max_batch)
+        self.max_queue = int(max_queue)
+        self.queue_timeout = (None if queue_timeout is None
+                              else float(queue_timeout))
+        self.job_id = job_id
+        # --- state ---
+        self.idx = 0                        # arrivals ingested so far
+        self.queue: Deque[float] = deque()  # waiting request arrival times
+        self.inflight: Optional[Batch] = None
+        # --- counters ---
+        self.served = 0
+        self.dropped_queue = 0              # admission-control drops
+        self.dropped_kill = 0               # hard-failure drops
+        self.dropped_timeout = 0            # client-patience drops
+        self.slo_ok = 0                     # served within the SLO
+        self.latency = Histogram()          # served latency (milliseconds)
+        self.audit: List[Tuple[float, int, int]] = [] if audit else None
+
+    # -- derived ---------------------------------------------------------
+
+    @property
+    def inflight_size(self) -> int:
+        return 0 if self.inflight is None else len(self.inflight.arrivals)
+
+    @property
+    def pending(self) -> int:
+        """Requests admitted but not yet resolved (queued + in-flight)."""
+        return len(self.queue) + self.inflight_size
+
+    def conserved(self) -> bool:
+        """The conservation invariant (always true by construction;
+        asserted at every event by the property tests)."""
+        return self.idx == (self.served + self.dropped_queue
+                            + self.dropped_kill + self.dropped_timeout
+                            + self.pending)
+
+    def slo_attainment(self) -> float:
+        """Fraction of *served* requests inside the SLO (1.0 when none
+        served yet — dropped requests are reported separately)."""
+        return self.slo_ok / self.served if self.served else 1.0
+
+    def offered_rate(self, t0: float, t1: float) -> float:
+        return self.trace.rate_in(t0, t1)
+
+    # -- event loop ------------------------------------------------------
+
+    def _complete(self, batch: Batch) -> None:
+        tel = self.telemetry
+        for arr in batch.arrivals:
+            lat = batch.done_at - arr
+            self.served += 1
+            if lat <= self.slo:
+                self.slo_ok += 1
+            self.latency.observe(lat * 1e3)
+            if tel:
+                tel.observe("serving.latency_ms", lat * 1e3)
+        if tel:
+            tel.count("serving.served", len(batch.arrivals))
+
+    def run(self, start: float, end: float, *, rate: float, n_nodes: int,
+            busy_until: float = 0.0) -> int:
+        """Advance the simulation over ``[start, end)``; returns requests
+        served in the interval.
+
+        ``rate`` is the replica capacity (requests/s) of the *current*
+        allocation of ``n_nodes`` nodes; a batch of ``k`` requests
+        started at ``t0`` completes at ``t0 + k/rate`` and keeps that
+        completion time even if the allocation later shrinks (drain).
+        New batches start no earlier than ``busy_until`` (rescale
+        stall).  Arrivals are ingested regardless of capacity — demand
+        does not pause because the service lost its nodes.
+        """
+        arrivals = self.trace.arrivals
+        n_arr = len(arrivals)
+        tel = self.telemetry
+        t = start
+        served0 = self.served
+        while True:
+            # start a batch at the current instant when possible
+            if (self.inflight is None and self.queue and rate > 0.0
+                    and n_nodes > 0):
+                t0 = max(t, busy_until)
+                if t0 < end:
+                    if self.queue_timeout is not None:
+                        while (self.queue and
+                               t0 - self.queue[0] > self.queue_timeout):
+                            self.queue.popleft()
+                            self.dropped_timeout += 1
+                            if tel:
+                                tel.count("serving.dropped_timeout")
+                        if not self.queue:
+                            continue
+                    k = min(self.max_batch, len(self.queue))
+                    batch = [self.queue.popleft() for _ in range(k)]
+                    self.inflight = Batch(done_at=t0 + k / rate,
+                                          arrivals=batch, started_at=t0,
+                                          n_nodes=n_nodes)
+                    if self.audit is not None:
+                        self.audit.append((t0, k, n_nodes))
+                    continue
+            t_arr = arrivals[self.idx] if self.idx < n_arr else float("inf")
+            t_done = (self.inflight.done_at if self.inflight is not None
+                      else float("inf"))
+            # interval convention [start, end): completions at exactly
+            # ``end`` resolve now, arrivals at ``end`` belong to the next
+            # interval (idx is monotonic, so nothing double-ingests)
+            if t_done > end and t_arr >= end:
+                break
+            if t_done <= t_arr:
+                t = t_done
+                self._complete(self.inflight)
+                self.inflight = None
+            else:
+                t = t_arr
+                self.idx += 1
+                if tel:
+                    tel.count("serving.arrived")
+                if len(self.queue) < self.max_queue:
+                    self.queue.append(t_arr)
+                else:
+                    self.dropped_queue += 1
+                    if tel:
+                        tel.count("serving.dropped_queue")
+        return self.served - served0
+
+    def drop_inflight(self, now: float) -> int:
+        """Hard-kill semantics: the in-flight batch is lost (at most one
+        batch, never the queue).  Returns the number of requests lost."""
+        if self.inflight is None:
+            return 0
+        lost = len(self.inflight.arrivals)
+        self.inflight = None
+        self.dropped_kill += lost
+        tel = self.telemetry
+        if tel:
+            tel.count("serving.dropped_kill", lost)
+        return lost
+
+    def summary(self) -> dict:
+        """Aggregate counters + latency percentiles (milliseconds)."""
+        lat = self.latency.summary() if self.latency.count else {}
+        return {
+            "arrived": self.idx,
+            "served": self.served,
+            "dropped_queue": self.dropped_queue,
+            "dropped_kill": self.dropped_kill,
+            "dropped_timeout": self.dropped_timeout,
+            "pending": self.pending,
+            "slo_ok": self.slo_ok,
+            "slo_attainment": self.slo_attainment(),
+            "latency_ms_p50": lat.get("p50", 0.0),
+            "latency_ms_p95": lat.get("p95", 0.0),
+            "latency_ms_p99": lat.get("p99", 0.0),
+        }

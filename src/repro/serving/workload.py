@@ -1,0 +1,177 @@
+"""Request-trace generator for the elastic serving tier (DESIGN.md §15).
+
+Serving demand is an inhomogeneous Poisson arrival process: a profile
+shapes the instantaneous rate ``lam(t) = base_rate * m(t)`` and arrivals
+are sampled by thinning a homogeneous process at the profile's peak
+rate.  The six profiles mirror the six node-trace scenarios in
+``repro.sched.scenarios`` — the request side of the same machine-room
+story (steady/diurnal load, submission storms, weekly modulation,
+flash crowds) — so a serving scenario pairs a *hole* trace with the
+*demand* trace that co-occurs with it.
+
+Everything here is numpy-only and deterministic in ``seed``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+_HOUR = 3600.0
+_DAY = 86400.0
+
+__all__ = ["RequestTrace", "RequestSpec", "REQUEST_PROFILES",
+           "profile_rate", "synthesize_requests"]
+
+
+# ---------------------------------------------------------------------------
+# Rate profiles: m(t) multipliers over the base rate
+# ---------------------------------------------------------------------------
+
+
+def _steady(t: np.ndarray, dur: float, rng) -> np.ndarray:
+    return np.ones_like(t)
+
+
+def _diurnal(t: np.ndarray, dur: float, rng) -> np.ndarray:
+    # midday peak, small-hours trough: m in [0.2, 1.8]
+    return 1.0 + 0.8 * np.sin(2.0 * math.pi * (t / _DAY - 0.25))
+
+
+def _ramp(t: np.ndarray, dur: float, rng) -> np.ndarray:
+    # launch-day growth: 0.3x -> 1.7x over the trace
+    return 0.3 + 1.4 * t / max(dur, 1.0)
+
+
+def _weekend(t: np.ndarray, dur: float, rng) -> np.ndarray:
+    # weekday/weekend modulation with a diurnal overlay (trace starts
+    # Monday 00:00); weekends run at a third of weekday demand
+    day = np.floor(t / _DAY) % 7
+    weekday = np.where(day < 5, 1.2, 0.4)
+    return weekday * (1.0 + 0.6 * np.sin(2.0 * math.pi * (t / _DAY - 0.25)))
+
+
+def _windows(t: np.ndarray, starts: np.ndarray, width: float) -> np.ndarray:
+    """Indicator of ``t`` falling in any ``[s, s+width)`` window."""
+    hit = np.zeros_like(t, dtype=bool)
+    for s in starts:
+        hit |= (t >= s) & (t < s + width)
+    return hit
+
+
+def _bursty(t: np.ndarray, dur: float, rng) -> np.ndarray:
+    # quiet base + ~20-minute request storms every ~2h at 5x
+    n = max(1, int(dur / (2.0 * _HOUR)))
+    starts = np.sort(rng.uniform(0.0, max(dur - 1200.0, 1.0), size=n))
+    return np.where(_windows(t, starts, 1200.0), 5.0, 0.6)
+
+
+def _flash(t: np.ndarray, dur: float, rng) -> np.ndarray:
+    # steady base + rare 5-minute flash crowds at 10x (one per ~8h)
+    n = max(1, int(dur / (8.0 * _HOUR)))
+    starts = np.sort(rng.uniform(0.0, max(dur - 300.0, 1.0), size=n))
+    return np.where(_windows(t, starts, 300.0), 10.0, 0.8)
+
+
+#: profile name -> (rate-shape fn, peak multiplier).  The peak bounds the
+#: thinning envelope; shape fns may consult ``rng`` (storm placement) —
+#: each synthesis hands them a dedicated, seed-derived generator, so the
+#: storm schedule and the thinning draws are independently reproducible.
+REQUEST_PROFILES: Dict[str, Tuple[Callable, float]] = {
+    "steady": (_steady, 1.0),
+    "diurnal": (_diurnal, 1.8),
+    "bursty": (_bursty, 5.0),
+    "ramp": (_ramp, 1.7),
+    "weekend": (_weekend, 1.92),
+    "flash": (_flash, 10.0),
+}
+
+
+def profile_rate(profile: str, t: np.ndarray, duration: float,
+                 seed: int = 0) -> np.ndarray:
+    """Rate multiplier ``m(t)`` for a profile (storm windows re-derived
+    from ``seed``, matching what ``synthesize_requests`` sampled)."""
+    shape, _ = REQUEST_PROFILES[profile]
+    rng = np.random.default_rng((seed, 0xC0FFEE))
+    return np.maximum(0.0, shape(np.asarray(t, dtype=float), duration, rng))
+
+
+def synthesize_requests(profile: str, duration: float, base_rate: float,
+                        seed: int = 0) -> np.ndarray:
+    """Sorted request arrival times (seconds) over ``[0, duration)``.
+
+    Inhomogeneous Poisson via thinning: candidates at the profile's peak
+    rate, each kept with probability ``m(t)/peak``.  Deterministic in
+    ``(profile, duration, base_rate, seed)``.
+    """
+    if profile not in REQUEST_PROFILES:
+        raise KeyError(f"unknown request profile {profile!r}; "
+                       f"available: {sorted(REQUEST_PROFILES)}")
+    shape, peak = REQUEST_PROFILES[profile]
+    lam_max = base_rate * peak
+    if lam_max <= 0 or duration <= 0:
+        return np.empty(0)
+    # storm placement must match profile_rate -> same derived stream
+    shape_rng = np.random.default_rng((seed, 0xC0FFEE))
+    thin_rng = np.random.default_rng((seed, 0xA11CE))
+    n_cand = thin_rng.poisson(lam_max * duration)
+    cand = np.sort(thin_rng.uniform(0.0, duration, size=n_cand))
+    m = np.maximum(0.0, shape(cand, duration, shape_rng))
+    keep = thin_rng.uniform(0.0, 1.0, size=n_cand) < m * base_rate / lam_max
+    return cand[keep]
+
+
+# ---------------------------------------------------------------------------
+# Traces and per-service specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RequestTrace:
+    """One service's arrival stream: sorted times plus provenance."""
+
+    name: str
+    arrivals: np.ndarray            # sorted arrival times (seconds)
+    duration: float                 # trace span (seconds)
+    base_rate: float                # requests/second before modulation
+    seed: int = 0
+
+    def __len__(self) -> int:
+        return int(len(self.arrivals))
+
+    def rate_in(self, t0: float, t1: float) -> float:
+        """Offered rate (requests/s) over ``[t0, t1)`` — the forward
+        demand estimate ``ServingBackend.refresh`` feeds the allocator."""
+        if t1 <= t0:
+            return 0.0
+        lo, hi = np.searchsorted(self.arrivals, [t0, t1])
+        return float(hi - lo) / (t1 - t0)
+
+    @classmethod
+    def synthesize(cls, profile: str, duration: float, base_rate: float,
+                   seed: int = 0) -> "RequestTrace":
+        return cls(name=profile, duration=float(duration),
+                   base_rate=float(base_rate), seed=seed,
+                   arrivals=synthesize_requests(profile, duration,
+                                                base_rate, seed))
+
+
+@dataclass(frozen=True)
+class RequestSpec:
+    """Declarative description of one elastic service in a scenario
+    (``Scenario.requests``): demand shape plus replica parameters.
+    ``repro.serving.make_serving_jobs`` turns these into ``ServingJob``s.
+    """
+
+    profile: str                    # REQUEST_PROFILES key
+    base_rate: float                # requests/second before modulation
+    slo: float = 0.5                # request-latency target (seconds)
+    thr1: float = 2.0               # single-node capacity (requests/s)
+    comm_frac: float = 0.05         # Amdahl serial fraction of the curve
+    n_min: int = 1
+    n_max: int = 16
+    max_batch: int = 8              # continuous-batching batch bound
+    max_queue: int = 256            # admission-control queue bound
+    queue_timeout: Optional[float] = None   # client patience (seconds)

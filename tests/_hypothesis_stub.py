@@ -1,0 +1,245 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` library.
+
+The three property-test modules (``test_property.py`` and the inner
+properties in ``test_federation.py`` / ``test_objectives.py``) only need
+a small slice of hypothesis: ``@given``/``@settings`` and a handful of
+strategies.  When the real library is installed (CI does install it)
+this module is never imported; otherwise ``tests/conftest.py`` calls
+:func:`install` so the perpetually-skipped tier-1 properties run
+everywhere.
+
+Differences from real hypothesis, deliberately accepted:
+
+* examples are drawn from a PRNG seeded by ``(test qualname, index)`` —
+  fully deterministic, no example database, no shrinking;
+* ``settings`` honors ``max_examples`` and ignores everything else
+  (``deadline`` etc.);
+* only the strategies the suite uses are provided.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+__all__ = ["install", "given", "settings", "STRATEGIES"]
+
+#: examples per property when no ``@settings(max_examples=...)`` is given
+DEFAULT_EXAMPLES = 25
+
+
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
+
+
+class Strategy:
+    """Base: a strategy draws one value from a ``random.Random``."""
+
+    def example(self, rnd: random.Random):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    # hypothesis-compatible conveniences (unused by the suite but cheap)
+    def map(self, fn):
+        return _MappedStrategy(self, fn)
+
+    def filter(self, pred):
+        return _FilteredStrategy(self, pred)
+
+
+class _MappedStrategy(Strategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+
+    def example(self, rnd):
+        return self.fn(self.base.example(rnd))
+
+
+class _FilteredStrategy(Strategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def example(self, rnd):
+        for _ in range(1000):
+            v = self.base.example(rnd)
+            if self.pred(v):
+                return v
+        raise ValueError("filter predicate rejected 1000 examples")
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2 ** 31) if min_value is None else int(min_value)
+        self.hi = 2 ** 31 if max_value is None else int(max_value)
+
+    def example(self, rnd):
+        if rnd.random() < 0.1:          # nudge the endpoints occasionally
+            return rnd.choice((self.lo, self.hi))
+        return rnd.randint(self.lo, self.hi)
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value=None, max_value=None, **_ignored):
+        self.lo = 0.0 if min_value is None else float(min_value)
+        self.hi = 1.0 if max_value is None else float(max_value)
+
+    def example(self, rnd):
+        if rnd.random() < 0.1:
+            return rnd.choice((self.lo, self.hi))
+        return rnd.uniform(self.lo, self.hi)
+
+
+class _Booleans(Strategy):
+    def example(self, rnd):
+        return rnd.random() < 0.5
+
+
+class _NoneStrategy(Strategy):
+    def example(self, rnd):
+        return None
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def example(self, rnd):
+        return rnd.choice(self.elements)
+
+
+class _Lists(Strategy):
+    def __init__(self, elements, min_size=0, max_size=None):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = self.min_size + 10 if max_size is None \
+            else int(max_size)
+
+    def example(self, rnd):
+        n = rnd.randint(self.min_size, self.max_size)
+        return [self.elements.example(rnd) for _ in range(n)]
+
+
+class _Tuples(Strategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rnd):
+        return tuple(s.example(rnd) for s in self.strategies)
+
+
+class _OneOf(Strategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rnd):
+        return rnd.choice(self.strategies).example(rnd)
+
+
+class _Composite(Strategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def example(self, rnd):
+        draw = lambda strategy: strategy.example(rnd)  # noqa: E731
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+def composite(fn):
+    """``@st.composite`` — decorate ``fn(draw, ...)``; calling the result
+    (e.g. ``milp_instances()``) yields a strategy."""
+    @functools.wraps(fn)
+    def make(*args, **kwargs):
+        return _Composite(fn, args, kwargs)
+    return make
+
+
+STRATEGIES = {
+    "integers": _Integers,
+    "floats": _Floats,
+    "booleans": _Booleans,
+    "none": _NoneStrategy,
+    "sampled_from": _SampledFrom,
+    "lists": _Lists,
+    "tuples": _Tuples,
+    "one_of": _OneOf,
+    "composite": composite,
+    "just": lambda v: _SampledFrom([v]),
+}
+
+
+# ---------------------------------------------------------------------------
+# @given / @settings
+# ---------------------------------------------------------------------------
+
+
+def settings(max_examples=None, **_ignored):
+    """Record ``max_examples`` on the decorated function.  Works in both
+    stacking orders: below ``@given`` (attribute copied into the runner
+    by ``functools.wraps``) and above it (attribute set on the runner,
+    read at call time)."""
+    def deco(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = int(max_examples)
+        return fn
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    if kw_strategies:
+        raise TypeError("stub @given supports positional strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_stub_max_examples", DEFAULT_EXAMPLES)
+            qual = getattr(fn, "__qualname__", fn.__name__)
+            for i in range(n):
+                rnd = random.Random(f"{qual}:{i}")
+                drawn = tuple(s.example(rnd) for s in strategies)
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"property {qual} falsified on example {i}: "
+                        f"{drawn!r}") from exc
+            return None
+        # strategies fill the TRAILING parameters; expose only the rest
+        # so pytest does not mistake property arguments for fixtures
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        keep = params[:len(params) - len(strategies)]
+        runner.__signature__ = sig.replace(parameters=keep)
+        del runner.__wrapped__
+        runner.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return runner
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# Module installation
+# ---------------------------------------------------------------------------
+
+
+def install():
+    """Register stub ``hypothesis`` / ``hypothesis.strategies`` modules
+    (no-op if the real library is already importable)."""
+    if "hypothesis" in sys.modules:
+        return sys.modules["hypothesis"]
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name, obj in STRATEGIES.items():
+        setattr(strat, name, obj)
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    hyp.__version__ = "0.0.stub"
+    hyp.__is_stub__ = True
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, filter_too_much=None, data_too_large=None)
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat
+    return hyp

@@ -5,3 +5,12 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# The property tiers need hypothesis; environments without it fall back
+# to the deterministic compat stub so those tests run instead of skip.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    _hypothesis_stub.install()
