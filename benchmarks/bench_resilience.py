@@ -1,0 +1,188 @@
+"""Self-healing control-plane sweep: stream corruption + decision
+deadlines (DESIGN.md §16).
+
+Two sweeps over the ``bursty`` capacity scenario:
+
+- **corruption** — the event feed is duplicated/reordered/dropped/late
+  at increasing intensity while the physical pool follows the clean
+  trace; hygiene + anti-entropy reconciliation repair the stream before
+  the control loop sees it.  ``u_frac_of_clean`` (efficiency retained
+  vs the uncorrupted replay) is the headline; the CI floor is >= 0.85
+  at 1% corruption.  Rows also carry the repair bookkeeping
+  (defect counters, reconcile repairs, membership divergence).
+- **deadline** — the same replay under hard per-decision deadlines
+  enforced by the engine's degradation ladder
+  (cache → repair → greedy → MILP → project → equal-share).
+  ``within_deadline_frac`` must be 1.0 (CI asserts it); rows carry the
+  rung mix and the efficiency retained vs the same engine without a
+  deadline.
+
+The smallest deadline is kept >= 25 ms: below that the engine's fixed
+per-call bookkeeping (problem signature hashing) dominates on large
+problems and wall-clock noise, not ladder policy, decides the outcome.
+
+``--smoke`` (or ``BENCH_SMOKE=1``) shrinks the trace for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Sequence
+
+import numpy as np
+
+from benchmarks.common import FULL, diverse_jobs, emit, maybe_write_json
+from benchmarks.schema import RESILIENCE_SCHEMA, bench_payload
+from repro.chaos import ChaosSpec, run_chaos
+from repro.core import (
+    AllocationEngine,
+    MILPAllocator,
+    Simulator,
+    eq_nodes,
+    fragments_to_events,
+    static_outcome,
+)
+from repro.sched import build_scenario
+
+#: corruption intensity p: duplicate_prob = drop_prob = p, late_prob =
+#: p/2.  0.01 is the CI-floor point (u_frac_of_clean >= 0.85 there).
+CORRUPT_LEVELS = (0.0, 0.01, 0.05, 0.10)
+REORDER_WINDOW = 300.0
+RECONCILE_PERIOD = 900.0
+
+#: hard decision deadlines (ms) for the ladder sweep
+DEADLINE_MS = (25.0, 50.0, 100.0)
+
+
+def _static_baseline(events, jobs_fn, horizon: float) -> float:
+    n_eq = max(1, round(eq_nodes(list(events), 0.0, horizon)))
+    return static_outcome(jobs_fn(), n_eq, horizon, MILPAllocator("fast"),
+                          pj_max=10)
+
+
+def _corrupt_spec(p: float, seed: int) -> ChaosSpec:
+    if p <= 0.0:
+        # fully clean feed (reorder_window alone already jitters
+        # arrival order) — the zero-corruption identity row
+        return ChaosSpec(seed=seed)
+    return ChaosSpec(seed=seed, duplicate_prob=p, drop_prob=p,
+                     late_prob=p / 2.0, reorder_window=REORDER_WINDOW,
+                     reconcile_period_s=RECONCILE_PERIOD)
+
+
+def run_sweep(scale: float, seed: int = 7,
+              scenario: str = "bursty") -> None:
+    sc = build_scenario(scenario, scale=scale, seed=seed)
+    events = fragments_to_events(sc.fragments)
+    n_jobs = max(4, int(round(sc.stats.eq_nodes / 3)))
+    jobs_fn = lambda: diverse_jobs(n=n_jobs, work=1e12, seed=seed)
+    a_s = _static_baseline(events, jobs_fn, sc.duration)
+
+    clean = Simulator(list(events), jobs_fn(), AllocationEngine(),
+                      t_fwd=120.0, pj_max=10, horizon=sc.duration).run()
+    u_clean = clean.total_samples / a_s if a_s > 0 else 0.0
+    emit(f"resilience/{scenario}/n_nodes", sc.n_nodes)
+    emit(f"resilience/{scenario}/u_clean", f"{u_clean:.3f}",
+         "clean-feed replay vs dedicated eq-nodes")
+
+    payload = bench_payload(RESILIENCE_SCHEMA)
+    payload.update(scenario=scenario, scale=scale, seed=seed,
+                   u_clean=u_clean, corruption=[], deadline=[])
+
+    # -- corruption sweep ----------------------------------------------
+    for p in CORRUPT_LEVELS:
+        rep = run_chaos(list(events), jobs_fn(), _corrupt_spec(p, seed),
+                        horizon=sc.duration)
+        samples = rep.stats.total_samples
+        # physical capacity follows the clean trace, so the clean
+        # baseline is the honest denominator at every corruption level
+        u = samples / a_s if a_s > 0 else 0.0
+        hyg = rep.hygiene.as_dict() if rep.hygiene is not None else {}
+        rec = rep.reconcile.as_dict() if rep.reconcile is not None else {}
+        div = rep.divergence or {}
+        row = {
+            "corrupt_prob": p,
+            "u": u,
+            "u_frac_of_clean": (u / u_clean) if u_clean > 0 else 0.0,
+            "divergence_frac": div.get("divergence_frac", 0.0),
+            "max_lag_s": div.get("max_lag_s", 0.0),
+            "defects": (rep.hygiene.defects
+                        if rep.hygiene is not None else 0),
+            "duplicates_dropped": hyg.get("duplicates_dropped", 0),
+            "late_dropped": hyg.get("late_dropped", 0),
+            "phantom_joins": hyg.get("phantom_joins", 0),
+            "orphan_leaves": hyg.get("orphan_leaves", 0),
+            "repair_events": rec.get("repair_events", 0),
+            "reconciles": rec.get("reconciles", 0),
+            "events": rep.stats.events_processed,
+        }
+        payload["corruption"].append(row)
+        tag = f"resilience/{scenario}/corrupt_{p:g}"
+        emit(f"{tag}/u_frac_of_clean", f"{row['u_frac_of_clean']:.3f}",
+             "efficiency retained vs clean feed")
+        emit(f"{tag}/divergence_frac", f"{row['divergence_frac']:.4f}")
+        emit(f"{tag}/max_lag_s", f"{row['max_lag_s']:.0f}",
+             "worst believed-vs-truth window")
+        emit(f"{tag}/defects", row["defects"])
+        emit(f"{tag}/repair_events", row["repair_events"])
+
+    # -- deadline ladder sweep -----------------------------------------
+    # reference: same greedy-tier engine, no deadline (time_budget=0
+    # keeps CBC wall-time jitter out of a wall-clock assertion)
+    ref = Simulator(list(events), jobs_fn(),
+                    AllocationEngine(time_budget=0.0),
+                    t_fwd=120.0, pj_max=10, horizon=sc.duration).run()
+    u_ref = ref.total_samples / a_s if a_s > 0 else 0.0
+    for ms in DEADLINE_MS:
+        eng = AllocationEngine(time_budget=0.0,
+                               decision_deadline_s=ms / 1e3)
+        rep = Simulator(list(events), jobs_fn(), eng, t_fwd=120.0,
+                        pj_max=10, horizon=sc.duration).run()
+        u = rep.total_samples / a_s if a_s > 0 else 0.0
+        walls = np.array([r.solver_wall for r in rep.event_records
+                          if r.solver_wall > 0.0]) * 1e3
+        within = (float(np.mean(walls <= ms)) if len(walls) else 1.0)
+        p99 = float(np.percentile(walls, 99)) if len(walls) else 0.0
+        s = eng.stats
+        row = {
+            "deadline_ms": ms,
+            "u": u,
+            "u_frac_of_ref": (u / u_ref) if u_ref > 0 else 0.0,
+            "within_deadline_frac": within,
+            "deadline_hits": s.deadline_hits,
+            "rung_cache": s.rung_cache,
+            "rung_repair": s.rung_repair,
+            "rung_greedy": s.rung_greedy,
+            "rung_milp": s.rung_milp,
+            "rung_project": s.rung_project,
+            "rung_equal": s.rung_equal,
+            "upgrades": s.upgrades,
+            "events": rep.events_processed,
+            "decision_ms_p99": p99,
+        }
+        payload["deadline"].append(row)
+        tag = f"resilience/{scenario}/deadline_{ms:g}ms"
+        emit(f"{tag}/within_deadline_frac", f"{within:.3f}",
+             "fraction of decisions inside the hard deadline")
+        emit(f"{tag}/u_frac_of_ref", f"{row['u_frac_of_ref']:.3f}")
+        emit(f"{tag}/deadline_hits", s.deadline_hits,
+             "decisions where the ladder demoted a rung")
+        emit(f"{tag}/decision_ms_p99", f"{p99:.2f}")
+    maybe_write_json("BENCH_resilience.json", payload)
+
+
+def main(argv: Sequence[str] = ()) -> None:
+    # default () — benchmarks.run calls main() with section names still in
+    # sys.argv, so only the __main__ guard forwards the real CLI args
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace for CI smoke runs")
+    args = ap.parse_args(argv)
+    smoke = args.smoke or bool(int(os.environ.get("BENCH_SMOKE", "0")))
+    scale = 0.15 if smoke else (1.0 if FULL else 0.5)
+    run_sweep(scale)
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

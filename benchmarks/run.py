@@ -9,7 +9,8 @@ paper-scale variants, BENCH_SMOKE=1 (or ``--smoke``) for CI-scale runs.
 from ``scale``, ``BENCH_chaos.json`` from ``chaos``,
 ``BENCH_objectives.json`` from ``objectives``,
 ``BENCH_scalability.json`` from ``scalability``,
-``BENCH_serving.json`` from ``serving``) into DIR (default:
+``BENCH_serving.json`` from ``serving``,
+``BENCH_resilience.json`` from ``resilience``) into DIR (default:
 the current directory), validated
 against ``benchmarks.schema`` — the artifacts CI uploads per commit
 and ``scripts/bench_compare.py`` diffs against the committed baselines
@@ -41,6 +42,8 @@ SECTIONS = [
      "benchmarks.bench_chaos"),
     ("serving", "Elastic serving: SLO attainment on harvested holes vs "
      "dedicated nodes", "benchmarks.bench_serving"),
+    ("resilience", "Self-healing control plane: stream corruption repair + "
+     "decision-deadline ladder", "benchmarks.bench_resilience"),
     ("pjmax", "Fig 14: max parallel Trainers", "benchmarks.bench_pjmax"),
     ("scalability", "Fig 15: per-DNN scalability", "benchmarks.bench_scalability"),
     ("rescale_cost", "Fig 16: rescale-cost sweep", "benchmarks.bench_rescale_cost"),

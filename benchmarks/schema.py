@@ -21,6 +21,7 @@ CHAOS_SCHEMA = "bftrainer-bench-chaos/2"
 OBJECTIVES_SCHEMA = "bftrainer-bench-objectives/1"
 SCALABILITY_SCHEMA = "bftrainer-bench-scalability/1"
 SERVING_SCHEMA = "bftrainer-bench-serving/1"
+RESILIENCE_SCHEMA = "bftrainer-bench-resilience/1"
 
 #: BENCH_week.json — one week-trace replay, engine vs the PR-4 baseline
 #: (per-event aggregate MILP), both measured in the same run.
@@ -101,6 +102,27 @@ SERVING_ROW_KEYS = ["scenario", "n_nodes", "hours", "services",
                     "attainment_vs_dedicated", "events",
                     "decision_ms_p50", "decision_ms_p95",
                     "decision_ms_p99"]
+
+
+#: BENCH_resilience.json — the self-healing control-plane sweeps
+#: (DESIGN.md §16): efficiency retention under event-stream corruption
+#: repaired by hygiene + anti-entropy (CI floor: ``u_frac_of_clean`` >=
+#: 0.85 at 1% corruption), and the hard-deadline degradation ladder
+#: (CI asserts ``within_deadline_frac`` == 1.0 on every row).
+RESILIENCE_KEYS = ["schema", "generated_unix", "scenario", "scale",
+                   "seed", "u_clean", "corruption", "deadline"]
+RESILIENCE_CORRUPTION_ROW_KEYS = ["corrupt_prob", "u", "u_frac_of_clean",
+                                  "divergence_frac", "max_lag_s",
+                                  "defects", "duplicates_dropped",
+                                  "late_dropped", "phantom_joins",
+                                  "orphan_leaves", "repair_events",
+                                  "reconciles", "events"]
+RESILIENCE_DEADLINE_ROW_KEYS = ["deadline_ms", "u", "u_frac_of_ref",
+                                "within_deadline_frac", "deadline_hits",
+                                "rung_cache", "rung_repair",
+                                "rung_greedy", "rung_milp",
+                                "rung_project", "rung_equal", "upgrades",
+                                "events", "decision_ms_p99"]
 
 
 def bench_payload(schema: str) -> Dict:
@@ -192,11 +214,27 @@ def validate_bench_payload(payload: Dict) -> List[str]:
         else:
             for i, row in enumerate(rows):
                 need(row, SERVING_ROW_KEYS, f"serving.scenarios[{i}]")
+    elif schema == RESILIENCE_SCHEMA:
+        need(payload, RESILIENCE_KEYS, "resilience")
+        rows = payload.get("corruption", [])
+        if not isinstance(rows, list) or not rows:
+            errors.append("resilience.corruption: expected a non-empty list")
+        else:
+            for i, row in enumerate(rows):
+                need(row, RESILIENCE_CORRUPTION_ROW_KEYS,
+                     f"resilience.corruption[{i}]")
+        rows = payload.get("deadline", [])
+        if not isinstance(rows, list) or not rows:
+            errors.append("resilience.deadline: expected a non-empty list")
+        else:
+            for i, row in enumerate(rows):
+                need(row, RESILIENCE_DEADLINE_ROW_KEYS,
+                     f"resilience.deadline[{i}]")
     else:
         errors.append(f"unknown schema {schema!r} (expected {WEEK_SCHEMA!r}, "
                       f"{ALLOCATOR_SCHEMA!r}, {CHAOS_SCHEMA!r}, "
-                      f"{OBJECTIVES_SCHEMA!r}, {SCALABILITY_SCHEMA!r} or "
-                      f"{SERVING_SCHEMA!r})")
+                      f"{OBJECTIVES_SCHEMA!r}, {SCALABILITY_SCHEMA!r}, "
+                      f"{SERVING_SCHEMA!r} or {RESILIENCE_SCHEMA!r})")
     return errors
 
 

@@ -51,6 +51,8 @@ ROW_KEYS = {
     ("objectives", "metrics"): ("metric",),
     ("scalability", "rows"): ("dnn",),
     ("serving", "scenarios"): ("scenario",),
+    ("resilience", "corruption"): ("corrupt_prob",),
+    ("resilience", "deadline"): ("deadline_ms",),
 }
 
 #: top-level keys that are never compared numerically

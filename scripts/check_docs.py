@@ -100,6 +100,11 @@ def check_bench_schema(root: Path) -> list:
         "BENCH_scalability.json rows[]": schema.SCALABILITY_ROW_KEYS,
         "BENCH_serving.json": schema.SERVING_KEYS,
         "BENCH_serving.json scenarios[]": schema.SERVING_ROW_KEYS,
+        "BENCH_resilience.json": schema.RESILIENCE_KEYS,
+        "BENCH_resilience.json corruption[]":
+            schema.RESILIENCE_CORRUPTION_ROW_KEYS,
+        "BENCH_resilience.json deadline[]":
+            schema.RESILIENCE_DEADLINE_ROW_KEYS,
     }
     failures = []
     exp = root / "EXPERIMENTS.md"
@@ -125,7 +130,8 @@ def check_bench_schema(root: Path) -> list:
                 f"benchmarks.schema {sorted(keys)}")
     for artifact in ("BENCH_week.json", "BENCH_allocator.json",
                      "BENCH_chaos.json", "BENCH_objectives.json",
-                     "BENCH_scalability.json", "BENCH_serving.json"):
+                     "BENCH_scalability.json", "BENCH_serving.json",
+                     "BENCH_resilience.json"):
         p = root / artifact
         if p.exists():
             failures.extend(schema.validate_bench_file(str(p)))

@@ -23,6 +23,7 @@ from repro.chaos.faults import (
     ChaosSpec,
     FaultEvent,
     FaultSchedule,
+    corrupt_stream,
     generate_fault_schedule,
     inject_faults,
 )
@@ -37,6 +38,7 @@ __all__ = [
     "ChaosSpec",
     "FaultEvent",
     "FaultSchedule",
+    "corrupt_stream",
     "generate_fault_schedule",
     "inject_faults",
     "ChaosBackend",

@@ -65,11 +65,29 @@ class ChaosSpec:
     # --- trainer-side fault handling (applied to jobs by the harness) ---
     ckpt_every: Optional[float] = None  # checkpoint lattice (progress units)
     restart_penalty: float = 0.0        # extra stall per kill (s)
+    # --- control-plane stream corruption (DESIGN.md §16) ---
+    # These attack the *event feed*, not the nodes: the stream the
+    # control plane sees is duplicated/reordered/late/lossy while the
+    # physical pool follows the clean stream.  corrupt_stream() applies
+    # them; the resilience layer (hygiene + reconciler) repairs them.
+    duplicate_prob: float = 0.0         # P(event delivered twice)
+    reorder_window: float = 0.0         # arrival jitter bound (s)
+    drop_prob: float = 0.0              # P(event never delivered)
+    late_prob: float = 0.0              # P(arrival beyond reorder_window)
+    late_by: float = 3600.0             # how far beyond the window (s)
+    reconcile_period_s: float = 300.0   # anti-entropy cadence (s)
 
     @property
     def fault_free(self) -> bool:
         return (self.mtbf is None and self.straggler_rate <= 0.0
                 and self.blackout_every is None)
+
+    @property
+    def stream_clean(self) -> bool:
+        """True when no stream-corruption knob is active —
+        :func:`corrupt_stream` is then the identity."""
+        return (self.duplicate_prob <= 0.0 and self.reorder_window <= 0.0
+                and self.drop_prob <= 0.0 and self.late_prob <= 0.0)
 
 
 @dataclass(frozen=True)
@@ -262,3 +280,47 @@ def inject_faults(events: Sequence[PoolEvent],
         else:
             out.append(PoolEvent(time=f.time, failed=(f.node,)))
     return merge_events(out)
+
+
+def corrupt_stream(events: Sequence[PoolEvent],
+                   spec: ChaosSpec) -> List[PoolEvent]:
+    """Corrupt the *delivery* of an event stream (DESIGN.md §16).
+
+    Models a lossy monitor feed: each event is independently dropped
+    (``drop_prob``), duplicated (``duplicate_prob``, the copy arriving
+    later), jittered in arrival time within ``reorder_window`` seconds,
+    or delivered late beyond the window (``late_prob``, by ``late_by``
+    seconds — hygiene must drop it and the reconciler repair it).  Every
+    delivered copy keeps the event's original ``time`` stamp and gains a
+    monotone ``seq`` reflecting the monitor's emission order; the
+    returned list is in **arrival order** (sorted by arrival, stably),
+    which is the order ``EventHygiene.push`` must consume.
+
+    Deterministic in ``(events, spec)``: one rng seeded from
+    ``spec.seed``.  With every corruption knob at zero this returns the
+    seq-stamped stream in its original order — the identity fast path
+    the zero-corruption parity tests pin down.
+    """
+    evs = merge_events(events)
+    stamped = [PoolEvent(time=e.time, joined=e.joined, left=e.left,
+                         failed=e.failed, pool=e.pool, seq=i)
+               for i, e in enumerate(evs)]
+    if spec.stream_clean:
+        return stamped
+    rng = np.random.default_rng(spec.seed + 0x5EED)
+    arrivals: List[Tuple[float, int, PoolEvent]] = []
+    for e in stamped:
+        if rng.random() < spec.drop_prob:
+            continue
+        jitter = (rng.uniform(0.0, spec.reorder_window)
+                  if spec.reorder_window > 0 else 0.0)
+        arr = e.time + jitter
+        if spec.late_prob > 0 and rng.random() < spec.late_prob:
+            arr = e.time + spec.reorder_window + spec.late_by
+        arrivals.append((arr, e.seq, e))
+        if rng.random() < spec.duplicate_prob:
+            dup_arr = arr + (rng.uniform(0.0, spec.reorder_window)
+                             if spec.reorder_window > 0 else 0.0)
+            arrivals.append((dup_arr, e.seq, e))
+    arrivals.sort(key=lambda it: (it[0], it[1]))
+    return [e for _, _, e in arrivals]

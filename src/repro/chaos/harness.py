@@ -18,6 +18,7 @@ from repro.chaos.backend import ChaosBackend
 from repro.chaos.faults import (
     ChaosSpec,
     FaultSchedule,
+    corrupt_stream,
     generate_fault_schedule,
     inject_faults,
 )
@@ -54,6 +55,14 @@ class ChaosReport:
     allocator_restarts: int = 0
     recovered_cache_entries: int = 0
     corrupt_restores: int = 0
+    # stream-corruption repair bookkeeping (DESIGN.md §16); None when
+    # the spec's corruption knobs are all zero
+    hygiene: Optional[object] = None        # resilience.HygieneStats
+    reconcile: Optional[object] = None      # resilience.ReconcileStats
+    divergence: Optional[dict] = None       # membership_divergence()
+    # supply integral of the *true* (uncorrupted) stream; equals
+    # pool_node_seconds on a clean feed
+    true_pool_node_seconds: float = 0.0
 
     @property
     def n_kills(self) -> int:
@@ -89,6 +98,24 @@ def run_chaos(events: Sequence[PoolEvent], jobs: Sequence[TrainerJob],
     chaos_events = inject_faults(events, schedule)
     if horizon is None:
         horizon = max((e.time for e in chaos_events), default=0.0)
+    # control-plane stream corruption (DESIGN.md §16): the physical
+    # fleet follows chaos_events (truth); the loop sees what survives
+    # delivery + hygiene + anti-entropy repair
+    run_events = chaos_events
+    hygiene_stats = reconcile_stats = divergence = None
+    if not spec.stream_clean:
+        from repro.resilience import (
+            membership_divergence,
+            membership_oracle,
+            sanitize_stream,
+        )
+        corrupted = corrupt_stream(chaos_events, spec)
+        run_events, hygiene_stats, reconcile_stats = sanitize_stream(
+            corrupted, reorder_window=spec.reorder_window,
+            oracle=membership_oracle(chaos_events),
+            reconcile_period_s=spec.reconcile_period_s)
+        divergence = membership_divergence(chaos_events, run_events,
+                                           t_end=horizon)
     crash_times: List[float] = []
     if spec.crash_every and chaos_events:
         t = chaos_events[0].time + spec.crash_every
@@ -115,17 +142,20 @@ def run_chaos(events: Sequence[PoolEvent], jobs: Sequence[TrainerJob],
             telemetry.count("chaos.stragglers")
             telemetry.instant("chaos", "straggler-episode", ev.time,
                               duration=ev.duration, factor=ev.factor)
-    stats = ControlLoop(chaos_events, jobs, allocator, chaos_backend,
+    stats = ControlLoop(run_events, jobs, allocator, chaos_backend,
                         t_fwd=t_fwd, pj_max=pj_max, horizon=horizon,
                         coalesce_window=coalesce_window,
                         objective=objective, telemetry=telemetry).run()
     return ChaosReport(
         stats=stats, spec=spec, schedule=schedule,
-        events=chaos_events, jobs=jobs,
-        pool_node_seconds=pool_node_seconds(chaos_events, horizon),
+        events=run_events, jobs=jobs,
+        pool_node_seconds=pool_node_seconds(run_events, horizon),
         allocator_restarts=allocator.restarts,
         recovered_cache_entries=allocator.recovered_entries,
-        corrupt_restores=chaos_backend.corrupt_restores)
+        corrupt_restores=chaos_backend.corrupt_restores,
+        hygiene=hygiene_stats, reconcile=reconcile_stats,
+        divergence=divergence,
+        true_pool_node_seconds=pool_node_seconds(chaos_events, horizon))
 
 
 @dataclass

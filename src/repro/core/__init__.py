@@ -10,12 +10,14 @@ from repro.core.backend import (
 )
 from repro.core.engine import AllocationEngine, EngineStats, problem_signature
 from repro.core.events import (
+    EventStreamError,
     Fragment,
     PoolEvent,
     fragments_to_events,
     merge_events,
     merge_fragments,
     pool_sizes,
+    validate_events,
     validate_fragments,
 )
 from repro.core.greedy import PAIR_REPAIR_MAX_TRAINERS, solve_greedy
@@ -61,8 +63,9 @@ __all__ = [
     "ControlLoop", "EventRecord", "LoopStats",
     "AllocationEngine", "EngineStats", "problem_signature", "solve_greedy",
     "PAIR_REPAIR_MAX_TRAINERS", "cached_value_table",
-    "Fragment", "PoolEvent", "fragments_to_events", "merge_events",
-    "merge_fragments", "pool_sizes", "validate_fragments",
+    "EventStreamError", "Fragment", "PoolEvent", "fragments_to_events",
+    "merge_events", "merge_fragments", "pool_sizes", "validate_events",
+    "validate_fragments",
     "Efficiency", "ROI", "eq_nodes", "resource_integral",
     "jain_fairness", "normalized_progress", "min_normalized_progress",
     "deadline_miss_rate",

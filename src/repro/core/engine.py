@@ -130,6 +130,18 @@ class EngineStats:
     wall_time: float = 0.0
     restores: int = 0             # warm-state snapshot restores applied
     restored_entries: int = 0     # cache entries recovered across restores
+    # deadline-ladder counters (DESIGN.md §16): populated only when
+    # ``decision_deadline_s`` is set.  ``deadline_hits`` counts decisions
+    # where the ladder had to skip at least one portfolio stage;
+    # ``rung_*`` counts which ladder rung produced each decision.
+    deadline_hits: int = 0
+    rung_cache: int = 0
+    rung_repair: int = 0
+    rung_greedy: int = 0
+    rung_milp: int = 0
+    rung_project: int = 0         # projected previous map (clamped)
+    rung_equal: int = 0           # equal-share bottom rung
+    upgrades: int = 0             # async re-solves of degraded decisions
 
     def as_dict(self) -> Dict[str, float]:
         # dataclasses-derived: a new counter field automatically appears
@@ -168,20 +180,47 @@ _MIRROR_NAMES = {f.name: f"engine.{f.name}"
                  for f in dataclasses.fields(EngineStats)}
 #: precomputed per-arm decision-latency histogram names
 _ARM_HIST = {arm: f"engine.decision_ms.{arm}"
-             for arm in ("cache", "repair", "greedy", "milp", "fallback")}
+             for arm in ("cache", "repair", "greedy", "milp", "fallback",
+                         "project", "equal")}
+#: ladder rung -> EngineStats counter field (precomputed: no f-string on
+#: the per-decision path)
+_RUNG_FIELD = {r: f"rung_{r}" for r in
+               ("cache", "repair", "greedy", "milp", "project", "equal")}
 
 
 def _decision_arm(solver_status: str) -> str:
     """Classify a result's producing solver arm for the per-arm
     decision-latency histograms (``engine.decision_ms.<arm>``)."""
-    if solver_status.startswith("cache("):
+    s = solver_status.split("+rung:", 1)[0]
+    if s.startswith("cache("):
         return "cache"
-    if solver_status == "greedy-repair":
+    if s == "greedy-repair":
         return "repair"
-    if solver_status == "greedy":
+    if s == "greedy":
         return "greedy"
-    if solver_status == "engine-fallback":
+    if s == "deadline-project":
+        return "project"
+    if s == "deadline-equal":
+        return "equal"
+    if s == "engine-fallback":
         return "fallback"
+    return "milp"
+
+
+def _rung_of(solver_status: str) -> str:
+    """Map a result's status to its deadline-ladder rung.  The §3.6
+    fallback keeps the current map, which *is* the project rung."""
+    s = solver_status
+    if s.startswith("cache("):
+        return "cache"
+    if s == "greedy-repair":
+        return "repair"
+    if s == "greedy":
+        return "greedy"
+    if s == "deadline-project" or s == "engine-fallback":
+        return "project"
+    if s == "deadline-equal":
+        return "equal"
     return "milp"
 
 
@@ -194,6 +233,11 @@ def _est_fast_milp(n_nodes: int, n_jobs: int) -> float:
 
 def _est_node_milp(n_nodes: int, n_jobs: int) -> float:
     return 5e-3 + 2e-5 * n_nodes * n_nodes * max(1, n_jobs)
+
+
+def _est_greedy(n_nodes: int, n_jobs: int) -> float:
+    # vectorized water-filling: ~46 ms at 4096 nodes x 64 jobs
+    return 2e-4 + 5e-5 * n_jobs + 2e-7 * n_nodes * n_jobs
 
 
 class AllocationEngine(Allocator):
@@ -259,6 +303,8 @@ class AllocationEngine(Allocator):
                  use_greedy: bool = True, use_node_milp: bool = False,
                  cache_size: int = 4096, incremental: bool = True,
                  repair_gap: float = 1e-3, repair_exact_gap: float = 1e-9,
+                 decision_deadline_s: Optional[float] = None,
+                 upgrade_backlog: int = 64,
                  telemetry: Optional[Telemetry] = None):
         self.time_budget = time_budget
         self.use_greedy = use_greedy
@@ -267,6 +313,15 @@ class AllocationEngine(Allocator):
         self.incremental = incremental
         self.repair_gap = repair_gap
         self.repair_exact_gap = repair_exact_gap
+        # hard per-decision deadline (DESIGN.md §16): when set, each
+        # portfolio stage only runs if its static cost estimate fits the
+        # measured remaining time, degrading down the ladder
+        # cache -> repair -> greedy -> MILP -> project -> equal-share so
+        # *some* feasible map always returns within the deadline.  None
+        # (the default) disables the ladder entirely — behaviour and
+        # results are then bit-identical to the pre-ladder engine.
+        self.decision_deadline_s = decision_deadline_s
+        self.upgrade_backlog = int(upgrade_backlog)
         # telemetry is observation-only (repro.obs): decisions never read
         # it, so an enabled hub cannot perturb allocations.  The default
         # NULL_TELEMETRY sink is falsy and drops everything.
@@ -278,6 +333,12 @@ class AllocationEngine(Allocator):
         # no string formatting) and flush into the hub once per decision
         # — batching the hub traffic out of the engine inner loop
         self._pending: Dict[str, float] = {}
+        # degraded decisions awaiting their async full re-solve
+        # (signature -> problem, FIFO, bounded by upgrade_backlog)
+        self._pending_upgrades: "OrderedDict[Signature, AllocationProblem]" = OrderedDict()
+        # set by _solve when the deadline forced it to skip a stage
+        self._degraded = False
+        self._equal_share = None    # lazy EqualShareAllocator
 
     def _count(self, name: str, delta=1) -> None:
         """Bump an ``EngineStats`` counter; the hub mirror is batched
@@ -302,6 +363,7 @@ class AllocationEngine(Allocator):
         t0 = time.perf_counter()
         self._count("events")
         key, order = problem_signature(prob)
+        deadline = self.decision_deadline_s
 
         cached = self._cache.get(key)
         if cached is not None:
@@ -309,18 +371,66 @@ class AllocationEngine(Allocator):
             self._count("cache_hits")
             res = self._ground(prob, order, *cached)
             res.wall_time = time.perf_counter() - t0
+            if deadline is not None:
+                self._finish_rung(res)
             self._finish_decision(res)
             return res
 
-        res = self._solve(prob)
-        if not res.fell_back:
+        self._degraded = False
+        res = self._solve(prob, t0=t0, deadline=deadline)
+        if self._degraded:
+            # a skipped stage means this answer may trail the full
+            # portfolio's: never memoize it, queue the async upgrade so
+            # the next epoch's identical problem is a fresh cache hit
+            self._count("deadline_hits")
+            self._pending_upgrades[key] = prob
+            while len(self._pending_upgrades) > self.upgrade_backlog:
+                self._pending_upgrades.popitem(last=False)
+        elif not res.fell_back:
             counts = tuple(res.counts[prob.trainers[i].id] for i in order)
             self._cache[key] = (counts, res.objective, res.solver_status)
             if len(self._cache) > self.cache_size:
                 self._cache.popitem(last=False)
         res.wall_time = time.perf_counter() - t0
+        if deadline is not None:
+            self._finish_rung(res)
         self._finish_decision(res)
         return res
+
+    def _finish_rung(self, res: AllocationResult) -> None:
+        """Stamp the ladder rung into the result's ``solver_status`` and
+        bump its counter — only under an active deadline, so inactive
+        runs keep their historical statuses byte-for-byte."""
+        rung = _rung_of(res.solver_status)
+        self._count(_RUNG_FIELD[rung])
+        res.solver_status = f"{res.solver_status}+rung:{rung}"
+
+    def upgrade(self, max_items: Optional[int] = None) -> int:
+        """Async re-solve of deadline-degraded decisions (DESIGN.md
+        §16): run the *full* portfolio (no deadline) on each queued
+        problem and memoize the result, so the next identical event is
+        an optimal cache hit.  Called off the hot path — e.g. by
+        ``FederatedLoop`` at epoch boundaries.  Returns the number of
+        problems upgraded."""
+        done = 0
+        while self._pending_upgrades and (max_items is None or
+                                          done < max_items):
+            key, prob = self._pending_upgrades.popitem(last=False)
+            self._degraded = False
+            res = self._solve(prob)
+            if not res.fell_back:
+                _, order = problem_signature(prob)
+                counts = tuple(res.counts[prob.trainers[i].id]
+                               for i in order)
+                self._cache[key] = (counts, res.objective,
+                                    res.solver_status)
+                while len(self._cache) > self.cache_size:
+                    self._cache.popitem(last=False)
+            self._count("upgrades")
+            done += 1
+        if self.telemetry:
+            self._flush_counts()
+        return done
 
     def _finish_decision(self, res: AllocationResult) -> None:
         """Account one decision: the ``wall_time`` sum stays (report
@@ -361,6 +471,8 @@ class AllocationEngine(Allocator):
                 "incremental": self.incremental,
                 "repair_gap": self.repair_gap,
                 "repair_exact_gap": self.repair_exact_gap,
+                "decision_deadline_s": self.decision_deadline_s,
+                "upgrade_backlog": self.upgrade_backlog,
             },
             "cache": [[key, list(val)] for key, val in self._cache.items()],
             "stats": self.stats.as_dict(),
@@ -414,10 +526,28 @@ class AllocationEngine(Allocator):
                                 objective=objective, wall_time=0.0,
                                 solver_status=f"cache({status})")
 
-    def _solve(self, prob: AllocationProblem) -> AllocationResult:
+    def _solve(self, prob: AllocationProblem, *,
+               t0: Optional[float] = None,
+               deadline: Optional[float] = None) -> AllocationResult:
         n, j = len(prob.nodes), len(prob.trainers)
         budget = self.time_budget
         best: Optional[AllocationResult] = None
+
+        # deadline ladder (DESIGN.md §16): each stage runs only if its
+        # static cost estimate fits the measured remaining time.  With
+        # no deadline every fits() is True and the portfolio below is
+        # byte-identical to the pre-ladder engine.
+        if deadline is not None and t0 is not None:
+            def fits(est: float) -> bool:
+                return est <= deadline - (time.perf_counter() - t0)
+        else:
+            def fits(est: float) -> bool:
+                return True
+
+        if deadline is not None and not fits(_est_greedy(n, j)):
+            # not even the greedy fits: take the O(n + j) bottom rungs
+            self._degraded = True
+            return self._degrade(prob)
 
         # incremental warm-start repair (DESIGN.md §11): the previous
         # allocation *is* the problem's current map, so repair = greedy
@@ -465,15 +595,21 @@ class AllocationEngine(Allocator):
         # estimators and the configured budget — never measured wall-clock —
         # so identical problem sequences make identical decisions run-to-run.
         if budget > 0 and _est_fast_milp(n, j) <= budget:
-            r = solve_fast_milp(prob, time_limit=max(budget, 1e-3))
-            self._count("fast_milp_solves")
-            best = _better(best, r)
+            if fits(_est_fast_milp(n, j)):
+                r = solve_fast_milp(prob, time_limit=max(budget, 1e-3))
+                self._count("fast_milp_solves")
+                best = _better(best, r)
+            else:
+                self._degraded = True
 
         if self.use_node_milp and budget > 0 and \
                 _est_node_milp(n, j) <= budget:
-            r = solve_node_milp(prob, time_limit=max(budget, 1e-3))
-            self._count("node_milp_solves")
-            best = _better(best, r)
+            if fits(_est_node_milp(n, j)):
+                r = solve_node_milp(prob, time_limit=max(budget, 1e-3))
+                self._count("node_milp_solves")
+                best = _better(best, r)
+            else:
+                self._degraded = True
 
         if best is None or best.fell_back:
             # §3.6: keep the current map
@@ -486,6 +622,32 @@ class AllocationEngine(Allocator):
                 objective=None, wall_time=0.0,
                 solver_status="engine-fallback", fell_back=True)
         return best
+
+    def _degrade(self, prob: AllocationProblem) -> AllocationResult:
+        """Deadline bottom rungs.  **project**: keep the previous map,
+        clamped into feasibility (counts capped at ``n_max``; a count
+        stranded in ``(0, n_min)`` drops to 0) — minimal churn, O(n).
+        When there is no previous map to project (cold start), fall to
+        **equal-share**, which is feasible by construction."""
+        current = project_current(prob)
+        counts = {}
+        for t in prob.trainers:
+            c = min(len(current[t.id]), t.n_max)
+            if 0 < c < t.n_min:
+                c = 0
+            counts[t.id] = c
+        if any(counts.values()):
+            allocation = reconstruct_map(list(prob.nodes), prob.trainers,
+                                         current, counts)
+            return AllocationResult(
+                allocation=allocation, counts=counts, objective=None,
+                wall_time=0.0, solver_status="deadline-project")
+        if self._equal_share is None:
+            from repro.core.allocator import EqualShareAllocator
+            self._equal_share = EqualShareAllocator()
+        res = self._equal_share.allocate(prob)
+        res.solver_status = "deadline-equal"
+        return res
 
 
 def _better(a: Optional[AllocationResult],

@@ -43,6 +43,18 @@ class PoolEvent:
     # on single-pool streams.  Set by ``split_events_by_pool`` — every
     # node in a tagged event belongs to that pool.
     pool: Optional[int] = None
+    # monotone per-stream sequence number stamped by the resource
+    # monitor (DESIGN.md §16); ``None`` on trusted offline streams.
+    # The hygiene layer uses it for dedup and same-instant conflict
+    # resolution; everything downstream ignores it.
+    seq: Optional[int] = None
+
+
+class EventStreamError(ValueError):
+    """A malformed control-plane event stream: a leave/fail of a node
+    that is not in the believed pool, a join of a node already live, or
+    a negative pool size.  Raised only in ``strict=True`` paths — the
+    default folds stay permissive for backward compatibility."""
 
 
 def fragments_to_events(fragments: Sequence[Fragment]) -> List[PoolEvent]:
@@ -139,27 +151,107 @@ def split_events_by_pool(events: Sequence[PoolEvent],
     return out
 
 
-def apply_events(live: Set[int], events: Sequence[PoolEvent]) -> Set[int]:
+def apply_events(live: Set[int], events: Sequence[PoolEvent], *,
+                 strict: bool = False) -> Set[int]:
     """Fold ``events`` over a live-node set: joins add, leaves and
     failures remove.  Returns a new set (``live`` is not mutated) — the
     federated layer uses this to carry each pool's membership across
-    decision epochs even when the pool's loop short-circuits."""
+    decision epochs even when the pool's loop short-circuits.
+
+    With ``strict=True`` a join of an already-live node or a leave/fail
+    of an unknown node raises :class:`EventStreamError` instead of
+    folding silently — the resilience layer (DESIGN.md §16) runs its
+    believed-membership state machine in this mode so corruption cannot
+    hide inside set semantics.
+    """
     out = set(live)
     for e in events:
+        if strict:
+            for n in e.joined:
+                if n in out:
+                    raise EventStreamError(
+                        f"t={e.time}: join of already-live node {n}")
+            for n in e.left:
+                if n not in out:
+                    raise EventStreamError(
+                        f"t={e.time}: leave of unknown node {n}")
+            for n in e.failed:
+                if n not in out:
+                    raise EventStreamError(
+                        f"t={e.time}: failure of unknown node {n}")
         out.update(e.joined)
         out.difference_update(e.left)
         out.difference_update(e.failed)
     return out
 
 
-def pool_sizes(events: Sequence[PoolEvent]) -> List[Tuple[float, int]]:
-    """(time, |N|) step function after each event."""
+def pool_sizes(events: Sequence[PoolEvent], *,
+               strict: bool = False) -> List[Tuple[float, int]]:
+    """(time, |N|) step function after each event.
+
+    With ``strict=True`` a negative running size raises
+    :class:`EventStreamError` — a stream that removes more nodes than
+    ever joined is corrupt, and the permissive default would silently
+    report impossible pool sizes.
+    """
     size = 0
     out = []
     for e in events:
         size += len(e.joined) - len(e.left) - len(e.failed)
+        if strict and size < 0:
+            raise EventStreamError(
+                f"t={e.time}: pool size went negative ({size})")
         out.append((e.time, size))
     return out
+
+
+def validate_events(events: Sequence[PoolEvent],
+                    initial: Iterable[int] = ()) -> List[str]:
+    """Return a list of human-readable problems in an event stream
+    (empty when clean).  Non-raising companion to the ``strict=`` modes:
+    the hygiene layer calls this to *count and classify* defects while
+    still making progress, whereas ``apply_events(..., strict=True)``
+    hard-fails on the first one.
+
+    Checks, folding in order: non-monotone timestamps, joins of live
+    nodes, leaves/failures of unknown nodes, duplicate ``seq`` stamps,
+    and a node appearing in more than one action of a single event.
+    """
+    problems: List[str] = []
+    live = set(initial)
+    seen_seq: Set[int] = set()
+    last_t = float("-inf")
+    for e in events:
+        if e.time < last_t:
+            problems.append(
+                f"t={e.time}: timestamp regresses (prev {last_t})")
+        last_t = max(last_t, e.time)
+        if e.seq is not None:
+            if e.seq in seen_seq:
+                problems.append(f"t={e.time}: duplicate seq {e.seq}")
+            seen_seq.add(e.seq)
+        sets = (set(e.joined), set(e.left), set(e.failed))
+        for i in range(3):
+            for j in range(i + 1, 3):
+                for n in sorted(sets[i] & sets[j]):
+                    problems.append(
+                        f"t={e.time}: node {n} in multiple actions "
+                        f"of one event")
+        for n in e.joined:
+            if n in live:
+                problems.append(
+                    f"t={e.time}: join of already-live node {n}")
+        for n in e.left:
+            if n not in live:
+                problems.append(f"t={e.time}: leave of unknown node {n}")
+        for n in e.failed:
+            if n not in live:
+                problems.append(
+                    f"t={e.time}: failure of unknown node {n}")
+        live.update(e.joined)
+        live.difference_update(e.left)
+        live.difference_update(e.failed)
+    return problems
 
 
 def validate_fragments(fragments: Iterable[Fragment]) -> None:

@@ -23,10 +23,21 @@ class EventRouter:
     epoch windows are half-open ``[t0, t1)``, so an event at exactly the
     boundary belongs to the *next* epoch (matching ``ControlLoop``'s
     ``t_start`` filter, which is inclusive).
+
+    Drained prefixes are compacted away once a queue's head pointer
+    crosses ``compact_threshold`` entries: week-scale federated replays
+    previously retained every event of the stream per pool (the head
+    only ever advanced), which is O(stream) resident memory; compaction
+    makes it O(pending).  ``pending`` / ``next_time`` semantics are
+    unchanged (regression-tested in tests/test_resilience.py).
     """
 
-    def __init__(self, pool_map: PoolMap):
+    def __init__(self, pool_map: PoolMap, *, compact_threshold: int = 1024):
+        if compact_threshold < 1:
+            raise ValueError("compact_threshold must be >= 1")
         self.pool_map = pool_map
+        self.compact_threshold = compact_threshold
+        self.compactions = 0
         self._queues: Dict[int, List[PoolEvent]] = {
             k: [] for k in range(pool_map.n_pools)}
         self._heads: Dict[int, int] = {k: 0 for k in self._queues}
@@ -56,6 +67,12 @@ class EventRouter:
                 tail += 1
         out = q[head:tail]
         self._heads[pool] = tail
+        if tail >= self.compact_threshold:
+            # drop the drained prefix; pending events (and their order)
+            # are untouched, so pending()/next_time() see no difference
+            del q[:tail]
+            self._heads[pool] = 0
+            self.compactions += 1
         return out
 
     def pending(self, pool: int) -> int:

@@ -44,6 +44,7 @@ from repro.federation.ingest import EventRouter
 from repro.federation.rebalance import Migration, PoolView, Rebalancer
 from repro.federation.sharding import PoolMap, assign_jobs
 from repro.obs.telemetry import NULL_TELEMETRY, Histogram, Telemetry
+from repro.resilience.watchdog import PoolWatchdog
 
 
 @dataclass
@@ -60,6 +61,11 @@ class PoolStats:
     migrations_out: int = 0
     decision_walls: List[float] = field(default_factory=list)
     engine: Optional[EngineStats] = None
+    # watchdog bookkeeping (DESIGN.md §16); all zero when no watchdog
+    failures: int = 0               # epochs whose solve raised
+    timeouts: int = 0               # epochs whose max decision wall blew
+    quarantined_epochs: int = 0     # epochs skipped while quarantined
+    state: str = "healthy"          # watchdog state at end of run
 
     def as_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -103,6 +109,11 @@ class FederatedStats:
     migrations: List[Migration] = field(default_factory=list)
     migration_stall_s: float = 0.0
     pools: List[PoolStats] = field(default_factory=list)
+    # -- watchdog extras (DESIGN.md §16; zero without a watchdog) --
+    pool_failures: int = 0
+    quarantines: int = 0
+    readmissions: int = 0
+    evacuations: int = 0
 
     def decision_walls(self) -> List[float]:
         """Fleet-wide per-solve wall times (seconds), pool order."""
@@ -164,6 +175,16 @@ class FederatedLoop:
     parallel : bool
         Solve pool windows concurrently (default True).  Pool state is
         disjoint, so results are identical either way.
+    decision_deadline_s : float, optional
+        Hard per-solve deadline threaded into the default per-pool
+        engines (DESIGN.md §16 degradation ladder).  None (default)
+        disables it — results are then bit-identical to pre-§16 runs.
+    watchdog : PoolWatchdog, optional
+        Per-pool health tracker enabling quarantine + probation on the
+        epoch path: a pool whose epoch raises (or blows
+        ``watchdog.timeout_s`` of per-decision wall) repeatedly is
+        frozen, its queued jobs evacuated to healthy pools.  None
+        (default) keeps the historical fail-loudly behaviour.
     """
 
     def __init__(self, events: Sequence[PoolEvent],
@@ -180,7 +201,9 @@ class FederatedLoop:
                  rebalance_every: int = 1,
                  rebalancer: Optional[Rebalancer] = None,
                  migration_cost_s: float = 0.0, parallel: bool = True,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 decision_deadline_s: Optional[float] = None,
+                 watchdog: Optional["PoolWatchdog"] = None):
         self.pool_map = pool_map or PoolMap.stride(n_pools)
         K = self.pool_map.n_pools
         self.events = list(events)
@@ -200,6 +223,13 @@ class FederatedLoop:
             migration_cost_s=migration_cost_s, sos2_points=sos2_points)
         self.parallel = parallel
         self.max_workers = max_workers
+        # self-healing knobs (DESIGN.md §16).  decision_deadline_s is
+        # threaded into the default per-pool engines (ladder-backed hard
+        # deadline per solve); the watchdog quarantines pools whose
+        # epochs raise or blow their timeout.  Both default off — the
+        # loop is then byte-identical to the pre-§16 behaviour.
+        self.decision_deadline_s = decision_deadline_s
+        self.watchdog = watchdog
         # nominal forward window for rebalance projections ("adaptive"
         # resolves per-pool inside each ControlLoop; the rebalancer uses
         # the paper's default constant)
@@ -217,7 +247,9 @@ class FederatedLoop:
 
         if allocator_factory is None:
             allocator_factory = (
-                lambda k: AllocationEngine(telemetry=self._pool_tel[k]))
+                lambda k: AllocationEngine(
+                    telemetry=self._pool_tel[k],
+                    decision_deadline_s=self.decision_deadline_s))
         self.fed_engine = FederatedEngine(self.pool_map, allocator_factory)
         self._backend_factory = backend_factory or (lambda k:
                                                     AnalyticBackend())
@@ -329,14 +361,26 @@ class FederatedLoop:
         epoch_s = self.epoch_s if self.epoch_s is not None \
             else max(span / 16.0, 1e-9)
 
+        wd = self.watchdog
+        evacuations = 0
+
         def one(k: int, a: float, b: float, evs: List[PoolEvent]):
+            if wd is not None and wd.is_quarantined(k):
+                # frozen map: events still drain (membership stays
+                # honest via the apply_events fold below) but no solve
+                return "quarantined"
             unfinished = [j for j in owned[k] if not j.finished]
             if not evs and not unfinished:
                 return None
             ns_before = sum(j.node_seconds for j in owned[k])
-            loop = self._pool_loop(k, evs, owned[k], t_start=a,
-                                   initial_pool=live[k], horizon=b)
-            s = loop.run()
+            try:
+                loop = self._pool_loop(k, evs, owned[k], t_start=a,
+                                       initial_pool=live[k], horizon=b)
+                s = loop.run()
+            except Exception as exc:
+                if wd is None:
+                    raise           # no watchdog: fail loudly, as before
+                return ("failed", exc)
             return s, sum(j.node_seconds for j in owned[k]) - ns_before
 
         a = t0
@@ -354,24 +398,78 @@ class FederatedLoop:
                 ps.supply_node_s += _supply_integral(len(live[k]),
                                                      drained[k], a, b)
                 live[k] = apply_events(live[k], drained[k])
-                if res is None:
+                if res == "quarantined":
+                    ps.quarantined_epochs += 1
                     continue
-                s, ns_delta = res
-                ps.events_processed += s.events_processed
-                ps.total_samples += s.total_samples
-                ps.solver_wall += s.solver_wall_total
-                ps.allocated_node_s += ns_delta
-                ps.decision_walls.extend(
-                    r.solver_wall for r in s.event_records
-                    if r.solver_wall > 0.0)
-                samples.append(s.total_samples)
+                if res is None:
+                    if wd is not None:
+                        wd.record(k)            # clean (idle) epoch
+                    continue
+                failed = timed_out = False
+                if isinstance(res, tuple) and res[0] == "failed":
+                    failed = True
+                    ps.failures += 1
+                    if self.telemetry:
+                        self.telemetry.instant(
+                            "federation", "pool-failure", b, pool=k,
+                            error=repr(res[1]))
+                else:
+                    s, ns_delta = res
+                    ps.events_processed += s.events_processed
+                    ps.total_samples += s.total_samples
+                    ps.solver_wall += s.solver_wall_total
+                    ps.allocated_node_s += ns_delta
+                    walls = [r.solver_wall for r in s.event_records
+                             if r.solver_wall > 0.0]
+                    ps.decision_walls.extend(walls)
+                    samples.append(s.total_samples)
+                    if wd is not None and walls and \
+                            wd.over_timeout(max(walls)):
+                        timed_out = True
+                        ps.timeouts += 1
+                if wd is not None:
+                    wd.record(k, failed=failed, timed_out=timed_out)
+
+            # quarantine housekeeping: evacuate queued jobs out of sick
+            # pools, then advance every pool's state clock
+            if wd is not None:
+                sick = wd.quarantined_pools()
+                if sick:
+                    views = [PoolView(k, len(live[k]),
+                                      [j for j in owned[k]
+                                       if not j.finished])
+                             for k in range(K)]
+                    for m in self.rebalancer.evacuate(views, sick, b):
+                        migration_stall += self._apply_migration(m, owned,
+                                                                 b)
+                        pools[m.src].migrations_out += 1
+                        pools[m.dst].migrations_in += 1
+                        migrations.append(m)
+                        evacuations += 1
+                        if self.telemetry:
+                            self.telemetry.instant(
+                                "federation", "evacuate", b, job=m.job_id,
+                                src=m.src, dst=m.dst)
+                for k in range(K):
+                    wd.tick(k)
+
+            # degraded decisions upgrade off the hot path, once per epoch
+            if self.decision_deadline_s is not None:
+                for k in range(K):
+                    alloc = self.fed_engine.engine(k)
+                    eng = getattr(alloc, "engine", alloc)
+                    up = getattr(eng, "upgrade", None)
+                    if up is not None:
+                        up(max_items=8)
 
             # cross-pool rebalance on the slow clock
             if self.rebalance and epoch % self.rebalance_every == 0 \
                     and b < t_end:
+                sick = set(wd.quarantined_pools()) if wd is not None \
+                    else set()
                 views = [PoolView(k, len(live[k]),
                                   [j for j in owned[k] if not j.finished])
-                         for k in range(K)]
+                         for k in range(K) if k not in sick]
                 for m in self.rebalancer.propose(self.objective, views,
                                                  self._t_fwd_nominal, b):
                     migration_stall += self._apply_migration(m, owned, b)
@@ -392,10 +490,17 @@ class FederatedLoop:
 
         for k in range(K):
             pools[k].n_jobs = len(owned[k])
+            if wd is not None:
+                pools[k].state = wd.state(k)
         stats = self._fleet_stats(
             samples, pools, jobs,
             makespan=self._makespan(jobs, t0, t_end), epochs=epoch,
             migrations=migrations, migration_stall_s=migration_stall)
+        if wd is not None:
+            stats.pool_failures = wd.stats.failures
+            stats.quarantines = wd.stats.quarantines
+            stats.readmissions = wd.stats.readmissions
+        stats.evacuations = evacuations
         self._finish_telemetry(stats)
         return stats
 

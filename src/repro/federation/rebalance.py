@@ -81,6 +81,37 @@ class Rebalancer:
 
     # ------------------------------------------------------------------
 
+    def evacuate(self, views: Sequence[PoolView], sick: Sequence[int],
+                 now: float) -> List[Migration]:
+        """Emergency reassignment out of quarantined pools (DESIGN.md
+        §16).  Unlike :meth:`propose` there is no patience or net-gain
+        test — a quarantined pool cannot solve at all, so any healthy
+        placement beats staying queued behind a frozen map.  Moves every
+        *queued* job (nodeless, unfinished — running jobs keep their
+        frozen allocation) into the healthy pool with the most spare
+        headroom, updating headroom as it goes.  Deterministic: ties
+        break toward the lowest pool id."""
+        sick_set = set(sick)
+        healthy = [v for v in views if v.pool not in sick_set]
+        if not healthy:
+            return []
+        spare = {v.pool: v.n_nodes - sum(j.n_min for j in v.jobs)
+                 for v in healthy}
+        moves: List[Migration] = []
+        for v in views:
+            if v.pool not in sick_set:
+                continue
+            for job in list(v.jobs):
+                if job.nodes or getattr(job, "finished", False):
+                    continue
+                dst = max(spare, key=lambda k: (spare[k], -k))
+                moves.append(Migration(job_id=job.id, src=v.pool, dst=dst,
+                                       time=now, gain=0.0, loss=0.0))
+                spare[dst] -= job.n_min
+                v.jobs.remove(job)
+                next(w for w in healthy if w.pool == dst).jobs.append(job)
+        return moves
+
     def _bound(self, obj, specs, counts, n_nodes, t_fwd) -> Optional[float]:
         if not specs:
             return 0.0

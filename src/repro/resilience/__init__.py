@@ -1,0 +1,20 @@
+# Self-healing control plane (DESIGN.md §16): event-stream hygiene in
+# front of the ControlLoop/EventRouter, anti-entropy reconciliation
+# against a ground-truth membership oracle, and the per-pool watchdog
+# that backs quarantine in the federated loop.
+from repro.resilience.hygiene import EventHygiene, HygieneStats
+from repro.resilience.reconcile import (
+    Reconciler,
+    ReconcileStats,
+    membership_divergence,
+    membership_oracle,
+    sanitize_stream,
+)
+from repro.resilience.watchdog import PoolWatchdog, WatchdogStats
+
+__all__ = [
+    "EventHygiene", "HygieneStats",
+    "Reconciler", "ReconcileStats", "membership_divergence",
+    "membership_oracle", "sanitize_stream",
+    "PoolWatchdog", "WatchdogStats",
+]

@@ -1,0 +1,218 @@
+"""Event-stream hygiene (DESIGN.md §16, stage 1 of the self-healing
+control plane).
+
+The resource monitor's feed is untrusted: events arrive duplicated,
+reordered within a bounded window, late beyond that window, or not at
+all.  ``EventHygiene`` is a streaming filter placed in front of the
+``ControlLoop`` / ``EventRouter`` that turns that feed back into a
+clean, time-ordered stream:
+
+1. **Dedup** — events carry a monotone ``seq`` stamp; a seq already
+   seen is dropped.
+2. **Reorder buffer** — arrivals are held in a buffer sorted by
+   ``(time, seq)`` and only released once the watermark
+   (max arrival event-time − ``reorder_window``) passes them, so any
+   reordering within the window is undone exactly.
+3. **Membership filter** — released events are checked against the
+   believed live set: a join of an already-live node is a *phantom
+   join* (dropped), a leave/fail of an unknown node is an *orphan
+   leave* (quarantined; if a matching join never shows up it is
+   dropped at ``flush()``).  Both defects are counted and later healed
+   by the :class:`~repro.resilience.reconcile.Reconciler`.
+4. **Conflict resolution** — contradictory same-``(time, node)``
+   actions are resolved last-writer-wins by ``seq`` (the monitor's
+   emission order), counted in ``conflicts_resolved``.
+
+A clean, in-order stream passes through **bit-identical**: no event is
+modified, reordered, or dropped, which is what keeps the zero-corruption
+replay parity tests exact.
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.events import EventStreamError, PoolEvent
+
+
+@dataclass
+class HygieneStats:
+    """Defect counters accumulated by one ``EventHygiene`` instance."""
+    events_in: int = 0
+    events_out: int = 0
+    duplicates_dropped: int = 0
+    reordered_fixed: int = 0
+    late_dropped: int = 0
+    phantom_joins: int = 0
+    orphan_leaves: int = 0
+    conflicts_resolved: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return asdict(self)
+
+    @property
+    def defects(self) -> int:
+        return (self.duplicates_dropped + self.reordered_fixed +
+                self.late_dropped + self.phantom_joins +
+                self.orphan_leaves + self.conflicts_resolved)
+
+
+class EventHygiene:
+    """Streaming hygiene filter: ``push`` arrivals in, get released
+    clean events back; ``flush`` drains the reorder buffer at the end.
+
+    ``reorder_window`` bounds admissible lateness *in event time*: an
+    arrival whose ``time`` is older than the current watermark is
+    beyond repair here and is dropped (``late_dropped``) — the
+    reconciler heals whatever state divergence that causes.  With
+    ``strict=True`` membership defects raise
+    :class:`~repro.core.events.EventStreamError` instead of being
+    counted, for feeds that are *supposed* to be clean.
+    """
+
+    def __init__(self, *, reorder_window: float = 0.0,
+                 initial: Set[int] = frozenset(),
+                 strict: bool = False) -> None:
+        self.reorder_window = float(reorder_window)
+        self.strict = bool(strict)
+        self.believed: Set[int] = set(initial)
+        self.stats = HygieneStats()
+        self._seen_seq: Set[int] = set()
+        # reorder buffer sorted by (time, seq) — seq ties give the
+        # monitor's emission order, making release deterministic
+        self._buffer: List[Tuple[float, int, PoolEvent]] = []
+        self._watermark = float("-inf")
+        self._last_released = float("-inf")
+        # leaves/fails of unknown nodes parked until flush: the matching
+        # join may still be in flight
+        self._quarantined: List[PoolEvent] = []
+
+    # ------------------------------------------------------------------
+    def push(self, event: PoolEvent) -> List[PoolEvent]:
+        """Ingest one arrival; return the (possibly empty) list of clean
+        events this arrival released past the watermark."""
+        self.stats.events_in += 1
+        seq = event.seq
+        if seq is not None:
+            if seq in self._seen_seq:
+                self.stats.duplicates_dropped += 1
+                return []
+            self._seen_seq.add(seq)
+        if event.time < self._watermark:
+            # beyond the admissible-lateness window: unrecoverable here
+            self.stats.late_dropped += 1
+            return []
+        key = (event.time, seq if seq is not None else self.stats.events_in)
+        pos = bisect.bisect_right(self._buffer, key,
+                                  key=lambda it: (it[0], it[1]))
+        if pos < len(self._buffer):
+            self.stats.reordered_fixed += 1
+        self._buffer.insert(pos, (key[0], key[1], event))
+        self._watermark = max(self._watermark,
+                              event.time - self.reorder_window)
+        return self._release(self._watermark)
+
+    def flush(self) -> List[PoolEvent]:
+        """Release everything still buffered (end of stream) and retire
+        quarantined orphans that never found their join."""
+        out = self._release(float("inf"))
+        self.stats.orphan_leaves += len(self._quarantined)
+        self._quarantined.clear()
+        return out
+
+    # ------------------------------------------------------------------
+    def _release(self, upto: float) -> List[PoolEvent]:
+        released: List[PoolEvent] = []
+        n = 0
+        while n < len(self._buffer) and self._buffer[n][0] <= upto:
+            n += 1
+        if n == 0:
+            return released
+        batch, self._buffer = self._buffer[:n], self._buffer[n:]
+        # conflict resolution: contradictory same-(time, node) actions
+        # are last-writer-wins by seq — batch is already (time, seq)
+        # sorted, so a later write simply overwrites an earlier one
+        i = 0
+        while i < len(batch):
+            j = i
+            while j < len(batch) and batch[j][0] == batch[i][0]:
+                j += 1
+            group = [ev for _, _, ev in batch[i:j]]
+            merged = self._resolve_conflicts(group)
+            for ev in merged:
+                clean = self._membership_filter(ev)
+                if clean is not None:
+                    released.append(clean)
+            i = j
+        if released:
+            self._last_released = released[-1].time
+        self.stats.events_out += len(released)
+        return released
+
+    def _resolve_conflicts(self, group: List[PoolEvent]) -> List[PoolEvent]:
+        """Within one timestamp, detect nodes acted on contradictorily
+        and keep only the last action per node (by seq order).  Events
+        without contradictions pass through untouched so a clean stream
+        is not rewritten."""
+        if len(group) == 1:
+            return group
+        action: Dict[int, Tuple[int, str]] = {}   # node -> (idx, kind)
+        conflict = False
+        for idx, ev in enumerate(group):
+            for kind in ("joined", "left", "failed"):
+                for n in getattr(ev, kind):
+                    prev = action.get(n)
+                    if prev is not None and prev[1] != kind:
+                        conflict = True
+                        self.stats.conflicts_resolved += 1
+                    action[n] = (idx, kind)
+        if not conflict:
+            return group
+        out: List[PoolEvent] = []
+        for idx, ev in enumerate(group):
+            joined = tuple(n for n in ev.joined
+                           if action[n] == (idx, "joined"))
+            left = tuple(n for n in ev.left if action[n] == (idx, "left"))
+            failed = tuple(n for n in ev.failed
+                           if action[n] == (idx, "failed"))
+            if joined or left or failed:
+                out.append(PoolEvent(time=ev.time, joined=joined,
+                                     left=left, failed=failed,
+                                     pool=ev.pool, seq=ev.seq))
+        return out
+
+    def _membership_filter(self, ev: PoolEvent) -> Optional[PoolEvent]:
+        """Drop phantom joins, quarantine orphan leaves, update the
+        believed set.  Returns the event to emit (possibly trimmed), or
+        ``None`` if nothing in it survived."""
+        phantom = tuple(n for n in ev.joined if n in self.believed)
+        orphan_l = tuple(n for n in ev.left if n not in self.believed)
+        orphan_f = tuple(n for n in ev.failed if n not in self.believed)
+        if not phantom and not orphan_l and not orphan_f:
+            self.believed.update(ev.joined)
+            self.believed.difference_update(ev.left)
+            self.believed.difference_update(ev.failed)
+            return ev
+        if self.strict:
+            n = (phantom + orphan_l + orphan_f)[0]
+            kind = ("join" if phantom else "leave/fail")
+            raise EventStreamError(
+                f"t={ev.time}: inadmissible {kind} of node {n}")
+        self.stats.phantom_joins += len(phantom)
+        if orphan_l or orphan_f:
+            # parked, not counted yet: the matching join may still be in
+            # flight — flush() counts whatever never found one
+            self._quarantined.append(PoolEvent(
+                time=ev.time, left=orphan_l, failed=orphan_f,
+                pool=ev.pool, seq=ev.seq))
+        joined = tuple(n for n in ev.joined if n not in phantom)
+        left = tuple(n for n in ev.left if n not in orphan_l)
+        failed = tuple(n for n in ev.failed if n not in orphan_f)
+        self.believed.update(joined)
+        self.believed.difference_update(left)
+        self.believed.difference_update(failed)
+        if not (joined or left or failed):
+            return None
+        return PoolEvent(time=ev.time, joined=joined, left=left,
+                         failed=failed, pool=ev.pool, seq=ev.seq)

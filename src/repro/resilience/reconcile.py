@@ -1,0 +1,212 @@
+"""Anti-entropy reconciliation (DESIGN.md §16, stage 2).
+
+Hygiene bounds what *arrives* wrong; it cannot recover what never
+arrived.  A dropped join loses capacity, and — worse — a dropped leave
+leaves *phantom capacity*: the control plane keeps allocating nodes that
+are gone, which inflates believed utilization dishonestly.  The
+:class:`Reconciler` closes that gap: every ``period_s`` seconds it diffs
+the believed membership against a ground-truth oracle (in production the
+scheduler's own node database; in the simulator the uncorrupted stream)
+and emits one synthetic *repair event* that joins the missing nodes and
+removes the extra ones.  Divergence is therefore bounded by one
+reconcile period, whatever the corruption pattern.
+
+``sanitize_stream`` composes hygiene + reconciliation into the offline
+pipeline used by the chaos harness and benchmarks; ``membership_oracle``
+builds the oracle from a clean stream; ``membership_divergence``
+integrates |believed Δ truth| over time for the bench metrics.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.events import PoolEvent, apply_events, merge_events
+from repro.resilience.hygiene import EventHygiene, HygieneStats
+
+
+@dataclass
+class ReconcileStats:
+    """Counters for one reconciliation run."""
+    reconciles: int = 0
+    repair_events: int = 0
+    nodes_added: int = 0
+    nodes_removed: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return asdict(self)
+
+
+class Reconciler:
+    """Periodic believed-vs-truth diff emitting synthetic repair events.
+
+    ``oracle(t)`` must return the ground-truth live set at time ``t``.
+    ``check(believed, now)`` returns a repair :class:`PoolEvent` (or
+    ``None``) when a reconcile is due and the believed set diverges;
+    repairs carry no ``seq`` (they are born inside the control plane,
+    not received from the monitor) and ``pool`` tagging is left to the
+    caller.
+    """
+
+    def __init__(self, oracle: Callable[[float], Set[int]],
+                 period_s: float = 300.0) -> None:
+        if period_s <= 0:
+            raise ValueError(f"period_s must be positive: {period_s}")
+        self.oracle = oracle
+        self.period_s = float(period_s)
+        self.stats = ReconcileStats()
+        self._next_due: Optional[float] = None
+
+    def due(self, now: float) -> bool:
+        if self._next_due is None:
+            self._next_due = now + self.period_s
+            return False
+        return now >= self._next_due
+
+    def check(self, believed: Set[int], now: float,
+              *, force: bool = False) -> Optional[PoolEvent]:
+        """Diff ``believed`` against truth at ``now`` if a reconcile is
+        due (or ``force``); returns the repair event or ``None``."""
+        if not force and not self.due(now):
+            return None
+        while self._next_due is not None and self._next_due <= now:
+            self._next_due += self.period_s
+        self.stats.reconciles += 1
+        truth = set(self.oracle(now))
+        missing = truth - believed
+        extra = believed - truth
+        if not missing and not extra:
+            return None
+        self.stats.repair_events += 1
+        self.stats.nodes_added += len(missing)
+        self.stats.nodes_removed += len(extra)
+        return PoolEvent(time=now, joined=tuple(sorted(missing)),
+                         left=tuple(sorted(extra)))
+
+
+def membership_oracle(events: Sequence[PoolEvent],
+                      initial: Set[int] = frozenset()
+                      ) -> Callable[[float], Set[int]]:
+    """Ground-truth oracle from a clean stream: ``oracle(t)`` is the
+    live set after folding every event with ``time <= t``.
+
+    Incremental cursor walk — repeated monotone queries (the common
+    case: one query per reconcile period) cost O(events) total; a
+    backward query rewinds by replaying from the start.
+    """
+    clean = merge_events(events)
+    state: Set[int] = set(initial)
+    cursor = 0
+
+    def oracle(t: float) -> Set[int]:
+        nonlocal state, cursor
+        if cursor > 0 and clean[cursor - 1].time > t:
+            state = set(initial)
+            cursor = 0
+        while cursor < len(clean) and clean[cursor].time <= t:
+            e = clean[cursor]
+            state.update(e.joined)
+            state.difference_update(e.left)
+            state.difference_update(e.failed)
+            cursor += 1
+        return set(state)
+
+    return oracle
+
+
+def sanitize_stream(events: Sequence[PoolEvent], *,
+                    reorder_window: float = 0.0,
+                    oracle: Optional[Callable[[float], Set[int]]] = None,
+                    reconcile_period_s: float = 300.0,
+                    initial: Set[int] = frozenset(),
+                    ) -> Tuple[List[PoolEvent], HygieneStats,
+                               ReconcileStats]:
+    """Offline hygiene + anti-entropy pipeline over an arrival-ordered
+    (possibly corrupted) stream.
+
+    ``events`` must be in *arrival* order — their ``.time`` fields are
+    the event times the monitor stamped, which may disagree with
+    position when the feed reordered them.  Returns the cleaned,
+    time-sorted stream plus both stat blocks.  With no oracle the
+    reconcile stage is skipped (hygiene only).  A clean in-order stream
+    comes back bit-identical with zero defect counts.
+    """
+    hyg = EventHygiene(reorder_window=reorder_window, initial=initial)
+    rec = (Reconciler(oracle, period_s=reconcile_period_s)
+           if oracle is not None else None)
+    out: List[PoolEvent] = []
+    for ev in events:
+        released = hyg.push(ev)
+        out.extend(released)
+        # reconcile once per arrival, AFTER the released batch: believed
+        # reflects every event in the batch, so the check must use the
+        # batch's last timestamp — checking mid-batch would diff a
+        # future believed state against an earlier truth and emit
+        # self-contradictory repairs
+        if rec is not None and released:
+            repair = rec.check(hyg.believed, released[-1].time)
+            if repair is not None:
+                out.append(repair)
+                hyg.believed.update(repair.joined)
+                hyg.believed.difference_update(repair.left)
+    tail = hyg.flush()
+    out.extend(tail)
+    if rec is not None and out:
+        repair = rec.check(hyg.believed, out[-1].time, force=True)
+        if repair is not None:
+            out.append(repair)
+            hyg.believed.update(repair.joined)
+            hyg.believed.difference_update(repair.left)
+    out.sort(key=lambda e: e.time)
+    return out, hyg.stats, (rec.stats if rec is not None
+                            else ReconcileStats())
+
+
+def membership_divergence(clean: Sequence[PoolEvent],
+                          dirty: Sequence[PoolEvent],
+                          *, t_end: Optional[float] = None,
+                          initial: Set[int] = frozenset()
+                          ) -> Dict[str, float]:
+    """Integrate |believed Δ truth| node-seconds between two streams.
+
+    Returns ``divergence_node_s`` (the integral), ``truth_node_s``
+    (∫|truth| dt, for normalising), ``divergence_frac`` (their ratio)
+    and ``max_lag_s`` (longest contiguous interval with non-empty
+    symmetric difference — the worst-case reconcile lag).
+    """
+    a = merge_events(clean)
+    b = merge_events(dirty)
+    times = sorted({e.time for e in a} | {e.time for e in b})
+    if t_end is None:
+        t_end = times[-1] if times else 0.0
+    truth: Set[int] = set(initial)
+    believed: Set[int] = set(initial)
+    ia = ib = 0
+    div = truth_int = 0.0
+    lag = max_lag = 0.0
+    lag_open: Optional[float] = None
+    for i, t in enumerate(times):
+        while ia < len(a) and a[ia].time <= t:
+            truth = apply_events(truth, [a[ia]]); ia += 1
+        while ib < len(b) and b[ib].time <= t:
+            believed = apply_events(believed, [b[ib]]); ib += 1
+        nxt = times[i + 1] if i + 1 < len(times) else t_end
+        dt = max(0.0, nxt - t)
+        d = len(truth ^ believed)
+        div += d * dt
+        truth_int += len(truth) * dt
+        if d:
+            if lag_open is None:
+                lag_open = t
+        else:
+            if lag_open is not None:
+                max_lag = max(max_lag, t - lag_open)
+                lag_open = None
+    if lag_open is not None:
+        max_lag = max(max_lag, t_end - lag_open)
+    return {
+        "divergence_node_s": div,
+        "truth_node_s": truth_int,
+        "divergence_frac": (div / truth_int) if truth_int > 0 else 0.0,
+        "max_lag_s": max_lag,
+    }

@@ -1,0 +1,134 @@
+"""Per-pool watchdog with quarantine + probation (DESIGN.md §16,
+stage 3).
+
+The federated loop runs one solver per pool; a sick pool (solver
+exceptions, or per-decision walls blowing the timeout) must not stall
+the fleet.  The watchdog is a small per-pool state machine:
+
+    healthy --(fail_threshold consecutive failures)--> quarantined
+    quarantined --(quarantine_epochs elapsed)--> probation
+    probation --(one failure)--> quarantined      (immediately)
+    probation --(probation_epochs clean)--> healthy
+
+While quarantined the pool's allocation map is frozen (its events are
+still drained so membership stays honest) and its queued jobs are
+evacuated to healthy pools by the
+:class:`~repro.federation.rebalance.Rebalancer`.  The state machine is
+pure bookkeeping — it never touches the loop — so it is trivially
+deterministic and unit-testable.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+HEALTHY = "healthy"
+QUARANTINED = "quarantined"
+PROBATION = "probation"
+
+
+@dataclass
+class WatchdogStats:
+    """Fleet-level counters across all pools."""
+    failures: int = 0
+    timeouts: int = 0
+    quarantines: int = 0
+    readmissions: int = 0
+    epochs_quarantined: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return asdict(self)
+
+
+@dataclass
+class _PoolState:
+    state: str = HEALTHY
+    consecutive_failures: int = 0
+    epochs_in_state: int = 0
+
+
+class PoolWatchdog:
+    """Track per-pool health across decision epochs.
+
+    Per epoch the loop calls :meth:`record` once per pool with whether
+    the pool's solve failed (raised, or exceeded ``timeout_s`` of
+    per-decision solver wall).  :meth:`is_quarantined` gates the pool's
+    loop; :meth:`tick` advances quarantine/probation clocks at the end
+    of each epoch.
+    """
+
+    def __init__(self, *, fail_threshold: int = 3,
+                 quarantine_epochs: int = 2,
+                 probation_epochs: int = 2,
+                 timeout_s: Optional[float] = None) -> None:
+        if fail_threshold < 1:
+            raise ValueError("fail_threshold must be >= 1")
+        self.fail_threshold = int(fail_threshold)
+        self.quarantine_epochs = int(quarantine_epochs)
+        self.probation_epochs = int(probation_epochs)
+        self.timeout_s = timeout_s
+        self.stats = WatchdogStats()
+        self._pools: Dict[int, _PoolState] = {}
+
+    def _st(self, pool: int) -> _PoolState:
+        return self._pools.setdefault(pool, _PoolState())
+
+    # ------------------------------------------------------------------
+    def record(self, pool: int, *, failed: bool = False,
+               timed_out: bool = False) -> None:
+        """Record one epoch's outcome for ``pool``.  ``timed_out`` is a
+        failure flavour with its own counter."""
+        st = self._st(pool)
+        bad = failed or timed_out
+        if timed_out:
+            self.stats.timeouts += 1
+        if bad:
+            self.stats.failures += 1
+            st.consecutive_failures += 1
+            if (st.state == PROBATION or
+                    (st.state == HEALTHY and
+                     st.consecutive_failures >= self.fail_threshold)):
+                st.state = QUARANTINED
+                # -1: the end-of-epoch tick for the epoch that *caused*
+                # the quarantine brings this to 0, so the pool is then
+                # skipped for quarantine_epochs full epochs
+                st.epochs_in_state = -1
+                self.stats.quarantines += 1
+        else:
+            st.consecutive_failures = 0
+
+    def tick(self, pool: int) -> None:
+        """Advance ``pool``'s state clock by one epoch."""
+        st = self._st(pool)
+        st.epochs_in_state += 1
+        if st.state == QUARANTINED:
+            if st.epochs_in_state >= 1:     # a skipped epoch just ended
+                self.stats.epochs_quarantined += 1
+            if st.epochs_in_state >= self.quarantine_epochs:
+                st.state = PROBATION
+                st.epochs_in_state = 0
+                st.consecutive_failures = 0
+        elif st.state == PROBATION:
+            if st.epochs_in_state >= self.probation_epochs:
+                st.state = HEALTHY
+                st.epochs_in_state = 0
+                self.stats.readmissions += 1
+
+    # ------------------------------------------------------------------
+    def state(self, pool: int) -> str:
+        return self._st(pool).state
+
+    def is_quarantined(self, pool: int) -> bool:
+        return self._st(pool).state == QUARANTINED
+
+    def over_timeout(self, wall_s: float) -> bool:
+        return self.timeout_s is not None and wall_s > self.timeout_s
+
+    def quarantined_pools(self) -> List[int]:
+        return sorted(k for k, st in self._pools.items()
+                      if st.state == QUARANTINED)
+
+    def as_dict(self) -> Dict[str, object]:
+        d = dict(self.stats.as_dict())
+        d["states"] = {k: st.state for k, st in sorted(self._pools.items())}
+        return d

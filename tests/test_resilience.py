@@ -1,0 +1,729 @@
+"""Self-healing control plane tests (DESIGN.md §16).
+
+Tier groups:
+
+* **Hygiene** — dedup / reorder / late-drop / phantom-join / orphan-leave
+  / conflict handling, clean streams passing through bit-identical, and
+  the ``strict=`` / ``validate_events`` guards on ``repro.core.events``.
+* **Anti-entropy** — the ``Reconciler`` repairs dropped events within one
+  period; hypothesis property: *any* dup/reorder/drop/late corruption,
+  sanitized, converges to ground-truth membership.
+* **Zero-corruption parity** — the 6-scenario × 5-policy sweep through
+  ``corrupt_stream`` + ``sanitize_stream`` is bit-identical to the
+  direct replay (identity fast path AND the jitter-only path).
+* **Deadline ladder** — every rung returns a feasible map, degraded
+  decisions are not cached, ``upgrade()`` heals them, counters/status
+  expose the rung.
+* **Watchdog / quarantine** — state machine transitions; a failing pool
+  is quarantined, its queued jobs evacuate and finish on healthy pools,
+  and the pool is readmitted after probation.
+* **Router compaction** — drained prefixes are freed without changing
+  ``pending`` / ``next_time`` semantics.
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.chaos import ChaosSpec, corrupt_stream, run_chaos
+from repro.core import (
+    AllocationEngine,
+    EventStreamError,
+    PoolEvent,
+    Simulator,
+    pool_sizes,
+    validate_events,
+)
+from repro.core.events import apply_events, fragments_to_events, merge_events
+from repro.core.loop import TrainerJob
+from repro.core.milp import AllocationProblem, TrainerSpec
+from repro.core.scaling import TAB2, tab2_curve
+from repro.federation import EventRouter, FederatedLoop, PoolMap
+from repro.obs.telemetry import Telemetry
+from repro.resilience import (
+    EventHygiene,
+    PoolWatchdog,
+    Reconciler,
+    membership_divergence,
+    membership_oracle,
+    sanitize_stream,
+)
+from repro.sched.scenarios import build_scenario
+
+_SWEEP_SCENARIOS = ["capability", "capacity", "bursty", "maintenance",
+                    "weekend", "overestimate"]
+_SWEEP_POLICIES = ["throughput", "weighted", "maxmin", "deadline", "costcap"]
+
+
+def _stamped(events):
+    return [PoolEvent(e.time, e.joined, e.left, e.failed, seq=i)
+            for i, e in enumerate(events)]
+
+
+def _shape(events):
+    """Event content without the seq stamp (hygiene must preserve it)."""
+    return [(e.time, e.joined, e.left, e.failed) for e in events]
+
+
+def _policy_jobs(policy="throughput", n=6):
+    names = list(TAB2)
+    out = []
+    for i in range(n):
+        j = TrainerJob(id=i, curve=tab2_curve(names[i % len(names)]),
+                       work=2e8, n_min=1, n_max=16, r_up=20.0, r_dw=5.0)
+        if policy == "weighted":
+            j.weight = 1.0 + (i % 3)
+        if policy == "deadline":
+            j.deadline = 3600.0 * (4 + i)
+        if policy == "costcap":
+            j.budget = 3.0e5
+        out.append(j)
+    return out
+
+
+def _det_engine(k=None):
+    return AllocationEngine(time_budget=0.0)
+
+
+# ---------------------------------------------------------------------------
+# event-stream guards (satellite: strict modes + validate_events)
+# ---------------------------------------------------------------------------
+
+
+def test_apply_events_strict_rejects_unknown_leave():
+    evs = [PoolEvent(0.0, joined=(1, 2)), PoolEvent(1.0, left=(3,))]
+    assert apply_events(set(), evs) == {1, 2}          # permissive default
+    with pytest.raises(EventStreamError):
+        apply_events(set(), evs, strict=True)
+
+
+def test_apply_events_strict_rejects_phantom_join():
+    evs = [PoolEvent(0.0, joined=(1,)), PoolEvent(1.0, joined=(1,))]
+    assert apply_events(set(), evs) == {1}
+    with pytest.raises(EventStreamError):
+        apply_events(set(), evs, strict=True)
+
+
+def test_apply_events_strict_rejects_unknown_failure():
+    with pytest.raises(EventStreamError):
+        apply_events(set(), [PoolEvent(0.0, failed=(9,))], strict=True)
+
+
+def test_pool_sizes_strict_rejects_negative():
+    evs = [PoolEvent(0.0, joined=(1,)), PoolEvent(1.0, left=(1, 2))]
+    assert pool_sizes(evs) == [(0.0, 1), (1.0, -1)]    # silent today
+    with pytest.raises(EventStreamError):
+        pool_sizes(evs, strict=True)
+    clean = [PoolEvent(0.0, joined=(1, 2)), PoolEvent(1.0, left=(1,))]
+    assert pool_sizes(clean, strict=True) == [(0.0, 2), (1.0, 1)]
+
+
+def test_validate_events_classifies_defects():
+    evs = [
+        PoolEvent(0.0, joined=(1,), seq=0),
+        PoolEvent(2.0, joined=(1,), seq=1),            # phantom join
+        PoolEvent(1.0, left=(7,), seq=1),              # regression + dup seq
+        PoolEvent(3.0, joined=(4,), left=(4,), seq=3),  # same-node conflict
+    ]
+    problems = validate_events(evs)
+    text = "\n".join(problems)
+    assert "already-live node 1" in text
+    assert "timestamp regresses" in text
+    assert "duplicate seq 1" in text
+    assert "unknown node 7" in text
+    assert "multiple actions" in text
+    assert validate_events([PoolEvent(0.0, joined=(1,)),
+                            PoolEvent(1.0, left=(1,))]) == []
+
+
+def test_validate_events_respects_initial_pool():
+    evs = [PoolEvent(0.0, left=(5,))]
+    assert validate_events(evs) != []
+    assert validate_events(evs, initial=(5,)) == []
+
+
+# ---------------------------------------------------------------------------
+# hygiene unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def _clean_stream():
+    return _stamped([
+        PoolEvent(0.0, joined=(0, 1, 2, 3)),
+        PoolEvent(100.0, joined=(4, 5)),
+        PoolEvent(200.0, left=(1,)),
+        PoolEvent(300.0, joined=(6,), left=(2,)),
+        PoolEvent(400.0, left=(0, 3)),
+    ])
+
+
+def test_hygiene_clean_stream_bit_identical():
+    evs = _clean_stream()
+    hyg = EventHygiene(reorder_window=50.0)
+    out = []
+    for e in evs:
+        out.extend(hyg.push(e))
+    out.extend(hyg.flush())
+    assert out == evs                   # same objects, order, seq stamps
+    assert hyg.stats.defects == 0
+    assert hyg.stats.events_in == hyg.stats.events_out == len(evs)
+
+
+def test_hygiene_drops_duplicates_by_seq():
+    evs = _clean_stream()
+    dup = [evs[0], evs[1], evs[1], evs[2], evs[2], evs[3], evs[4]]
+    out, hs, _ = sanitize_stream(dup, reorder_window=0.0)
+    assert _shape(out) == _shape(evs)
+    assert hs.duplicates_dropped == 2
+
+
+def test_hygiene_undoes_reorder_within_window():
+    evs = _clean_stream()
+    swapped = [evs[1], evs[0]] + evs[2:]
+    out, hs, _ = sanitize_stream(swapped, reorder_window=150.0)
+    assert _shape(out) == _shape(evs)
+    assert hs.reordered_fixed >= 1
+    assert hs.late_dropped == 0
+
+
+def test_hygiene_drops_late_beyond_window():
+    evs = _clean_stream()
+    late = evs[1:] + [evs[0]]           # t=0 join arrives dead last
+    out, hs, _ = sanitize_stream(late, reorder_window=50.0)
+    assert hs.late_dropped == 1
+    # the lost join cascades: every leave of its nodes is now an orphan
+    # (quarantined + dropped) — exactly what the reconciler exists for
+    assert hs.orphan_leaves == 3
+    assert _shape(out) == [(100.0, (4, 5), (), ()),
+                           (300.0, (6,), (), ())]
+
+
+def test_hygiene_drops_phantom_join():
+    evs = _stamped([PoolEvent(0.0, joined=(1, 2)),
+                    PoolEvent(10.0, joined=(1,)),
+                    PoolEvent(20.0, left=(2,))])
+    out, hs, _ = sanitize_stream(evs, reorder_window=0.0)
+    assert hs.phantom_joins == 1
+    assert _shape(out) == [(0.0, (1, 2), (), ()), (20.0, (), (2,), ())]
+
+
+def test_hygiene_quarantines_orphan_leave():
+    evs = _stamped([PoolEvent(0.0, joined=(1,)),
+                    PoolEvent(10.0, left=(9,)),     # never joined
+                    PoolEvent(20.0, left=(1,))])
+    out, hs, _ = sanitize_stream(evs, reorder_window=0.0)
+    assert hs.orphan_leaves == 1
+    assert _shape(out) == [(0.0, (1,), (), ()), (20.0, (), (1,), ())]
+
+
+def test_hygiene_resolves_same_time_conflict_last_writer_wins():
+    # two monitor records at the same instant disagree about node 5:
+    # seq order is ground truth, so the later record (leave) wins
+    evs = [PoolEvent(0.0, joined=(5, 6), seq=0),
+           PoolEvent(0.0, left=(5,), seq=1),
+           PoolEvent(10.0, left=(6,), seq=2)]
+    hyg = EventHygiene(reorder_window=5.0)
+    out = []
+    for e in evs:
+        out.extend(hyg.push(e))
+    out.extend(hyg.flush())
+    assert hyg.stats.conflicts_resolved >= 1
+    assert apply_events(set(), out) == set()
+    assert hyg.believed == set()
+
+
+def test_hygiene_strict_mode_raises():
+    hyg = EventHygiene(strict=True)
+    hyg.push(PoolEvent(0.0, joined=(1,), seq=0))
+    with pytest.raises(EventStreamError):
+        hyg.push(PoolEvent(1.0, joined=(1,), seq=1))
+
+
+# ---------------------------------------------------------------------------
+# anti-entropy reconciliation
+# ---------------------------------------------------------------------------
+
+
+def test_membership_oracle_walks_and_rewinds():
+    evs = [PoolEvent(0.0, joined=(1, 2)), PoolEvent(10.0, left=(1,)),
+           PoolEvent(20.0, joined=(3,))]
+    oracle = membership_oracle(evs)
+    assert oracle(-1.0) == set()
+    assert oracle(5.0) == {1, 2}
+    assert oracle(20.0) == {2, 3}
+    assert oracle(5.0) == {1, 2}        # backward query rewinds
+    assert oracle(1e9) == {2, 3}
+
+
+def test_reconciler_repairs_dropped_leave_within_period():
+    truth = [PoolEvent(0.0, joined=(1, 2, 3)), PoolEvent(100.0, left=(2,)),
+             PoolEvent(250.0, joined=(5,)), PoolEvent(500.0, joined=(4,))]
+    # the leave at t=100 is lost: believed keeps phantom node 2 until
+    # the reconcile triggered by the (benign) t=250 arrival
+    delivered = _stamped(truth)
+    lost = [delivered[0], delivered[2], delivered[3]]
+    out, hs, rs = sanitize_stream(
+        lost, reorder_window=0.0, oracle=membership_oracle(truth),
+        reconcile_period_s=200.0)
+    assert rs.repair_events >= 1 and rs.nodes_removed >= 1
+    assert apply_events(set(), out) == {1, 3, 4, 5}
+    # the phantom existed for at most one reconcile period
+    div = membership_divergence(truth, out, t_end=700.0)
+    assert div["max_lag_s"] <= 200.0 + 1e-9
+    assert div["divergence_node_s"] > 0.0
+
+
+def test_reconciler_noop_on_clean_stream():
+    truth = [PoolEvent(0.0, joined=(1, 2)), PoolEvent(50.0, left=(1,))]
+    out, hs, rs = sanitize_stream(
+        _stamped(truth), reorder_window=0.0,
+        oracle=membership_oracle(truth), reconcile_period_s=10.0)
+    assert rs.repair_events == 0 and rs.nodes_added == 0
+    assert _shape(out) == _shape(truth)
+    div = membership_divergence(truth, out, t_end=100.0)
+    assert div["divergence_node_s"] == 0.0
+    assert div["max_lag_s"] == 0.0
+
+
+@st.composite
+def _corruption_cases(draw):
+    """A random clean membership story + a random corruption spec."""
+    n_nodes = draw(st.integers(min_value=2, max_value=12))
+    n_steps = draw(st.integers(min_value=2, max_value=14))
+    truth, live, t = [], set(), 0.0
+    for _ in range(n_steps):
+        t += draw(st.floats(min_value=1.0, max_value=300.0))
+        join = tuple(c for c in sorted(set(range(n_nodes)) - live)
+                     if draw(st.booleans()))
+        leave = tuple(c for c in sorted(live) if draw(st.booleans()))
+        if not join and not leave:
+            continue
+        truth.append(PoolEvent(t, joined=join, left=leave))
+        live |= set(join)
+        live -= set(leave)
+    spec = ChaosSpec(
+        seed=draw(st.integers(min_value=0, max_value=2 ** 16)),
+        duplicate_prob=draw(st.floats(min_value=0.0, max_value=0.5)),
+        drop_prob=draw(st.floats(min_value=0.0, max_value=0.5)),
+        late_prob=draw(st.floats(min_value=0.0, max_value=0.3)),
+        reorder_window=draw(st.floats(min_value=0.0, max_value=200.0)))
+    period = draw(st.floats(min_value=50.0, max_value=400.0))
+    return truth, spec, period
+
+
+@settings(max_examples=30, deadline=None)
+@given(_corruption_cases())
+def test_any_corruption_converges_to_ground_truth(case):
+    """Hypothesis property (ISSUE 10): ANY dup/reorder/drop/late
+    mutation of a clean stream, passed through EventHygiene +
+    Reconciler, converges to ground-truth pool membership as of the
+    last observed instant, and the repaired stream is strict-clean."""
+    truth, spec, period = case
+    corrupted = corrupt_stream(truth, spec)
+    out, hs, rs = sanitize_stream(
+        corrupted, reorder_window=spec.reorder_window,
+        oracle=membership_oracle(truth), reconcile_period_s=period)
+    believed = apply_events(set(), out)
+    if out:
+        # the forced final reconcile pins believed membership to ground
+        # truth as of the last observed instant
+        t_last = max(e.time for e in out)
+        assert believed == membership_oracle(truth)(t_last)
+        # and the sanitized stream is structurally clean: a strict
+        # replay accepts it and its arithmetic matches the set view
+        assert pool_sizes(out, strict=True)[-1][1] == len(believed)
+        assert validate_events(out) == []
+    else:
+        assert believed == set()
+
+
+def test_reconciler_rejects_nonpositive_period():
+    with pytest.raises(ValueError):
+        Reconciler(lambda t: set(), period_s=0.0)
+
+
+def test_corrupt_stream_identity_when_clean():
+    evs = [PoolEvent(0.0, joined=(1,)), PoolEvent(5.0, left=(1,))]
+    out = corrupt_stream(evs, ChaosSpec(seed=3))
+    assert _shape(out) == _shape(evs)
+    assert [e.seq for e in out] == [0, 1]
+    assert ChaosSpec().stream_clean
+    assert not ChaosSpec(drop_prob=0.01).stream_clean
+
+
+# ---------------------------------------------------------------------------
+# zero-corruption parity: 6 scenarios x 5 policies, bit-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", _SWEEP_SCENARIOS)
+def test_zero_corruption_parity_sweep(scenario):
+    """Acceptance sweep (ISSUE 10): a clean stream pushed through the
+    full corruption + hygiene + reconcile machinery (jitter-only spec:
+    arrivals shuffle inside the window but nothing is lost) replays
+    bit-identically to the direct loop on every policy."""
+    sc = build_scenario(scenario, scale=0.25)
+    events = fragments_to_events(sc.fragments)
+    # identity fast path: all-zero spec returns the stream unchanged
+    assert _shape(corrupt_stream(events, ChaosSpec())) == \
+        _shape(merge_events(events))
+    # jitter-only path: arrivals are shuffled within the window, the
+    # reorder buffer must restore exact time order
+    spec = ChaosSpec(seed=7, reorder_window=600.0)
+    sanitized, hs, _ = sanitize_stream(
+        corrupt_stream(events, spec), reorder_window=spec.reorder_window)
+    assert _shape(sanitized) == _shape(merge_events(events))
+    assert hs.late_dropped == 0 and hs.phantom_joins == 0
+    for policy in _SWEEP_POLICIES:
+        base = Simulator(events, _policy_jobs(policy), _det_engine(),
+                         t_fwd=120.0, pj_max=10, horizon=sc.duration,
+                         objective=policy).run()
+        san = Simulator(sanitized, _policy_jobs(policy), _det_engine(),
+                        t_fwd=120.0, pj_max=10, horizon=sc.duration,
+                        objective=policy).run()
+        assert san.total_samples == base.total_samples, \
+            f"{scenario}/{policy}: sanitized replay diverged"
+        assert san.events_processed == base.events_processed
+        assert san.rescale_cost_s == base.rescale_cost_s
+        assert san.preempt_cost_s == base.preempt_cost_s
+
+
+def test_run_chaos_clean_spec_unchanged_path():
+    """run_chaos with a stream-clean spec must not touch the stream."""
+    sc = build_scenario("bursty", scale=0.1)
+    events = fragments_to_events(sc.fragments)
+    rep = run_chaos(events, _policy_jobs(n=4), ChaosSpec(),
+                    engine_factory=_det_engine, horizon=sc.duration)
+    assert rep.hygiene is None and rep.reconcile is None
+    assert rep.divergence is None
+    assert rep.true_pool_node_seconds == rep.pool_node_seconds
+
+
+def test_run_chaos_corruption_reports_divergence():
+    sc = build_scenario("bursty", scale=0.1)
+    events = fragments_to_events(sc.fragments)
+    spec = ChaosSpec(seed=11, drop_prob=0.05, duplicate_prob=0.05,
+                     reorder_window=300.0, reconcile_period_s=900.0)
+    rep = run_chaos(events, _policy_jobs(n=4), spec,
+                    engine_factory=_det_engine, horizon=sc.duration)
+    assert rep.hygiene is not None and rep.reconcile is not None
+    assert rep.divergence is not None
+    assert rep.divergence["truth_node_s"] > 0
+    assert rep.true_pool_node_seconds > 0
+    # conservation against the *true* supply: reconciliation keeps the
+    # believed stream honest enough that allocations fit reality's
+    # envelope plus the bounded divergence window
+    assert rep.allocated_node_seconds <= rep.true_pool_node_seconds \
+        + rep.divergence["divergence_node_s"] + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# deadline ladder
+# ---------------------------------------------------------------------------
+
+
+def _ladder_spec(i, n_min=1, n_max=8):
+    curve = tab2_curve("ResNet18")
+    pts, vals = curve.breakpoints(n_min, n_max)
+    return TrainerSpec(id=i, n_min=n_min, n_max=n_max, r_up=20.0, r_dw=5.0,
+                       points=tuple(pts), values=tuple(vals))
+
+
+def _ladder_prob(n_nodes=24, n_jobs=4, current=None):
+    return AllocationProblem(
+        nodes=list(range(n_nodes)), trainers=[_ladder_spec(i)
+                                              for i in range(n_jobs)],
+        current=current or {}, t_fwd=120.0, objective="throughput",
+        now=0.0)
+
+
+def _assert_feasible(res, prob):
+    pool = set(prob.nodes)
+    seen = set()
+    for t in prob.trainers:
+        ns = res.allocation.get(t.id, [])
+        assert len(ns) == res.counts.get(t.id, 0)
+        assert len(ns) <= t.n_max
+        for nid in ns:
+            assert nid in pool and nid not in seen
+            seen.add(nid)
+
+
+def test_ladder_every_rung_returns_feasible_map():
+    prob = _ladder_prob()
+    warm = _ladder_prob(current={0: [0, 1, 2, 3], 1: [4, 5], 2: [], 3: []})
+
+    # greedy rung (generous deadline, no MILP budget)
+    eng = AllocationEngine(time_budget=0.0, decision_deadline_s=10.0)
+    r = eng.allocate(prob)
+    assert r.solver_status.endswith("+rung:greedy"), r.solver_status
+    _assert_feasible(r, prob)
+    # cache rung (same problem again)
+    r = eng.allocate(prob)
+    assert r.solver_status.endswith("+rung:cache")
+    _assert_feasible(r, prob)
+    assert eng.stats.rung_greedy == 1 and eng.stats.rung_cache == 1
+    assert eng.stats.deadline_hits == 0
+
+    # milp rung (budget allows, generous deadline) — annotated whichever
+    # arm wins; must still be feasible
+    eng = AllocationEngine(time_budget=0.050, decision_deadline_s=10.0)
+    r = eng.allocate(prob)
+    assert "+rung:" in r.solver_status
+    _assert_feasible(r, prob)
+
+    # project rung (impossible deadline, warm map)
+    eng = AllocationEngine(time_budget=0.050, decision_deadline_s=1e-9)
+    r = eng.allocate(warm)
+    assert r.solver_status == "deadline-project+rung:project"
+    _assert_feasible(r, warm)
+    assert r.counts == {0: 4, 1: 2, 2: 0, 3: 0}
+
+    # equal rung (impossible deadline, cold start)
+    r = eng.allocate(prob)
+    assert r.solver_status == "deadline-equal+rung:equal"
+    _assert_feasible(r, prob)
+    assert eng.stats.deadline_hits == 2
+    assert eng.stats.rung_project == 1 and eng.stats.rung_equal == 1
+
+
+def test_ladder_project_clamps_infeasible_current():
+    # previous map oversizes trainer 0 beyond n_max and strands trainer
+    # 1 below n_min: project must clamp both
+    spec0 = _ladder_spec(0, n_min=1, n_max=2)
+    spec1 = _ladder_spec(1, n_min=4, n_max=8)
+    prob = AllocationProblem(
+        nodes=list(range(10)), trainers=[spec0, spec1],
+        current={0: [0, 1, 2, 3], 1: [4, 5]},
+        t_fwd=120.0, objective="throughput", now=0.0)
+    eng = AllocationEngine(decision_deadline_s=1e-9)
+    r = eng.allocate(prob)
+    assert r.counts[0] == 2             # clamped to n_max
+    assert r.counts[1] == 0             # below n_min -> released
+    _assert_feasible(r, prob)
+
+
+def test_ladder_degraded_not_cached_and_upgrade_heals():
+    prob = _ladder_prob()
+    eng = AllocationEngine(time_budget=0.0, decision_deadline_s=1e-9)
+    r1 = eng.allocate(prob)
+    assert r1.solver_status.startswith("deadline-")
+    assert eng.stats.cache_hits == 0
+    r2 = eng.allocate(prob)             # still degraded, still no cache
+    assert r2.solver_status.startswith("deadline-")
+    assert eng.stats.cache_hits == 0
+    assert len(eng._pending_upgrades) == 1      # dedup by signature
+    assert eng.upgrade() == 1
+    assert eng.stats.upgrades == 1
+    r3 = eng.allocate(prob)
+    assert r3.solver_status.startswith("cache(")
+    _assert_feasible(r3, prob)
+
+
+def test_ladder_within_deadline_and_telemetry():
+    tel = Telemetry()
+    deadline = 0.050
+    eng = AllocationEngine(time_budget=0.0,
+                           decision_deadline_s=deadline, telemetry=tel)
+    probs = [_ladder_prob(n_nodes=256, n_jobs=12),
+             _ladder_prob(n_nodes=256, n_jobs=12,
+                          current={0: list(range(8))})]
+    for prob in probs:
+        r = eng.allocate(prob)
+        assert r.wall_time <= deadline + 0.010, \
+            f"decision blew its deadline: {r.wall_time*1e3:.1f} ms"
+        _assert_feasible(r, prob)
+    assert tel.counters.get("engine.events") == 2
+    # per-rung mirrors present
+    rung_counts = {k: v for k, v in tel.counters.items()
+                   if k.startswith("engine.rung_")}
+    assert sum(rung_counts.values()) == 2, rung_counts
+
+
+def test_no_deadline_statuses_unchanged():
+    """Without decision_deadline_s the engine must not annotate
+    statuses or touch ladder counters (pre-PR bit-compat)."""
+    eng = AllocationEngine(time_budget=0.0)
+    prob = _ladder_prob()
+    r = eng.allocate(prob)
+    assert r.solver_status == "greedy"
+    r = eng.allocate(prob)
+    assert r.solver_status == "cache(greedy)"
+    s = eng.stats
+    assert s.deadline_hits == 0 and s.upgrades == 0
+    assert s.rung_cache == s.rung_greedy == s.rung_project == 0
+
+
+def test_engine_snapshot_roundtrip_with_deadline_config():
+    eng = AllocationEngine(time_budget=0.0, decision_deadline_s=0.25)
+    eng.allocate(_ladder_prob())
+    snap = eng.snapshot()
+    assert snap["config"]["decision_deadline_s"] == 0.25
+    eng2 = AllocationEngine.from_snapshot(snap)
+    assert eng2.decision_deadline_s == 0.25
+    r = eng2.allocate(_ladder_prob())
+    assert r.solver_status.startswith("cache(")
+
+
+# ---------------------------------------------------------------------------
+# EventRouter compaction (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_router_compaction_preserves_semantics():
+    pm = PoolMap.stride(2)
+    small = EventRouter(pm, compact_threshold=8)
+    big = EventRouter(pm, compact_threshold=1 << 30)    # never compacts
+    events = [PoolEvent(float(t), joined=(t % 10,), pool=(t % 10) % 2)
+              for t in range(200)]
+    for e in events:
+        small.push(e)
+        big.push(e)
+    for upto in (50.0, 50.0, 120.0, 199.5, None):
+        for k in (0, 1):
+            assert small.pending(k) == big.pending(k)
+            assert small.next_time(k) == big.next_time(k)
+            a, b = small.drain(k, upto), big.drain(k, upto)
+            assert a == b
+            assert small.pending(k) == big.pending(k)
+            assert small.next_time(k) == big.next_time(k)
+        assert small.pools_with_pending() == big.pools_with_pending()
+    assert small.compactions > 0
+    # compaction actually freed the drained prefix
+    assert all(len(small._queues[k]) <= small.compact_threshold
+               for k in (0, 1))
+    assert all(len(big._queues[k]) == 100 for k in (0, 1))
+
+
+def test_router_compaction_bounds_memory_on_week_stream():
+    pm = PoolMap.stride(1)
+    router = EventRouter(pm, compact_threshold=64)
+    for t in range(5000):
+        router.push(PoolEvent(float(t), joined=(t,), pool=0))
+        if t % 100 == 99:
+            router.drain(0, float(t))
+    assert len(router._queues[0]) < 256          # O(pending), not O(stream)
+    assert router.compactions > 0
+
+
+def test_router_compact_threshold_validation():
+    with pytest.raises(ValueError):
+        EventRouter(PoolMap.stride(1), compact_threshold=0)
+
+
+# ---------------------------------------------------------------------------
+# watchdog state machine + federated quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_state_machine():
+    wd = PoolWatchdog(fail_threshold=2, quarantine_epochs=1,
+                      probation_epochs=1)
+    wd.record(0, failed=True); wd.tick(0)
+    assert wd.state(0) == "healthy"             # below threshold
+    wd.record(0, failed=False); wd.tick(0)
+    wd.record(0, failed=True); wd.tick(0)
+    assert wd.state(0) == "healthy"             # streak was reset
+    wd.record(0, failed=True); wd.tick(0)
+    assert wd.is_quarantined(0)                 # 2 consecutive
+    wd.tick(0)                                  # skipped epoch
+    assert wd.state(0) == "probation"
+    wd.record(0, failed=True)
+    assert wd.is_quarantined(0)                 # probation fail: instant
+    wd.tick(0); wd.tick(0)
+    assert wd.state(0) == "probation"
+    wd.record(0, failed=False); wd.tick(0)
+    assert wd.state(0) == "healthy"
+    assert wd.stats.quarantines == 2
+    assert wd.stats.readmissions == 1
+    assert wd.stats.epochs_quarantined == 2
+
+
+def test_watchdog_timeout_counts_as_failure():
+    wd = PoolWatchdog(fail_threshold=1, timeout_s=0.5)
+    assert wd.over_timeout(0.6) and not wd.over_timeout(0.4)
+    wd.record(2, timed_out=True)
+    assert wd.is_quarantined(2)
+    assert wd.stats.timeouts == 1
+
+
+class _BombAllocator:
+    """Allocator that always raises — a maximally sick pool."""
+    name = "bomb"
+
+    def allocate(self, prob):
+        raise RuntimeError("sick pool")
+
+
+def _quarantine_fixture(watchdog):
+    events = [PoolEvent(float(t), joined=tuple(range(t // 2000 * 4,
+                                                     t // 2000 * 4 + 4)))
+              for t in range(0, 20000, 2000)]
+    # a late benign join keeps events pending until the final epoch, so
+    # the sick pool gets idle epochs to serve out probation in
+    events.append(PoolEvent(39000.0, joined=(41,)))
+    names = list(TAB2)
+    jobs = [TrainerJob(id=i, curve=tab2_curve(names[i % len(names)]),
+                       work=5e6, n_min=1, n_max=8, r_up=20.0, r_dw=5.0)
+            for i in range(8)]
+
+    def factory(k):
+        return _BombAllocator() if k == 0 else \
+            AllocationEngine(time_budget=0.0)
+
+    fed = FederatedLoop(events, jobs, pool_map=PoolMap.stride(2),
+                        allocator_factory=factory, horizon=40000.0,
+                        epoch_s=2000.0, parallel=False, watchdog=watchdog)
+    return fed, jobs
+
+
+def test_federated_quarantine_evacuates_and_readmits():
+    """Acceptance (ISSUE 10): a quarantined pool's jobs make progress on
+    healthy pools and the pool is readmitted after probation."""
+    wd = PoolWatchdog(fail_threshold=2, quarantine_epochs=2,
+                      probation_epochs=2)
+    fed, jobs = _quarantine_fixture(wd)
+    stats = fed.run()
+    assert stats.quarantines >= 1
+    assert stats.pool_failures >= 2
+    assert stats.evacuations >= 1
+    sick = stats.pools[0]
+    assert sick.failures >= 2
+    assert sick.quarantined_epochs >= 2
+    # every evacuation left the sick pool
+    moved = [m for m in stats.migrations if m.src == 0]
+    assert len(moved) >= stats.evacuations
+    assert all(m.dst == 1 for m in moved)
+    # the healthy pool carried the fleet: all jobs finished
+    assert stats.pools[1].total_samples > 0
+    assert all(j.finished for j in jobs)
+    # once idle, the sick pool served out probation and was readmitted
+    assert stats.readmissions >= 1
+    assert sick.state == "healthy"
+
+
+def test_federated_no_watchdog_still_raises():
+    """Without a watchdog a pool exception propagates (pre-PR
+    fail-loudly contract)."""
+    fed, _ = _quarantine_fixture(None)
+    with pytest.raises(RuntimeError, match="sick pool"):
+        fed.run()
+
+
+def test_federated_deadline_threads_into_default_engines():
+    events = [PoolEvent(0.0, joined=tuple(range(8)))]
+    names = list(TAB2)
+    jobs = [TrainerJob(id=i, curve=tab2_curve(names[i % len(names)]),
+                       work=1e7, n_min=1, n_max=4, r_up=20.0, r_dw=5.0)
+            for i in range(4)]
+    fed = FederatedLoop(events, jobs, n_pools=2, horizon=20000.0,
+                        epoch_s=5000.0, parallel=False,
+                        decision_deadline_s=10.0)
+    stats = fed.run()
+    rungs = sum(p.engine.rung_cache + p.engine.rung_repair
+                + p.engine.rung_greedy + p.engine.rung_milp
+                + p.engine.rung_project + p.engine.rung_equal
+                for p in stats.pools if p.engine is not None)
+    decisions = sum(p.engine.events for p in stats.pools
+                    if p.engine is not None)
+    assert decisions > 0
+    assert rungs == decisions           # every decision shows its rung
